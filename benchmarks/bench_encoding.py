@@ -1,0 +1,83 @@
+"""Paper Fig. 8 — column encoding compression ratios.
+
+Ten synthetic tables T1..T10 shaped like the paper's business tables
+(prefix-heavy strings, shared-prefix column pairs, low-NDV ints, timestamps
+with small deltas).  Compares space savings of the BASE encodings
+(plain/dict/delta-FOR) against savings with the NEW encodings added
+(multi-prefix, inter-column equality, inter-column substring/prefix) — the
+paper's claim is that the new encodings raise savings for about half the
+tables (e.g. T7: 66% → 87%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Report
+from repro.core.encoding import choose_encoding, encode_column
+from repro.core.relation import ColType, Column, ColumnSpec
+
+RNG = np.random.default_rng(42)
+N = 20_000
+
+
+def _strcol(name, values):
+    return Column.from_values(ColumnSpec(name, ColType.STR), values)
+
+
+def _intcol(name, values):
+    return Column.from_values(ColumnSpec(name, ColType.INT),
+                              [int(v) for v in values])
+
+
+def synth_tables():
+    """T1..T10, loosely matching the redundancy structure in Fig 8."""
+    t = {}
+    urls = [f"https://svc.example.com/api/v2/user/{i}/profile"
+            for i in range(N)]
+    t["T1"] = {"url": _strcol("url", urls),
+               "ref": _strcol("ref", [u + "?ref=home" for u in urls])}
+    t["T2"] = {"path": _strcol("path", [f"/warehouse/region_{i % 11}/part-"
+                                        f"{i % 4096:05d}" for i in range(N)])}
+    t["T3"] = {"k": _intcol("k", RNG.integers(0, 1 << 30, N))}
+    t["T4"] = {"v": _intcol("v", RNG.integers(0, 100, N))}
+    ts = 1_700_000_000 + np.cumsum(RNG.integers(0, 5, N))
+    t["T5"] = {"ts": _intcol("ts", ts),
+               "ts_str": _strcol("ts_str", [str(x) for x in ts])}
+    t["T6"] = {"f": _intcol("f", RNG.normal(0, 1, N).astype(np.int64))}
+    host = [f"host-{i:06d}.dc{i % 4}.prod" for i in range(N)]
+    t["T7"] = {"host": _strcol("host", host),
+               "fqdn": _strcol("fqdn", [h + ".example.com" for h in host])}
+    t["T8"] = {"id": _intcol("id", np.arange(N) * 7 + 13)}
+    t["T9"] = {"mix": _strcol("mix", [f"{RNG.integers(0,1<<40):x}"
+                                      for _ in range(N)])}
+    sess = [f"sess_{i % 1009:06d}" for i in range(N)]
+    t["T10"] = {"sess": _strcol("sess", sess),
+                "sess_dup": _strcol("sess_dup", sess)}
+    return t
+
+
+def run() -> str:
+    rep = Report("Fig8_encoding_space_savings")
+    improved = 0
+    for name, cols in synth_tables().items():
+        raw = sum(c.values.nbytes for c in cols.values())
+        base_b = 0
+        new_b = 0
+        for cname, col in cols.items():
+            peers = {k: v.values for k, v in cols.items() if k != cname}
+            base_b += choose_encoding(col.values,
+                                      new_encodings=False).nbytes()
+            new_b += choose_encoding(col.values, peers=peers).nbytes()
+        sav_base = 1 - base_b / raw
+        sav_new = 1 - new_b / raw
+        improved += sav_new > sav_base + 1e-3
+        rep.add(table=name, raw_bytes=raw,
+                savings_base=f"{sav_base:.3f}",
+                savings_with_new_encodings=f"{sav_new:.3f}")
+    rep.add(table="summary", raw_bytes="-",
+            savings_base="-",
+            savings_with_new_encodings=f"improved_on={improved}/10")
+    return rep.emit()
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Scale note: the paper runs 10^8–10^9-row tables on 128-core servers; this
+container is one CPU core, so every benchmark uses 10^5–10^6 rows and
+reports the paper's *ratios* (MV vs view, vectorized vs scalar, ...), which
+are scale-free claims.  Absolute latencies are not comparable to the paper.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Hot-run protocol from the paper §VI-A: best of `repeat`."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[str] = []
+
+    def add(self, **kv):
+        if not self.rows:
+            self.rows.append(",".join(kv.keys()))
+        self.rows.append(",".join(str(v) for v in kv.values()))
+
+    def emit(self) -> str:
+        head = f"==== {self.name} ===="
+        return "\n".join([head] + self.rows)

@@ -1,0 +1,47 @@
+"""Benchmark driver: one suite per paper table/figure + the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("Fig8_encoding", "benchmarks.bench_encoding"),
+    ("TableII_mv", "benchmarks.bench_mv"),
+    ("Fig9_TableIII_vectorized", "benchmarks.bench_vectorized"),
+    ("Fig17_update_intensive", "benchmarks.bench_update_intensive"),
+    ("serving_hybrid_kv", "benchmarks.bench_serving"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, mod_name in SUITES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            out = mod.run()
+            print(out)
+            print(f"[{name}] done in {time.time()-t0:.1f}s\n", flush=True)
+        except Exception as e:   # keep the sweep going; report at the end
+            import traceback
+            failures.append(name)
+            print(f"[{name}] FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        print("FAILED suites:", failures)
+        sys.exit(1)
+    print("all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end serving driver (the paper's kind of system → we serve).
+
+A reduced llama-family model serves batched requests through the full
+stack: continuous batching, tenant budgets (OLTP-priority admission),
+prefix-cache materialized view, and a second pass through the hybrid
+KV store decode with minor compaction.
+
+  PYTHONPATH=src python examples/serve_e2e.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import hybrid_cache as H
+from repro.serve.decode import decode_step_hybrid, init_serve_cache
+from repro.serve.scheduler import Request, Scheduler, ServeConfig
+from repro.sharding import MeshRules
+
+
+def main():
+    cfg = get_config("llama3.2-3b").reduced()
+    rules = MeshRules()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    print("== continuous batching with prefix-cache MV + tenant budgets")
+    sch = Scheduler(cfg, rules, params,
+                    ServeConfig(batch_slots=4, max_len=192, prefix_len=8,
+                                tenant_budget=2000))
+    system_prompt = list(range(1, 17))          # shared 16-token prefix
+    for i in range(10):
+        sch.submit(Request(rid=i, tenant=["gold", "silver"][i % 2],
+                           prompt=system_prompt + [40 + i], max_new=8))
+    t0 = time.perf_counter()
+    done = sch.run()
+    dt = time.perf_counter() - t0
+    lat = sorted(r.done - r.submitted for r in done)
+    print(f"   {len(done)}/10 requests in {dt:.1f}s | "
+          f"decode ticks={sch.metrics['decode_steps']} | "
+          f"prefix MV hits={sch.prefix_mv.hits} misses={sch.prefix_mv.misses}")
+    print(f"   p50 latency {lat[len(lat)//2]*1e3:.0f} ms")
+
+    print("== hybrid KV store decode (merge-on-read) with minor compaction")
+    spec = H.hybrid_spec(cfg, 4, 512, budget_frac=0.5)
+    cache = init_serve_cache(cfg, spec)
+    step = jax.jit(lambda p, t, c: decode_step_hybrid(cfg, rules, p, t, c,
+                                                      spec.budget))
+    compact = jax.jit(H.compact)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        1, cfg.vocab_size, (4, 1)), jnp.int32)
+    n_compactions = 0
+    for i in range(2 * H.BLOCK + 8):
+        logits, cache = step(params, toks, cache)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        if int(cache["tail_len"][0]) == spec.block:
+            cache = compact(cache)               # MemTable → encoded block
+            n_compactions += 1
+    print(f"   decoded {2*H.BLOCK+8} tokens | baseline blocks="
+          f"{int(cache['n_blocks'][0])} tail={int(cache['tail_len'][0])} "
+          f"compactions={n_compactions}")
+    print(f"   int8 baseline + sketches; budget={spec.budget}/"
+          f"{spec.max_blocks} blocks visited per read (zone-map prune)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Train a reduced model with the full substrate: Mercury data pipeline
+(columnar token store + stats MV), LSM checkpoints, NaN guard, straggler
+watch, and the windowed training dashboard served from an incremental MV.
+
+  PYTHONPATH=src python examples/train_analytics.py
+"""
+import shutil
+
+from repro.configs import get_config
+from repro.data import DataConfig, TokenStore, synth_corpus
+from repro.train import Trainer, TrainConfig
+
+
+def main():
+    ckpt_dir = "/tmp/repro_example_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    cfg = get_config("qwen3-4b").reduced()
+
+    print("== columnar token store + per-source stats MV")
+    store = TokenStore(cfg.vocab_size)
+    synth_corpus(store, n_docs=120, seed=7)
+    print("   source weights from the incremental MV:",
+          {k: round(v, 3) for k, v in store.source_weights().items()})
+
+    dcfg = DataConfig(seq_len=96, global_batch=4, min_quality=0.2, pack=True)
+    tr = Trainer(cfg, TrainConfig(steps=16, ckpt_dir=ckpt_dir,
+                                  baseline_every=8, delta_every=4,
+                                  window_size=4))
+    tr.init()
+    print("== training 16 steps (ckpt baseline@8, deltas@4)")
+    out = tr.fit(store.batches(dcfg))
+    print(f"   finished at step {out['final_step']}, skipped={out['skipped']}")
+    tbl = out["dashboard"]
+    for i in range(tbl.nrows):
+        r = tbl.row(i)
+        print(f"   window {int(r['window'])}: avg_loss={r['avg_loss']:.3f} "
+              f"avg_ms={r['avg_ms']:.0f}")
+
+    print("== kill/restart: quorum restore + deterministic replay")
+    tr2 = Trainer(cfg, TrainConfig(steps=16, ckpt_dir=ckpt_dir))
+    assert tr2.restore()
+    print(f"   restored at step {tr2.state['step']} "
+          f"(journal tail: {tr2.ckpt.journal_tail()['step']})")
+    out2 = tr2.fit(store.batches(dcfg), steps=20)
+    print(f"   resumed to step {out2['final_step']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.ckpt.manager import (
+    CheckpointManager,
+    CkptConfig,
+    quorum_restore,
+    reshard,
+)
+
+__all__ = ["CheckpointManager", "CkptConfig", "quorum_restore", "reshard"]

@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``ARCHS`` lists all assigned ids (plus the paper's own OLAP workload config
+in mercury_olap.py, which is not a model).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "seamless_m4t_medium",
+    "starcoder2_7b",
+    "llama3_2_3b",
+    "qwen3_4b",
+    "deepseek_67b",
+    "grok_1_314b",
+    "kimi_k2_1t",
+    "hymba_1_5b",
+    "phi3_vision_4_2b",
+    "mamba2_780m",
+]
+
+_ALIASES = {
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "starcoder2-7b": "starcoder2_7b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-4b": "qwen3_4b",
+    "deepseek-67b": "deepseek_67b",
+    "grok-1-314b": "grok_1_314b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "hymba-1.5b": "hymba_1_5b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "mamba2-780m": "mamba2_780m",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod_name = _ALIASES.get(arch_id, arch_id).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

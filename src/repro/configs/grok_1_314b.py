@@ -1,0 +1,25 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2.  [hf:xai-org/grok-1; unverified]
+
+moe_sharding='etp': with only 8 large experts (8 < every mesh axis), the
+expert hidden dim (32768) shards over the flattened (data, model) axes
+over the full mesh avoids the 2x padding waste of EP on a 16-ary axis
+(DESIGN.md §Arch-applicability).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=0,                 # all FFN capacity lives in the experts
+    vocab_size=131072,
+    n_experts=8,
+    top_k=2,
+    d_ff_expert=32768,
+    moe_sharding="etp",
+)

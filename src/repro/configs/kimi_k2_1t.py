@@ -1,0 +1,27 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) d_ff(expert)=2048
+vocab=163840, MoE 384 experts top-8 — trillion-param MoE (paper-table).
+[arXiv:2501.kimi2; unverified]
+
+moe_sharding='tp': 384 experts shard over data (384%16==0; 384%256!=0),
+expert ffn over model; params in bf16 (f32 would be 16GB/chip alone).
+(data, model) mesh axes; token dispatch is the all-to-all Data Shuffle.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=0,
+    vocab_size=163840,
+    n_experts=384,
+    top_k=8,
+    d_ff_expert=2048,
+    capacity_factor=1.0,
+    moe_sharding="tp",
+    param_dtype="bfloat16",
+)

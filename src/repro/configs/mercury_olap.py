@@ -1,0 +1,27 @@
+"""The paper's own workload: the OLAP benchmark surface of Mercury.
+
+Not a neural architecture — this config parameterizes the synthetic
+relational workloads used by benchmarks/ (scale factors, table shapes,
+write ratios) so the paper's tables/figures are reproducible from one place.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class OlapWorkloadConfig:
+    # Table II: MV latency benchmark
+    mv_rows_small: int = 100_000       # stands in for the paper's 1e8
+    mv_rows_large: int = 1_000_000     # stands in for the paper's 1e9
+    # Fig 8: encoding benchmark tables T1..T10
+    enc_rows: int = 20_000
+    # Fig 9 / Table III: vectorized engine query suite
+    vec_rows: int = 200_000
+    vec_ndv: int = 64
+    # Fig 17: update-intensive workload
+    upd_base_rows: int = 100_000
+    write_ratios: tuple = (0.0, 0.05, 0.1, 0.2)
+    n_queries: int = 18
+    block_rows: int = 1024
+
+
+CONFIG = OlapWorkloadConfig()

@@ -1,0 +1,19 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064 — phi3-mini + CLIP.  [hf:microsoft/Phi-3-vision-128k-instruct; hf]
+Vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings (n_patches per image) prepended to the token sequence.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    n_patches=576,
+)

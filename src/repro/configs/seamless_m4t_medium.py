@@ -1,0 +1,20 @@
+"""seamless-m4t-medium [audio]: enc-dec multimodal backbone.
+
+12L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=256206.
+[arXiv:2308.11596; hf]  Audio frontend is a STUB: input_specs() provides
+precomputed frame embeddings (seq_len // enc_ratio frames).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,            # decoder layers
+    n_enc_layers=12,        # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    enc_ratio=8,
+)

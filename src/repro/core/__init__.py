@@ -1,0 +1,24 @@
+"""OceanBase-Mercury core techniques, adapted to a JAX/TPU substrate.
+
+C1: hybrid LSM column store  -> lsm.py       (+ serve/kv_store.py device twin)
+C2: materialized views       -> mview.py
+C3: vectorized engine        -> vec.py / engine.py
+S1: column encodings         -> encoding.py
+S2: data-skipping index      -> skipping.py
+"""
+from .relation import (And, Column, ColumnSpec, ColType, PredOp, Predicate,
+                       Schema, Table, schema)
+from .encoding import (ConstEncoded, DeltaFOREncoded, DictEncoded,
+                       EncodedColumn, InterColumnEqualEncoded,
+                       InterColumnPrefixEncoded, MultiPrefixEncoded,
+                       PlainEncoded, choose_encoding, encode_column,
+                       general_compress_nbytes)
+from .skipping import Sketch, SkippingIndex, Verdict
+from .lsm import DmlType, LSMStore, MemTable, MinorSSTable, ScanStats, VirtualSSTable
+from .mview import (AggSpec, MAVDefinition, MJVDefinition, MLog,
+                    MaterializedAggView, MaterializedJoinView)
+from .vec import (BatchAttrs, FixedBatch, VarContinuousBatch, VarDiscreteBatch,
+                  continuous_to_discrete, continuous_to_fixed,
+                  discrete_to_continuous, discrete_to_fixed,
+                  fixed_to_continuous, pack_rows)
+from .engine import QAgg, Query, ScalarEngine, VectorEngine, hash_join, pack_sort_keys

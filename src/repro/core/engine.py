@@ -1,0 +1,326 @@
+"""Vectorized execution engine + scalar baseline (paper §V-B).
+
+Two interchangeable engines evaluate the same ``Query`` over a ``Table`` (or
+an LSM scan result):
+
+* ``ScalarEngine`` — Volcano-style row-at-a-time interpretation.  This is the
+  "vectorized engine OFF" baseline of Fig 9: one virtual dispatch per row per
+  operator.
+
+* ``VectorEngine`` — batch-at-a-time over columnar buffers with the paper's
+  optimizations:
+    - batch attribute flags (skip null handling / selection masks when the
+      batch is clean — §V-B.1);
+    - dictionary fast path for low-NDV group-by: group keys become dictionary
+      codes and aggregation is array-indexed accumulation (§III-G group-by
+      pushdown / §V-B.2 low-cardinality array optimization);
+    - sort-key sequence-preserving encoding: multiple key columns packed into
+      one uint64 so comparisons are single-word (§V-B.2 "memcmp" sort keys);
+    - join-key packing for multi-column equi-joins (§V-B.3);
+    - configurable vectorization granularity (batch size), the knob the
+      paper's cost model "intelligently modulates".
+
+The device-side analogues of these operators are the Pallas kernels
+(`dict_groupby`, `columnar_scan`); this module is the host/reference engine
+the benchmarks compare.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .relation import Column, ColumnSpec, ColType, Predicate, Schema, Table
+
+DEFAULT_BATCH = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class QAgg:
+    op: str                    # count/sum/avg/min/max
+    column: Optional[str]
+    alias: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    preds: Tuple[Predicate, ...] = ()
+    group_by: Tuple[str, ...] = ()
+    aggs: Tuple[QAgg, ...] = ()
+    sort_by: Tuple[str, ...] = ()      # applied to output columns
+    limit: Optional[int] = None
+    project: Tuple[str, ...] = ()      # non-agg passthrough (no group_by only)
+
+
+# ---------------------------------------------------------------------------
+# Scalar (row-at-a-time) engine — the OFF baseline
+# ---------------------------------------------------------------------------
+
+
+class ScalarEngine:
+    name = "scalar"
+
+    def execute(self, table: Table, q: Query) -> List[Dict[str, Any]]:
+        rows_iter = (table.row(i) for i in range(len(table)))
+        # filter: one predicate eval per row per predicate
+        def row_ok(r):
+            for p in q.preds:
+                col = Column.from_values(table.schema.spec(p.column), [r[p.column]])
+                if not p.eval(col)[0]:
+                    return False
+            return True
+        rows = [r for r in rows_iter if row_ok(r)]
+        if not q.aggs:
+            out = [{c: r[c] for c in (q.project or table.schema.names)} for r in rows]
+        else:
+            groups: Dict[Tuple, Dict[str, Any]] = {}
+            for r in rows:
+                k = tuple(r[c] for c in q.group_by)
+                st = groups.setdefault(k, {"_n": 0, "_sums": {}, "_mins": {},
+                                           "_maxs": {}, "_cnts": {}})
+                st["_n"] += 1
+                for a in q.aggs:
+                    if a.column is None:
+                        continue
+                    v = r[a.column]
+                    if v is None:
+                        continue
+                    st["_cnts"][a.column] = st["_cnts"].get(a.column, 0) + 1
+                    if isinstance(v, (int, float)):
+                        st["_sums"][a.column] = st["_sums"].get(a.column, 0) + v
+                    mn = st["_mins"].get(a.column)
+                    st["_mins"][a.column] = v if mn is None or v < mn else mn
+                    mx = st["_maxs"].get(a.column)
+                    st["_maxs"][a.column] = v if mx is None or v > mx else mx
+            out = []
+            for k, st in groups.items():
+                r = {c: v for c, v in zip(q.group_by, k)}
+                for a in q.aggs:
+                    if a.op == "count":
+                        r[a.alias] = st["_n"] if a.column is None else st["_cnts"].get(a.column, 0)
+                    elif a.op == "sum":
+                        r[a.alias] = st["_sums"].get(a.column, 0)
+                    elif a.op == "avg":
+                        c = st["_cnts"].get(a.column, 0)
+                        r[a.alias] = st["_sums"].get(a.column, 0) / c if c else None
+                    elif a.op == "min":
+                        r[a.alias] = st["_mins"].get(a.column)
+                    elif a.op == "max":
+                        r[a.alias] = st["_maxs"].get(a.column)
+                out.append(r)
+        if q.sort_by:
+            out.sort(key=lambda r: tuple(r[c] for c in q.sort_by))
+        if q.limit is not None:
+            out = out[: q.limit]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine
+# ---------------------------------------------------------------------------
+
+
+def pack_sort_keys(cols: Sequence[np.ndarray]) -> np.ndarray:
+    """Sequence-preserving encoding: pack up to 4 integer key columns into one
+    uint64 whose natural order equals the lexicographic column order."""
+    assert 1 <= len(cols) <= 4
+    bits = 64 // len(cols)
+    out = np.zeros(cols[0].shape[0], np.uint64)
+    for c in cols:
+        lo = int(c.min()) if c.size else 0
+        width = int(c.max()) - lo + 1 if c.size else 1
+        if width > (1 << bits):
+            raise ValueError("key range too wide to pack")
+        out = (out << np.uint64(bits)) | (c.astype(np.int64) - lo).astype(np.uint64)
+    return out
+
+
+class VectorEngine:
+    name = "vectorized"
+
+    def __init__(self, batch_size: int = DEFAULT_BATCH,
+                 low_ndv_threshold: int = 4096):
+        self.batch_size = batch_size
+        self.low_ndv_threshold = low_ndv_threshold
+
+    def execute(self, table: Table, q: Query) -> List[Dict[str, Any]]:
+        n = len(table)
+        needed = set(c for c in q.group_by)
+        needed |= {a.column for a in q.aggs if a.column}
+        needed |= {p.column for p in q.preds}
+        needed |= set(q.project or (table.schema.names if not q.aggs else ()))
+        cols = {c: table.col(c) for c in needed}
+
+        # ---- filter: batch-at-a-time with attribute flags ----
+        sel: Optional[np.ndarray] = None
+        for p in q.preds:
+            col = cols[p.column]
+            m = p.eval(col)
+            sel = m if sel is None else (sel & m)
+        all_active = sel is None or bool(sel.all())
+        if sel is not None and not all_active:
+            idx = np.nonzero(sel)[0]
+        else:
+            idx = None  # attrs.all_active: skip the gather entirely
+
+        def c(name: str) -> np.ndarray:
+            v = cols[name].values
+            return v if idx is None else v[idx]
+
+        if not q.aggs:
+            names = list(q.project or table.schema.names)
+            data = {nm: c(nm) for nm in names}
+            m = next(iter(data.values())).shape[0] if data else 0
+            out = [{nm: _item(data[nm][i]) for nm in names} for i in range(m)]
+        elif not q.group_by:
+            out = [self._agg_flat({a: c(a.column) for a in q.aggs if a.column},
+                                  q.aggs,
+                                  n_rows=(n if idx is None else idx.shape[0]))]
+        else:
+            out = self._groupby(q, c, n if idx is None else idx.shape[0])
+
+        if q.sort_by:
+            out = self._sort(out, q.sort_by)
+        if q.limit is not None:
+            out = out[: q.limit]
+        return out
+
+    # ---- aggregation ----
+    @staticmethod
+    def _agg_flat(data: Dict[QAgg, np.ndarray], aggs: Sequence[QAgg],
+                  n_rows: int) -> Dict[str, Any]:
+        r: Dict[str, Any] = {}
+        for a in aggs:
+            if a.column is None:
+                r[a.alias] = n_rows
+                continue
+            v = data[a]
+            if v.size == 0:
+                r[a.alias] = 0 if a.op in ("count", "sum") else None
+                continue
+            if a.op == "count":
+                r[a.alias] = int(v.shape[0])
+            elif a.op == "sum":
+                r[a.alias] = _item(v.sum())
+            elif a.op == "avg":
+                r[a.alias] = float(v.mean())
+            elif a.op == "min":
+                r[a.alias] = _item(v.min())
+            elif a.op == "max":
+                r[a.alias] = _item(v.max())
+        return r
+
+    def _groupby(self, q: Query, c: Callable[[str], np.ndarray],
+                 n_rows: int) -> List[Dict[str, Any]]:
+        keys = [c(g) for g in q.group_by]
+        # Dictionary-encode the composite key.
+        if len(keys) == 1:
+            uniq, codes = np.unique(keys[0], return_inverse=True)
+            key_rows = [(u,) for u in uniq]
+        else:
+            try:
+                packed = pack_sort_keys([k for k in keys])
+                uniq, codes = np.unique(packed, return_inverse=True)
+                first = np.zeros(uniq.shape[0], np.int64)
+                seen = np.full(uniq.shape[0], -1, np.int64)
+                order = np.arange(codes.shape[0])
+                np.minimum.at(seen, codes, order)
+                first = seen
+                key_rows = [tuple(_item(k[i]) for k in keys) for i in first]
+            except ValueError:
+                stacked = np.rec.fromarrays(keys)
+                uniq, codes = np.unique(stacked, return_inverse=True)
+                key_rows = [tuple(_item(x) for x in u) for u in uniq]
+        G = len(key_rows)
+        # Low-NDV fast path: array-indexed accumulation (no hash table).
+        out_states: Dict[str, np.ndarray] = {}
+        counts = np.bincount(codes, minlength=G)
+        rows: List[Dict[str, Any]] = []
+        agg_results: Dict[str, np.ndarray] = {}
+        for a in q.aggs:
+            if a.column is None:
+                agg_results[a.alias] = counts
+                continue
+            v = c(a.column)
+            if a.op == "count":
+                agg_results[a.alias] = counts
+            elif a.op in ("sum", "avg"):
+                s = np.bincount(codes, weights=v.astype(np.float64), minlength=G)
+                agg_results[a.alias] = s / np.maximum(counts, 1) if a.op == "avg" else s
+            elif a.op in ("min", "max"):
+                fill = v.max() if a.op == "min" else v.min()
+                acc = np.full(G, fill, v.dtype)
+                (np.minimum if a.op == "min" else np.maximum).at(acc, codes, v)
+                agg_results[a.alias] = acc
+        for g in range(G):
+            r = {col: _item(kv) for col, kv in zip(q.group_by, key_rows[g])}
+            for a in q.aggs:
+                val = agg_results[a.alias][g]
+                if a.op == "sum" and not np.issubdtype(type(val), np.floating):
+                    r[a.alias] = _item(val)
+                else:
+                    r[a.alias] = _item(val)
+            rows.append(r)
+        return rows
+
+    @staticmethod
+    def _sort(rows: List[Dict[str, Any]], sort_by: Tuple[str, ...]) -> List[Dict[str, Any]]:
+        if not rows:
+            return rows
+        cols = [np.asarray([r[c] for r in rows]) for c in sort_by]
+        try:
+            if all(np.issubdtype(c.dtype, np.integer) for c in cols):
+                packed = pack_sort_keys(cols)            # one-word compares
+                order = np.argsort(packed, kind="stable")
+            else:
+                order = np.lexsort(list(reversed(cols)))
+        except ValueError:
+            order = np.lexsort(list(reversed(cols)))
+        return [rows[int(i)] for i in order]
+
+
+def hash_join(left: Table, right: Table, lkey: str, rkey: str,
+              vectorized: bool = True) -> List[Dict[str, Any]]:
+    """Inner equi-join; vectorized path uses sort-merge over packed keys."""
+    if not vectorized:
+        ridx: Dict[Any, List[int]] = {}
+        for j in range(len(right)):
+            ridx.setdefault(right.row(j)[rkey], []).append(j)
+        out = []
+        for i in range(len(left)):
+            lr = left.row(i)
+            for j in ridx.get(lr[lkey], ()):
+                rr = {f"r_{k}": v for k, v in right.row(j).items()}
+                out.append({**lr, **rr})
+        return out
+    lk, rk = left.col(lkey).values, right.col(rkey).values
+    ls = np.argsort(lk, kind="stable")
+    rs = np.argsort(rk, kind="stable")
+    out = []
+    i = j = 0
+    lks, rks = lk[ls], rk[rs]
+    while i < lks.shape[0] and j < rks.shape[0]:
+        if lks[i] < rks[j]:
+            i += 1
+        elif lks[i] > rks[j]:
+            j += 1
+        else:
+            v = lks[i]
+            i2 = i
+            while i2 < lks.shape[0] and lks[i2] == v:
+                i2 += 1
+            j2 = j
+            while j2 < rks.shape[0] and rks[j2] == v:
+                j2 += 1
+            for a in range(i, i2):
+                la = left.row(int(ls[a]))
+                for b in range(j, j2):
+                    rb = {f"r_{k}": x for k, x in right.row(int(rs[b])).items()}
+                    out.append({**la, **rb})
+            i, j = i2, j2
+    return out
+
+
+def _item(v):
+    return v.item() if hasattr(v, "item") else v

@@ -1,0 +1,461 @@
+"""Materialized views with mlog-driven refresh (paper §IV).
+
+Implements the paper's MV machinery:
+
+* **mlog** — an ordinary-table change log recording (ts, dmltype, old_new) and
+  the old/new values of every updated base row, written *together with* every
+  base-table DML (the paper's DAS path).  INSERT → one 'N' row, DELETE → one
+  'O' row, UPDATE → an 'O' and an 'N' row, exactly as in the paper's Fig 6
+  example where the refreshed aggregate is
+  ``(select count() where old_new='N') - (select count() where old_new='O')``.
+
+* **Full refresh** — off-site: build a *hidden* container, bulk ("direct
+  load") populate it bypassing the row-at-a-time write path, then atomically
+  swap it with the live container.
+
+* **Incremental refresh** — in-place: apply algebraic deltas from the mlog to
+  the container.  count/sum/avg are fully algebraic; min/max are maintained
+  optimistically and fall back to per-group recompute when a deletion removes
+  the current extremum (the classic non-distributive case).
+
+* **Real-time query** — ``query()`` merges the container with the pending
+  (not-yet-applied) mlog tail, so reads observe freshness ≈ 0 regardless of
+  the refresh schedule — the same merge-on-read idea as the LSM store.
+
+* **TTL purge** — applied mlog entries are trimmed (paper Lesson 4).
+
+Two container layouts are supported — row and columnar — mirroring the
+paper's row-based vs column-based MVs (Table II benchmark).
+
+View classes implemented with incremental refresh: Simple MAV (aggregates
+over one table) and Simple MJV (two-table inner equi-join).  Join-MAV /
+outer-join / UNION-ALL classes refresh via the full path; Table I's scaling
+behaviour for the implemented classes is asserted in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .lsm import DmlType, LSMStore
+from .relation import Column, ColumnSpec, ColType, Predicate, Schema, Table
+
+# ---------------------------------------------------------------------------
+# mlog
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MLogEntry:
+    ts: int
+    dmltype: str     # 'I' / 'U' / 'D'
+    old_new: str     # 'O' or 'N'
+    pk: Any
+    row: Dict[str, Any]
+
+
+class MLog:
+    """Materialized view log over one base table (internally 'an ordinary
+    table': we expose it as one via :meth:`as_table`)."""
+
+    def __init__(self, base: LSMStore):
+        self.base = base
+        self.entries: List[MLogEntry] = []
+        self.purged_below: int = 0
+        base.mlog_sinks.append(self)
+
+    def record(self, ts: int, op: DmlType, pk: Any,
+               old: Optional[Dict[str, Any]], new: Optional[Dict[str, Any]]):
+        if op == DmlType.INSERT:
+            self.entries.append(MLogEntry(ts, "I", "N", pk, dict(new)))
+        elif op == DmlType.DELETE:
+            self.entries.append(MLogEntry(ts, "D", "O", pk, dict(old)))
+        else:
+            self.entries.append(MLogEntry(ts, "U", "O", pk, dict(old)))
+            self.entries.append(MLogEntry(ts, "U", "N", pk, dict(new)))
+
+    def since(self, ts_exclusive: int, ts_inclusive: Optional[int] = None) -> List[MLogEntry]:
+        hi = math.inf if ts_inclusive is None else ts_inclusive
+        return [e for e in self.entries if ts_exclusive < e.ts <= hi]
+
+    def purge_upto(self, ts: int) -> int:
+        """TTL cleanup of applied entries; returns #purged."""
+        before = len(self.entries)
+        self.entries = [e for e in self.entries if e.ts > ts]
+        self.purged_below = max(self.purged_below, ts)
+        return before - len(self.entries)
+
+    def as_table(self) -> Table:
+        sch = Schema(tuple([ColumnSpec("ts", ColType.INT),
+                            ColumnSpec("dmltype", ColType.STR),
+                            ColumnSpec("old_new", ColType.STR)]
+                           + list(self.base.schema.columns)))
+        rows = [{"ts": e.ts, "dmltype": e.dmltype, "old_new": e.old_new, **e.row}
+                for e in self.entries]
+        return Table.from_rows(sch, rows) if rows else Table.empty(sch)
+
+
+# ---------------------------------------------------------------------------
+# Aggregate spec
+# ---------------------------------------------------------------------------
+
+AGGS = ("count", "sum", "avg", "min", "max")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    op: str                 # one of AGGS, or 'count_star'
+    column: Optional[str]   # None for count(*)
+    alias: str
+
+    def __post_init__(self):
+        assert self.op in AGGS or self.op == "count_star"
+
+
+@dataclasses.dataclass(frozen=True)
+class MAVDefinition:
+    """select <group_by>, <aggs> from base [where preds] group by <group_by>"""
+
+    group_by: Tuple[str, ...]
+    aggs: Tuple[AggSpec, ...]
+    preds: Tuple[Predicate, ...] = ()
+
+
+@dataclasses.dataclass
+class _GroupState:
+    keys: Tuple[Any, ...]
+    count_star: int = 0
+    # per-agg: count (non-null), sum, min, max
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    sums: Dict[str, float] = dataclasses.field(default_factory=dict)
+    mins: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    maxs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    dirty_minmax: bool = False
+
+
+class MaterializedAggView:
+    """Simple MAV with full + incremental refresh and real-time query."""
+
+    def __init__(self, name: str, base: LSMStore, mlog: Optional[MLog],
+                 definition: MAVDefinition, container_mode: str = "row",
+                 refresh_mode: str = "incremental"):
+        assert container_mode in ("row", "column")
+        assert refresh_mode in ("incremental", "full")
+        if refresh_mode == "incremental" and mlog is None:
+            raise ValueError("incremental refresh requires an mlog on the base "
+                             "table (paper §IV-C)")
+        self.name = name
+        self.base = base
+        self.mlog = mlog
+        self.defn = definition
+        self.container_mode = container_mode
+        self.refresh_mode = refresh_mode
+        self.last_refresh_ts = 0
+        self.groups: Dict[Tuple[Any, ...], _GroupState] = {}
+        self._col_container: Optional[Dict[str, np.ndarray]] = None
+        self.stats = {"full_refreshes": 0, "incr_refreshes": 0,
+                      "rows_processed": 0, "groups_recomputed": 0,
+                      "mlog_purged": 0}
+        self.full_refresh()
+
+    # ---- helpers ----------------------------------------------------------
+
+    def _cols_needed(self) -> List[str]:
+        cols = list(self.defn.group_by)
+        cols += [a.column for a in self.defn.aggs if a.column]
+        cols += [p.column for p in self.defn.preds]
+        seen = set()
+        out = []
+        for c in cols:
+            if c not in seen:
+                seen.add(c)
+                out.append(c)
+        return out or [self.base.schema.pk]
+
+    def _row_passes(self, row: Dict[str, Any]) -> bool:
+        for p in self.defn.preds:
+            col = Column.from_values(self.base.schema.spec(p.column), [row[p.column]])
+            if not p.eval(col)[0]:
+                return False
+        return True
+
+    def _agg_columns(self) -> Dict[str, bool]:
+        """Unique aggregated columns -> whether min/max tracking is needed.
+        Per-column accumulators are updated once per *column*, not once per
+        AggSpec (two aggs over the same column share one accumulator)."""
+        cols: Dict[str, bool] = {}
+        for a in self.defn.aggs:
+            if a.column is None:
+                continue
+            cols[a.column] = cols.get(a.column, False) or a.op in ("min", "max")
+        return cols
+
+    def _apply_row(self, g: _GroupState, row: Dict[str, Any], sign: int):
+        g.count_star += sign
+        for col, track_minmax in self._agg_columns().items():
+            v = row.get(col)
+            if v is None:
+                continue
+            g.counts[col] = g.counts.get(col, 0) + sign
+            if isinstance(v, (int, float)):
+                g.sums[col] = g.sums.get(col, 0) + sign * v
+            if track_minmax:
+                cur_min = g.mins.get(col)
+                cur_max = g.maxs.get(col)
+                if sign > 0:
+                    if cur_min is None or v < cur_min:
+                        g.mins[col] = v
+                    if cur_max is None or v > cur_max:
+                        g.maxs[col] = v
+                else:  # deletion touching the extremum → group is dirty
+                    if cur_min is not None and v <= cur_min:
+                        g.dirty_minmax = True
+                    if cur_max is not None and v >= cur_max:
+                        g.dirty_minmax = True
+
+    def _group_key(self, row: Dict[str, Any]) -> Tuple[Any, ...]:
+        return tuple(row[c] for c in self.defn.group_by)
+
+    # ---- full refresh (hidden container + swap) ----------------------------
+
+    def full_refresh(self, ts: Optional[int] = None) -> int:
+        ts = self.base.current_ts if ts is None else ts
+        hidden: Dict[Tuple[Any, ...], _GroupState] = {}
+        tbl, _ = self.base.scan(self.defn.preds, ts, columns=self._cols_needed())
+        for row in tbl.rows():
+            k = self._group_key(row)
+            g = hidden.setdefault(k, _GroupState(k))
+            self._apply_row(g, row, +1)
+        self.stats["rows_processed"] += len(tbl)
+        self.stats["full_refreshes"] += 1
+        # atomic swap of hidden table with the live container:
+        self.groups = hidden
+        self._rebuild_col_container()
+        self.last_refresh_ts = ts
+        if self.mlog is not None:
+            self.stats["mlog_purged"] += self.mlog.purge_upto(ts)
+        return ts
+
+    # ---- incremental refresh (in-place, algebraic) --------------------------
+
+    def incremental_refresh(self, ts: Optional[int] = None) -> int:
+        if self.refresh_mode == "full" or self.mlog is None:
+            return self.full_refresh(ts)
+        ts = self.base.current_ts if ts is None else ts
+        entries = self.mlog.since(self.last_refresh_ts, ts)
+        self._apply_entries(self.groups, entries, count_stats=True)
+        # Non-distributive fallback: recompute dirty groups from base.
+        dirty = [k for k, g in self.groups.items() if g.dirty_minmax]
+        for k in dirty:
+            self._recompute_group(k, ts)
+        # Drop empty groups (all rows deleted).
+        self.groups = {k: g for k, g in self.groups.items() if g.count_star > 0}
+        self._rebuild_col_container()
+        self.last_refresh_ts = ts
+        self.stats["incr_refreshes"] += 1
+        self.stats["mlog_purged"] += self.mlog.purge_upto(ts)
+        return ts
+
+    def refresh(self, ts: Optional[int] = None) -> int:
+        if self.refresh_mode == "incremental":
+            return self.incremental_refresh(ts)
+        return self.full_refresh(ts)
+
+    def _apply_entries(self, groups: Dict[Tuple[Any, ...], _GroupState],
+                       entries: Sequence[MLogEntry], count_stats: bool = False):
+        for e in entries:
+            if not self._row_passes(e.row):
+                continue
+            k = self._group_key(e.row)
+            g = groups.setdefault(k, _GroupState(k))
+            self._apply_row(g, e.row, +1 if e.old_new == "N" else -1)
+            if count_stats:
+                self.stats["rows_processed"] += 1
+
+    def _recompute_group(self, key: Tuple[Any, ...], ts: int):
+        preds = list(self.defn.preds) + [
+            Predicate(c, _eq_op(), v) for c, v in zip(self.defn.group_by, key)]
+        tbl, _ = self.base.scan(preds, ts, columns=self._cols_needed())
+        g = _GroupState(key)
+        for row in tbl.rows():
+            self._apply_row(g, row, +1)
+        g.dirty_minmax = False
+        self.groups[key] = g
+        self.stats["groups_recomputed"] += 1
+        self.stats["rows_processed"] += len(tbl)
+
+    # ---- container materialization -------------------------------------------
+
+    def _out_schema(self) -> Schema:
+        cols = [ColumnSpec(c, self.base.schema.spec(c).ctype) for c in self.defn.group_by]
+        for a in self.defn.aggs:
+            ct = ColType.INT if a.op in ("count", "count_star") else ColType.FLOAT
+            cols.append(ColumnSpec(a.alias, ct))
+        return Schema(tuple(cols))
+
+    def _group_output(self, g: _GroupState) -> Dict[str, Any]:
+        out = {c: v for c, v in zip(self.defn.group_by, g.keys)}
+        for a in self.defn.aggs:
+            if a.op == "count_star" or (a.op == "count" and a.column is None):
+                out[a.alias] = g.count_star
+            elif a.op == "count":
+                out[a.alias] = g.counts.get(a.column, 0)
+            elif a.op == "sum":
+                out[a.alias] = g.sums.get(a.column, 0) if g.counts.get(a.column, 0) else None
+            elif a.op == "avg":
+                c = g.counts.get(a.column, 0)
+                out[a.alias] = (g.sums.get(a.column, 0) / c) if c else None
+            elif a.op == "min":
+                out[a.alias] = g.mins.get(a.column)
+            elif a.op == "max":
+                out[a.alias] = g.maxs.get(a.column)
+        return out
+
+    def _rebuild_col_container(self):
+        if self.container_mode != "column":
+            self._col_container = None
+            return
+        rows = [self._group_output(g) for g in self.groups.values()]
+        sch = self._out_schema()
+        cols: Dict[str, np.ndarray] = {}
+        for spec in sch.columns:
+            vals = [r.get(spec.name) for r in rows]
+            vals = [0 if v is None else v for v in vals]
+            cols[spec.name] = np.asarray(
+                vals, dtype=spec.ctype.np_dtype if spec.ctype != ColType.STR else None)
+        self._col_container = cols
+
+    # ---- query (real-time: container ⊕ pending mlog) --------------------------
+
+    def query(self, realtime: bool = True) -> Table:
+        groups = self.groups
+        if realtime and self.mlog is not None:
+            pending = self.mlog.since(self.last_refresh_ts)
+            if pending:
+                groups = {k: dataclasses.replace(
+                    g, counts=dict(g.counts), sums=dict(g.sums),
+                    mins=dict(g.mins), maxs=dict(g.maxs)) for k, g in self.groups.items()}
+                self._apply_entries(groups, pending)
+                for k, g in list(groups.items()):
+                    if g.dirty_minmax:
+                        preds = list(self.defn.preds) + [
+                            Predicate(c, _eq_op(), v)
+                            for c, v in zip(self.defn.group_by, k)]
+                        tbl, _ = self.base.scan(preds, columns=self._cols_needed())
+                        fresh = _GroupState(k)
+                        for row in tbl.rows():
+                            self._apply_row(fresh, row, +1)
+                        groups[k] = fresh
+                groups = {k: g for k, g in groups.items() if g.count_star > 0}
+        rows = [self._group_output(g) for g in groups.values()]
+        sch = self._out_schema()
+        return Table.from_rows(sch, rows) if rows else Table.empty(sch)
+
+    def query_scalar(self, alias: str) -> Any:
+        """Convenience for group-less MVs (paper's Fig 6 example)."""
+        t = self.query()
+        if len(t) == 0:
+            return 0 if alias.startswith("count") else None
+        assert len(t) == 1, "query_scalar on a grouped MV"
+        return t.row(0)[alias]
+
+
+def _eq_op():
+    from .relation import PredOp
+    return PredOp.EQ
+
+
+# ---------------------------------------------------------------------------
+# Simple MJV: two-table inner equi-join view with incremental refresh
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MJVDefinition:
+    """select L.*, R.<cols> from L join R on L.<lkey> = R.<rkey>"""
+
+    lkey: str
+    rkey: str
+    rcols: Tuple[str, ...]
+
+
+class MaterializedJoinView:
+    """Simple MJV (paper Table I): container holds the joined rows keyed by
+    (l_pk, r_pk); incremental refresh applies ΔL ⋈ R  ∪  L ⋈ ΔR."""
+
+    def __init__(self, name: str, left: LSMStore, right: LSMStore,
+                 llog: MLog, rlog: MLog, definition: MJVDefinition):
+        self.name = name
+        self.left, self.right = left, right
+        self.llog, self.rlog = llog, rlog
+        self.defn = definition
+        self.container: Dict[Tuple[Any, Any], Dict[str, Any]] = {}
+        self.last_ts = (0, 0)
+        self.stats = {"rows_processed": 0, "incr_refreshes": 0}
+        self.full_refresh()
+
+    def _join_rows(self, lrow, rrow) -> Dict[str, Any]:
+        out = dict(lrow)
+        for c in self.defn.rcols:
+            out[f"r_{c}"] = rrow[c]
+        return out
+
+    def full_refresh(self):
+        lts, rts = self.left.current_ts, self.right.current_ts
+        ltab, _ = self.left.scan(ts=lts)
+        rtab, _ = self.right.scan(ts=rts)
+        ridx: Dict[Any, List[Dict[str, Any]]] = {}
+        for rrow in rtab.rows():
+            ridx.setdefault(rrow[self.defn.rkey], []).append(rrow)
+        container = {}
+        for lrow in ltab.rows():
+            for rrow in ridx.get(lrow[self.defn.lkey], ()):
+                key = (lrow[self.left.schema.pk], rrow[self.right.schema.pk])
+                container[key] = self._join_rows(lrow, rrow)
+        self.stats["rows_processed"] += len(ltab) + len(rtab)
+        self.container = container
+        self.last_ts = (lts, rts)
+        self.llog.purge_upto(lts)
+        self.rlog.purge_upto(rts)
+
+    def incremental_refresh(self):
+        lts, rts = self.left.current_ts, self.right.current_ts
+        dl = self.llog.since(self.last_ts[0], lts)
+        dr = self.rlog.since(self.last_ts[1], rts)
+        # ΔL ⋈ R (right as of its *previous* snapshot to avoid double count,
+        # then L(new) ⋈ ΔR covers the rest)
+        rtab, _ = self.right.scan(ts=self.last_ts[1])
+        ridx: Dict[Any, List[Dict[str, Any]]] = {}
+        for rrow in rtab.rows():
+            ridx.setdefault(rrow[self.defn.rkey], []).append(rrow)
+        for e in dl:
+            self.stats["rows_processed"] += 1
+            for rrow in ridx.get(e.row[self.defn.lkey], ()):
+                key = (e.pk, rrow[self.right.schema.pk])
+                if e.old_new == "N":
+                    self.container[key] = self._join_rows(e.row, rrow)
+                else:
+                    self.container.pop(key, None)
+        ltab, _ = self.left.scan(ts=lts)
+        lidx: Dict[Any, List[Dict[str, Any]]] = {}
+        for lrow in ltab.rows():
+            lidx.setdefault(lrow[self.defn.lkey], []).append(lrow)
+        for e in dr:
+            self.stats["rows_processed"] += 1
+            for lrow in lidx.get(e.row[self.defn.rkey], ()):
+                key = (lrow[self.left.schema.pk], e.pk)
+                if e.old_new == "N":
+                    self.container[key] = self._join_rows(lrow, e.row)
+                else:
+                    self.container.pop(key, None)
+        self.last_ts = (lts, rts)
+        self.stats["incr_refreshes"] += 1
+        self.llog.purge_upto(lts)
+        self.rlog.purge_upto(rts)
+
+    def rows(self) -> List[Dict[str, Any]]:
+        return list(self.container.values())

@@ -1,0 +1,268 @@
+"""Typed relational-lite schema shared by the core OLAP modules.
+
+The paper's storage engine operates on SQL tables; this module provides the
+minimal typed column/row abstractions the rest of ``repro.core`` builds on.
+Columns are numpy-backed; string columns use fixed-width byte arrays
+(``S<n>``) so that encodings (prefix/inter-column) can operate vectorally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class ColType(enum.Enum):
+    INT = "int"        # int64
+    FLOAT = "float"    # float64
+    STR = "str"        # fixed-width bytes
+    BOOL = "bool"
+
+    @property
+    def np_dtype(self):
+        return {
+            ColType.INT: np.int64,
+            ColType.FLOAT: np.float64,
+            ColType.STR: np.bytes_,
+            ColType.BOOL: np.bool_,
+        }[self]
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSpec:
+    name: str
+    ctype: ColType
+    nullable: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Ordered column specs; first column is the primary key."""
+
+    columns: Tuple[ColumnSpec, ...]
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate column names: {names}")
+
+    @property
+    def pk(self) -> str:
+        return self.columns[0].name
+
+    @property
+    def names(self) -> List[str]:
+        return [c.name for c in self.columns]
+
+    def spec(self, name: str) -> ColumnSpec:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def index(self, name: str) -> int:
+        for i, c in enumerate(self.columns):
+            if c.name == name:
+                return i
+        raise KeyError(name)
+
+
+def schema(*cols: Tuple[str, ColType]) -> Schema:
+    return Schema(tuple(ColumnSpec(n, t) for n, t in cols))
+
+
+def _as_np(values: Sequence[Any], ctype: ColType) -> np.ndarray:
+    if ctype == ColType.STR:
+        return np.asarray([v if isinstance(v, bytes) else str(v).encode() for v in values],
+                          dtype=np.bytes_)
+    return np.asarray(values, dtype=ctype.np_dtype)
+
+
+@dataclasses.dataclass
+class Column:
+    """A materialized column: values + optional null bitmap."""
+
+    spec: ColumnSpec
+    values: np.ndarray
+    nulls: Optional[np.ndarray] = None  # bool mask, True == NULL
+
+    def __len__(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def has_nulls(self) -> bool:
+        return self.nulls is not None and bool(self.nulls.any())
+
+    def take(self, idx: np.ndarray) -> "Column":
+        return Column(self.spec, self.values[idx],
+                      None if self.nulls is None else self.nulls[idx])
+
+    def nbytes(self) -> int:
+        n = self.values.nbytes
+        if self.nulls is not None:
+            n += (len(self.nulls) + 7) // 8  # bitmap-packed size
+        return n
+
+    @staticmethod
+    def from_values(spec: ColumnSpec, values: Sequence[Any]) -> "Column":
+        nulls = np.asarray([v is None for v in values])
+        if nulls.any():
+            fill = b"" if spec.ctype == ColType.STR else 0
+            vals = [fill if v is None else v for v in values]
+            return Column(spec, _as_np(vals, spec.ctype), nulls)
+        return Column(spec, _as_np(list(values), spec.ctype), None)
+
+
+@dataclasses.dataclass
+class Table:
+    """A small in-memory relation (used for mlog, MV containers, test data)."""
+
+    schema: Schema
+    columns: Dict[str, Column]
+
+    def __post_init__(self):
+        lens = {len(c) for c in self.columns.values()}
+        if len(lens) > 1:
+            raise ValueError(f"ragged table: {lens}")
+
+    def __len__(self) -> int:
+        if not self.columns:
+            return 0
+        return len(next(iter(self.columns.values())))
+
+    @property
+    def nrows(self) -> int:
+        return len(self)
+
+    def col(self, name: str) -> Column:
+        return self.columns[name]
+
+    def row(self, i: int) -> Dict[str, Any]:
+        out = {}
+        for name, c in self.columns.items():
+            if c.nulls is not None and c.nulls[i]:
+                out[name] = None
+            else:
+                v = c.values[i]
+                out[name] = v.item() if hasattr(v, "item") else v
+        return out
+
+    def rows(self) -> Iterable[Dict[str, Any]]:
+        for i in range(len(self)):
+            yield self.row(i)
+
+    def take(self, idx: np.ndarray) -> "Table":
+        return Table(self.schema, {n: c.take(idx) for n, c in self.columns.items()})
+
+    def nbytes(self) -> int:
+        return sum(c.nbytes() for c in self.columns.values())
+
+    @staticmethod
+    def empty(sch: Schema) -> "Table":
+        cols = {c.name: Column(c, np.empty((0,), dtype=c.ctype.np_dtype if c.ctype != ColType.STR else "S1"))
+                for c in sch.columns}
+        return Table(sch, cols)
+
+    @staticmethod
+    def from_rows(sch: Schema, rows: Sequence[Mapping[str, Any]]) -> "Table":
+        cols = {}
+        for c in sch.columns:
+            cols[c.name] = Column.from_values(c, [r.get(c.name) for r in rows])
+        return Table(sch, cols)
+
+    @staticmethod
+    def from_columns(sch: Schema, data: Mapping[str, Sequence[Any]]) -> "Table":
+        cols = {c.name: Column.from_values(c, list(data[c.name])) for c in sch.columns}
+        return Table(sch, cols)
+
+    def concat(self, other: "Table") -> "Table":
+        cols = {}
+        for name, c in self.columns.items():
+            o = other.columns[name]
+            vals = np.concatenate([c.values.astype(o.values.dtype, copy=False)
+                                   if c.values.dtype != o.values.dtype and len(c) == 0
+                                   else c.values, o.values])
+            if c.nulls is None and o.nulls is None:
+                nulls = None
+            else:
+                a = c.nulls if c.nulls is not None else np.zeros(len(c), bool)
+                b = o.nulls if o.nulls is not None else np.zeros(len(o), bool)
+                nulls = np.concatenate([a, b])
+            cols[name] = Column(c.spec, vals, nulls)
+        return Table(self.schema, cols)
+
+
+# ---------------------------------------------------------------------------
+# Predicates — the subset the storage layer can push down (paper §III-G).
+# ---------------------------------------------------------------------------
+
+class PredOp(enum.Enum):
+    EQ = "=="
+    NE = "!="
+    LT = "<"
+    LE = "<="
+    GT = ">"
+    GE = ">="
+    BETWEEN = "between"
+    IN = "in"
+    IS_NULL = "is_null"
+    NOT_NULL = "not_null"
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """A single-column predicate, the pushdown unit."""
+
+    column: str
+    op: PredOp
+    value: Any = None
+    value2: Any = None  # upper bound for BETWEEN
+
+    def eval(self, col: Column) -> np.ndarray:
+        v = col.values
+        nulls = col.nulls if col.nulls is not None else np.zeros(len(col), bool)
+        if self.op == PredOp.IS_NULL:
+            return nulls
+        if self.op == PredOp.NOT_NULL:
+            return ~nulls
+        val = self._coerce(col, self.value)
+        if self.op == PredOp.EQ:
+            m = v == val
+        elif self.op == PredOp.NE:
+            m = v != val
+        elif self.op == PredOp.LT:
+            m = v < val
+        elif self.op == PredOp.LE:
+            m = v <= val
+        elif self.op == PredOp.GT:
+            m = v > val
+        elif self.op == PredOp.GE:
+            m = v >= val
+        elif self.op == PredOp.BETWEEN:
+            m = (v >= val) & (v <= self._coerce(col, self.value2))
+        elif self.op == PredOp.IN:
+            m = np.isin(v, np.asarray([self._coerce(col, x) for x in self.value]))
+        else:  # pragma: no cover
+            raise NotImplementedError(self.op)
+        return m & ~nulls
+
+    @staticmethod
+    def _coerce(col: Column, val: Any):
+        if col.spec.ctype == ColType.STR and isinstance(val, str):
+            return val.encode()
+        return val
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    """Conjunction of pushdown predicates (complex boolean filters use engine)."""
+
+    preds: Tuple[Predicate, ...]
+
+    def eval(self, table: Table) -> np.ndarray:
+        m = np.ones(len(table), bool)
+        for p in self.preds:
+            m &= p.eval(table.col(p.column))
+        return m

@@ -1,0 +1,287 @@
+"""Hierarchical data-skipping index (paper §III-F).
+
+Per-block sketches (min / max / sum / count / null-count) are aggregated
+recursively up a block-index tree, so a node at any level is the exact
+pre-aggregation of every block below it ("multi-granularity pre-aggregation").
+The index is *embedded with the data* (inside each column SSTable), not an
+external metadata service — so compaction/backup/DML carry it along, and
+block evaluation happens during execution, enabling dynamic pruning for
+predicates with runtime parameters.
+
+Uses:
+  * predicate pushdown  — ``prune``: ALL/NONE/SOME verdict per block;
+  * aggregate pushdown  — ``try_aggregate``: answer count/sum/min/max from
+    sketches for fully-covered subtrees, descending only into partial blocks;
+  * optimizer statistics — range / sortedness / NDV hints.
+
+TPU adaptation: block size defaults to an MXU/VMEM-aligned 1024 rows (vs the
+paper's 16KiB disk microblocks); the same sketches drive the zone-map-pruned
+block-sparse attention in kernels/hybrid_decode.py (per-KV-block key-norm
+bounds play the role of min/max).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .relation import PredOp, Predicate
+
+DEFAULT_BLOCK_ROWS = 1024
+DEFAULT_FANOUT = 8
+
+
+class Verdict(enum.Enum):
+    NONE = 0   # no row in the block can match — skip entirely
+    SOME = 1   # must scan the block
+    ALL = 2    # every (non-null) row matches — can answer from sketch
+
+
+@dataclasses.dataclass
+class Sketch:
+    """Small materialized aggregate over one block / subtree."""
+
+    count: int
+    null_count: int
+    vmin: Any
+    vmax: Any
+    vsum: Any  # None for non-numeric
+
+    @staticmethod
+    def of(values: np.ndarray, nulls: Optional[np.ndarray] = None) -> "Sketch":
+        n = int(values.shape[0])
+        if nulls is not None and nulls.any():
+            valid = values[~nulls]
+            nc = int(nulls.sum())
+        else:
+            valid = values
+            nc = 0
+        if valid.shape[0] == 0:
+            return Sketch(n, nc, None, None, None)
+        vsum = None
+        if valid.dtype.kind in "iuf":
+            vsum = valid.sum(dtype=np.float64 if valid.dtype.kind == "f" else np.int64)
+            vsum = vsum.item()
+        if valid.dtype.kind == "S":  # bytes: no min/max ufunc — sort instead
+            srt = np.sort(valid)
+            return Sketch(n, nc, bytes(srt[0]), bytes(srt[-1]), None)
+        return Sketch(n, nc, valid.min().item(), valid.max().item(), vsum)
+
+    @staticmethod
+    def merge(parts: Sequence["Sketch"]) -> "Sketch":
+        parts = list(parts)
+        count = sum(p.count for p in parts)
+        nc = sum(p.null_count for p in parts)
+        mins = [p.vmin for p in parts if p.vmin is not None]
+        maxs = [p.vmax for p in parts if p.vmax is not None]
+        sums = [p.vsum for p in parts if p.vsum is not None]
+        return Sketch(count, nc,
+                      min(mins) if mins else None,
+                      max(maxs) if maxs else None,
+                      sum(sums) if sums else None)
+
+    # --- predicate verdict on [vmin, vmax] interval ------------------------
+    def verdict(self, pred: Predicate) -> Verdict:
+        if pred.op == PredOp.IS_NULL:
+            if self.null_count == self.count:
+                return Verdict.ALL
+            return Verdict.NONE if self.null_count == 0 else Verdict.SOME
+        if pred.op == PredOp.NOT_NULL:
+            if self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.NONE if self.null_count == self.count else Verdict.SOME
+        if self.vmin is None:  # all-null block
+            return Verdict.NONE
+        lo, hi, v = self.vmin, self.vmax, pred.value
+        if isinstance(lo, bytes) and isinstance(v, str):
+            v = v.encode()
+        if pred.op == PredOp.EQ:
+            if v < lo or v > hi:
+                return Verdict.NONE
+            if lo == hi == v and self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.SOME
+        if pred.op == PredOp.NE:
+            if lo == hi == v:
+                return Verdict.NONE
+            if v < lo or v > hi:
+                return Verdict.ALL if self.null_count == 0 else Verdict.SOME
+            return Verdict.SOME
+        if pred.op == PredOp.LT:
+            if lo >= v:
+                return Verdict.NONE
+            if hi < v and self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.SOME
+        if pred.op == PredOp.LE:
+            if lo > v:
+                return Verdict.NONE
+            if hi <= v and self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.SOME
+        if pred.op == PredOp.GT:
+            if hi <= v:
+                return Verdict.NONE
+            if lo > v and self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.SOME
+        if pred.op == PredOp.GE:
+            if hi < v:
+                return Verdict.NONE
+            if lo >= v and self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.SOME
+        if pred.op == PredOp.BETWEEN:
+            v2 = pred.value2
+            if isinstance(lo, bytes) and isinstance(v2, str):
+                v2 = v2.encode()
+            if hi < v or lo > v2:
+                return Verdict.NONE
+            if lo >= v and hi <= v2 and self.null_count == 0:
+                return Verdict.ALL
+            return Verdict.SOME
+        if pred.op == PredOp.IN:
+            vals = [x.encode() if isinstance(lo, bytes) and isinstance(x, str) else x
+                    for x in pred.value]
+            if all(x < lo or x > hi for x in vals):
+                return Verdict.NONE
+            return Verdict.SOME
+        return Verdict.SOME  # unknown op: must scan
+
+
+@dataclasses.dataclass
+class _Node:
+    sketch: Sketch
+    children: Tuple[int, ...]       # child node ids ( () for leaves )
+    block_range: Tuple[int, int]    # [first_block, last_block)
+
+
+class SkippingIndex:
+    """Block-index tree over one column's blocks (leaf = data block)."""
+
+    def __init__(self, leaf_sketches: List[Sketch], fanout: int = DEFAULT_FANOUT):
+        self.fanout = fanout
+        self.nodes: List[_Node] = []
+        level = []
+        for b, s in enumerate(leaf_sketches):
+            self.nodes.append(_Node(s, (), (b, b + 1)))
+            level.append(len(self.nodes) - 1)
+        while len(level) > 1:
+            nxt = []
+            for i in range(0, len(level), fanout):
+                kids = tuple(level[i:i + fanout])
+                sk = Sketch.merge([self.nodes[k].sketch for k in kids])
+                rng = (self.nodes[kids[0]].block_range[0],
+                       self.nodes[kids[-1]].block_range[1])
+                self.nodes.append(_Node(sk, kids, rng))
+                nxt.append(len(self.nodes) - 1)
+            level = nxt
+        self.root = level[0] if level else -1
+        self.n_blocks = len(leaf_sketches)
+
+    @staticmethod
+    def build(values: np.ndarray, nulls: Optional[np.ndarray] = None,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              fanout: int = DEFAULT_FANOUT) -> "SkippingIndex":
+        sk = []
+        for s in range(0, max(values.shape[0], 1), block_rows):
+            sl = slice(s, s + block_rows)
+            sk.append(Sketch.of(values[sl], None if nulls is None else nulls[sl]))
+        if values.shape[0] == 0:
+            sk = [Sketch(0, 0, None, None, None)]
+        return SkippingIndex(sk, fanout)
+
+    def nbytes(self) -> int:
+        return len(self.nodes) * 40  # 5 scalars/node — 'trivial overhead'
+
+    # --- predicate pushdown -------------------------------------------------
+    def prune(self, pred: Predicate) -> np.ndarray:
+        """Per-block verdict array (values are Verdict enums as int8).
+
+        Descends the tree; a NONE/ALL verdict at an inner node labels its
+        whole block range without visiting children (this is where the
+        hierarchical index beats flat zone maps).
+        """
+        out = np.full(self.n_blocks, Verdict.SOME.value, np.int8)
+        if self.root < 0:
+            return out
+        self.blocks_visited = 0
+        stack = [self.root]
+        while stack:
+            nid = stack.pop()
+            node = self.nodes[nid]
+            self.blocks_visited += 1
+            v = node.sketch.verdict(pred)
+            if v in (Verdict.NONE, Verdict.ALL) or not node.children:
+                out[node.block_range[0]:node.block_range[1]] = v.value
+            else:
+                stack.extend(node.children)
+        return out
+
+    def prune_conj(self, preds: Sequence[Predicate]) -> np.ndarray:
+        """Conjunction: NONE if any NONE; ALL iff all ALL."""
+        out = np.full(self.n_blocks, Verdict.ALL.value, np.int8)
+        for p in preds:
+            v = self.prune(p)
+            out = np.minimum(out, v)
+        return out
+
+    # --- aggregate pushdown --------------------------------------------------
+    def try_aggregate(self, agg: str) -> Optional[Any]:
+        """Answer count/sum/min/max/avg over the whole column from the root
+        sketch (paper: 'sketches ... used for efficient aggregation')."""
+        if self.root < 0:
+            return None
+        s = self.nodes[self.root].sketch
+        if agg == "count":
+            return s.count - s.null_count
+        if agg == "count_star":
+            return s.count
+        if agg == "min":
+            return s.vmin
+        if agg == "max":
+            return s.vmax
+        if agg == "sum":
+            return s.vsum
+        if agg == "avg":
+            n = s.count - s.null_count
+            return None if not n or s.vsum is None else s.vsum / n
+        return None
+
+    def subtree_sketches_for(self, block_mask: np.ndarray) -> Tuple[Sketch, List[int]]:
+        """Greedy cover of fully-included subtrees for masked aggregation:
+        returns merged sketch over covered blocks + list of leftover block ids
+        that must be scanned."""
+        cover: List[Sketch] = []
+        leftover: List[int] = []
+        stack = [self.root]
+        while stack:
+            nid = stack.pop()
+            node = self.nodes[nid]
+            lo, hi = node.block_range
+            seg = block_mask[lo:hi]
+            if not seg.any():
+                continue
+            if seg.all():
+                cover.append(node.sketch)
+            elif node.children:
+                stack.extend(node.children)
+            else:
+                leftover.append(lo)
+        merged = Sketch.merge(cover) if cover else Sketch(0, 0, None, None, None)
+        return merged, leftover
+
+    # --- optimizer statistics -----------------------------------------------
+    def sortedness(self) -> float:
+        """Fraction of adjacent leaf pairs with non-overlapping ranges —
+        a cheap sortedness estimate the optimizer can read off the index."""
+        leaves = [n for n in self.nodes if not n.children]
+        leaves.sort(key=lambda n: n.block_range[0])
+        if len(leaves) <= 1:
+            return 1.0
+        ok = sum(1 for a, b in zip(leaves, leaves[1:])
+                 if a.sketch.vmax is None or b.sketch.vmin is None
+                 or a.sketch.vmax <= b.sketch.vmin)
+        return ok / (len(leaves) - 1)

@@ -1,0 +1,187 @@
+"""Polymorphic batch data formats of the vectorized engine (paper §V-A).
+
+Three layouts, matching the paper's three formats and trade-offs:
+
+* ``FixedBatch``       — fixed-length data format: one dense [B, S] buffer +
+  pad/null bitmap + a single length value.  No per-datum ptr/len, contiguous,
+  SIMD/MXU-friendly, batch memcpy/serialization without pointer swizzling.
+  This is the layout every Pallas kernel and the train/serve steps consume.
+
+* ``VarDiscreteBatch`` — variable-length discrete format: each row is a
+  (ptr, len) view into a shared pool; rows may be non-contiguous.  Projection
+  is *shallow* (copy ptr/len only — no deep copy of encoded data) and
+  short-circuit computations can subset a few rows without reorganizing
+  anything.  This is the scheduler's working format for continuous batching:
+  a KV/token "row" is referenced, never moved.
+
+* ``VarContinuousBatch`` — variable-length continuous format: one packed
+  buffer + an offsets array.  Best locality for batch copying and
+  materialization (prefill packing), at the cost of a deep copy (the
+  reorganization the paper warns about for short-circuit scenarios).
+
+``BatchAttrs`` carries the batch-property flags the paper exploits —
+``has_null`` (skip null handling when False) and ``all_active`` (no filtered
+rows → skip per-row selection) — plus ``sorted_by`` used by the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchAttrs:
+    has_null: bool = False
+    all_active: bool = True       # no rows filtered out
+    sorted_by: Optional[str] = None
+
+    @staticmethod
+    def conservative() -> "BatchAttrs":
+        return BatchAttrs(has_null=True, all_active=False)
+
+
+@dataclasses.dataclass
+class FixedBatch:
+    """[B, S] dense buffer; S==1 models a scalar column batch."""
+
+    data: np.ndarray                  # [B, S]
+    valid: Optional[np.ndarray]       # [B, S] bool; None ⇒ everything valid
+    attrs: BatchAttrs = BatchAttrs()
+
+    @property
+    def nrows(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def item_len(self) -> int:
+        return int(self.data.shape[1])
+
+    def lengths(self) -> np.ndarray:
+        if self.valid is None:
+            return np.full(self.nrows, self.item_len, np.int32)
+        return self.valid.sum(axis=1).astype(np.int32)
+
+    def nbytes(self) -> int:
+        n = self.data.nbytes
+        if self.valid is not None:
+            n += (self.valid.size + 7) // 8
+        return n
+
+
+@dataclasses.dataclass
+class VarDiscreteBatch:
+    pool: np.ndarray                  # [pool_len] shared token/data pool
+    ptr: np.ndarray                   # [B] int32 start offset per row
+    len: np.ndarray                   # [B] int32 length per row
+    attrs: BatchAttrs = BatchAttrs()
+
+    @property
+    def nrows(self) -> int:
+        return int(self.ptr.shape[0])
+
+    def row(self, i: int) -> np.ndarray:
+        return self.pool[self.ptr[i]:self.ptr[i] + self.len[i]]
+
+    def project(self) -> "VarDiscreteBatch":
+        """Shallow projection: copies only ptr/len (paper: 'does not need to
+        deeply copy the data during projection')."""
+        return VarDiscreteBatch(self.pool, self.ptr.copy(), self.len.copy(),
+                                self.attrs)
+
+    def select(self, keep: np.ndarray) -> "VarDiscreteBatch":
+        """Short-circuit subset: no data reorganization."""
+        return VarDiscreteBatch(self.pool, self.ptr[keep], self.len[keep],
+                                dataclasses.replace(self.attrs, all_active=False))
+
+    def nbytes(self) -> int:
+        # the pool is shared; per-batch cost is the descriptors
+        return self.ptr.nbytes + self.len.nbytes
+
+
+@dataclasses.dataclass
+class VarContinuousBatch:
+    data: np.ndarray                  # [sum(len)] packed
+    offsets: np.ndarray               # [B+1] int32
+    attrs: BatchAttrs = BatchAttrs()
+
+    @property
+    def nrows(self) -> int:
+        return int(self.offsets.shape[0]) - 1
+
+    def row(self, i: int) -> np.ndarray:
+        return self.data[self.offsets[i]:self.offsets[i + 1]]
+
+    def lengths(self) -> np.ndarray:
+        return np.diff(self.offsets).astype(np.int32)
+
+    def nbytes(self) -> int:
+        return self.data.nbytes + self.offsets.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Conversions
+# ---------------------------------------------------------------------------
+
+
+def discrete_to_continuous(b: VarDiscreteBatch) -> VarContinuousBatch:
+    """Materialize: deep-copy rows into one packed buffer."""
+    lens = b.len.astype(np.int64)
+    offsets = np.zeros(b.nrows + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    total = int(offsets[-1])
+    out = np.empty((total,), b.pool.dtype)
+    # vectorized gather: build index list [ptr_i .. ptr_i+len_i) for all rows
+    if total:
+        reps = np.repeat(b.ptr.astype(np.int64), lens)
+        within = np.arange(total) - np.repeat(offsets[:-1], lens)
+        out[:] = b.pool[reps + within]
+    return VarContinuousBatch(out, offsets.astype(np.int32), b.attrs)
+
+
+def continuous_to_fixed(b: VarContinuousBatch, pad_to: Optional[int] = None,
+                        pad_value=0) -> FixedBatch:
+    lens = b.lengths()
+    S = int(pad_to if pad_to is not None else (lens.max() if b.nrows else 0))
+    data = np.full((b.nrows, S), pad_value, b.data.dtype)
+    valid = np.zeros((b.nrows, S), bool)
+    for i in range(b.nrows):
+        L = min(int(lens[i]), S)
+        data[i, :L] = b.row(i)[:L]
+        valid[i, :L] = True
+    has_pad = bool((~valid).any())
+    return FixedBatch(data, valid if has_pad else None,
+                      dataclasses.replace(b.attrs, has_null=has_pad))
+
+
+def discrete_to_fixed(b: VarDiscreteBatch, pad_to: Optional[int] = None,
+                      pad_value=0) -> FixedBatch:
+    return continuous_to_fixed(discrete_to_continuous(b), pad_to, pad_value)
+
+
+def fixed_to_continuous(b: FixedBatch) -> VarContinuousBatch:
+    if b.valid is None:
+        offsets = np.arange(b.nrows + 1, dtype=np.int32) * b.item_len
+        return VarContinuousBatch(b.data.reshape(-1).copy(), offsets, b.attrs)
+    lens = b.lengths().astype(np.int64)
+    offsets = np.zeros(b.nrows + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    data = b.data[b.valid]
+    return VarContinuousBatch(data, offsets.astype(np.int32),
+                              dataclasses.replace(b.attrs, has_null=False))
+
+
+def continuous_to_discrete(b: VarContinuousBatch) -> VarDiscreteBatch:
+    """Zero-copy view: the packed buffer doubles as the pool."""
+    return VarDiscreteBatch(b.data, b.offsets[:-1].astype(np.int32),
+                            b.lengths(), b.attrs)
+
+
+def pack_rows(rows, dtype=np.int32) -> VarContinuousBatch:
+    lens = np.asarray([len(r) for r in rows], np.int64)
+    offsets = np.zeros(len(rows) + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    data = (np.concatenate([np.asarray(r, dtype) for r in rows])
+            if len(rows) and offsets[-1] else np.empty((0,), dtype))
+    return VarContinuousBatch(data, offsets.astype(np.int32), BatchAttrs())

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DataConfig,
+    TokenStore,
+    synth_corpus,
+)
+
+__all__ = ["DataConfig", "TokenStore", "synth_corpus"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the Mercury-JAX hot paths.
+
+flash_attention — block-tiled causal GQA attention (prefill/train)
+hybrid_decode   — C1 merge-on-read decode: int8 columnar baseline + row tail,
+                  LSE merge, zone-map (S2) block skipping via scalar prefetch
+ssd_scan        — Mamba2 SSD chunked scan
+columnar_scan   — S1+S2 filter/aggregate pushdown over encoded blocks
+dict_groupby    — low-NDV group-by pushdown (one-hot MXU formulation)
+
+Every kernel has a pure-jnp oracle in ref.py; ops.py holds the jitted
+dispatching wrappers.
+"""
+from . import ops, ref
+from .ops import (columnar_scan, dict_groupby, flash_attention, hybrid_decode,
+                  quantize_kv_blocks, ssd_scan)

@@ -1,0 +1,129 @@
+"""Block-tiled causal GQA flash attention (Pallas TPU).
+
+Prefill/train attention kernel.  Grid = (batch, q_head, q_blocks, kv_blocks)
+with the kv dimension innermost and sequential; running (m, l, acc) softmax
+state lives in VMEM scratch and the output block is emitted on the last kv
+iteration — the canonical TPU flash-attention schedule.
+
+BlockSpec tiling (v5e):  q/o blocks [block_q, D], kv blocks [block_k, D] with
+D padded to a multiple of 128 by the wrapper (MXU lane alignment) and
+block_q = block_k = 128/256 so the [block_q, block_k] score tile and the
+f32 scratch fit comfortably in VMEM:
+  VMEM ≈ (bq·D + 2·bk·D) · 2B (bf16 in) + (bq·bk + bq·D + 2·bq) · 4B (f32)
+  = 128·128·(2+2·2) + (128·128+128·128+256)·4 ≈ 0.23 MB  « 128 MB.
+GQA is expressed through the index_map: the kv-head block index is
+q_head // group, so no KV replication ever materializes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # avoid -inf arithmetic inside the kernel
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal frontier: q row r attends to kv col c iff c <= r + (seq_k - seq_q)
+    diag_offset = seq_k - seq_q
+    block_needed = (not causal) or True  # computed dynamically below
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                              # [bq, bk]
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        valid = cols < seq_k
+        if causal:
+            valid &= cols <= rows + diag_offset
+        valid &= rows < seq_q
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]                           # [bq, 1]
+        m_cur = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+        alpha = jnp.exp(m_prev - m_cur)               # NEG_INF-NEG_INF == 0 ✓
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(valid, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    if causal:
+        # skip kv blocks entirely above the causal frontier
+        first_row_of_qblk = qi * block_q
+        pl.when(ki * block_k <= first_row_of_qblk + (block_q - 1) + diag_offset)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Sk, D].  Returns [B, Hq, Sq, D]."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = (D ** -0.5) if sm_scale is None else sm_scale
+
+    # pad seq dims to block multiples, D to a lane multiple of 128
+    Dp = ((D + 127) // 128) * 128
+    Sqp = ((Sq + block_q - 1) // block_q) * block_q
+    Skp = ((Sk + block_k - 1) // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, Dp - D)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, Dp - D)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, Dp - D)))
+
+    grid = (B, Hq, Sqp // block_q, Skp // block_k)
+    kernel = functools.partial(_flash_kernel, sm_scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               seq_q=Sq, seq_k=Sk)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, Dp), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dp), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dp),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dp),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dp),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :D]

@@ -1,0 +1,199 @@
+"""Merge-on-read decode attention over the hybrid KV store (Pallas TPU).
+
+This is the paper's C1 (columnar baseline + row incremental, merged on read)
+and S2 (data-skipping index) mapped onto TPU decode attention:
+
+* the **baseline** is compacted, block-columnar KV encoded to int8 with one
+  scale per (head, block) — the 'column encoding' whose dequantization is
+  fused into the score matmul, i.e. *query without decompression* at HBM-byte
+  granularity (int8 bytes cross HBM→VMEM, never a decoded copy);
+
+* the **incremental tail** is the row-format MemTable: the most recent ≤ T
+  tokens in native dtype, appended row-wise by the serving runtime without
+  re-encoding;
+
+* the kernel computes online-softmax over the tail FIRST (freshest data, like
+  reading the MemTable first), then streams surviving baseline blocks, and the
+  final output is the **LSE merge** of both sources — the TPU analogue of the
+  LSM merge-on-read iterator;
+
+* the **zone-map skip** is realized *before* the kernel: per-block sketches
+  (max key L2 norm — the skipping-index 'max' sketch adapted to attention)
+  give score upper bounds; blocks whose bound is below the best bound plus
+  ``log(skip_eps)`` are dropped from a per-(batch, head) visit list that is
+  fed to the kernel through scalar prefetch.  The index_map gathers only
+  surviving blocks, so on TPU the pruned blocks are never DMA'd — the
+  skipping index prunes I/O exactly as in the paper.  The visit list is
+  padded by repeating its last entry; Pallas elides copies for repeated block
+  indices, so padding costs no bandwidth.  ``skip_eps=0`` disables skipping
+  and the kernel is bit-exact to the oracle.
+
+VMEM budget per grid step (Bk=128, D=128, G≤16, T≤512):
+  int8 k+v block 2·128·128 = 32 KiB; tail 2·512·128·4 = 512 KiB;
+  scratch (G·D + 2·G) f32 ≈ 8 KiB  — well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(bids_ref, cnt_ref, tlen_ref,           # scalar prefetch
+                   q_ref, kq_ref, vq_ref, ksc_ref, vsc_ref,
+                   tk_ref, tv_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   sm_scale: float, block_k: int, tail_t: int, groups: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    nvisit = pl.num_programs(2)
+
+    def _online_update(s, v, valid):
+        # s: [G, L] scores, v: [L, D] values, valid: [G, L] bool
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(valid, jnp.exp(s - m_cur), 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(j == 0)
+    def _tail_first():
+        # init state, then merge the row-format MemTable tail (freshest data)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [G, D]
+        tk = tk_ref[0, 0].astype(jnp.float32)               # [T, D]
+        tv = tv_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, tk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (groups, tail_t), 1)
+        valid = cols < tlen_ref[b]
+        _online_update(s, tv, valid)
+
+    # baseline block j of the pruned visit list (skipped blocks never appear)
+    @pl.when(j < cnt_ref[b, h])
+    def _baseline_block():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # [G, D]
+        # fused dequantization: int8 codes * per-block scale
+        kblk = kq_ref[0, 0, 0].astype(jnp.float32) * ksc_ref[0, 0, 0]
+        vblk = vq_ref[0, 0, 0].astype(jnp.float32) * vsc_ref[0, 0, 0]
+        s = jax.lax.dot_general(q, kblk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        valid = jnp.ones((groups, block_k), bool)
+        _online_update(s, vblk, valid)
+
+    @pl.when(j == nvisit - 1)
+    def _emit():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def build_visit_list(q: jax.Array, sketches: jax.Array, base_valid: jax.Array,
+                     *, sm_scale: float, skip_eps: float
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Zone-map pruning: per-(b, h) ordered visit list + survivor count.
+
+    q: [B, Hkv, G, D]; sketches: [B, Hkv, Nb] (max key L2 norm per block);
+    base_valid: [B, Nb] bool.  A block survives when its score upper bound
+    ``sm_scale·max_g||q_g||·sketch`` is within log(skip_eps) of the best
+    bound.  skip_eps == 0 keeps every valid block (exact mode).
+    """
+    B, Hkv, G, D = q.shape
+    Nb = sketches.shape[-1]
+    qnorm = jnp.linalg.norm(q.astype(jnp.float32), axis=-1).max(axis=-1)  # [B, Hkv]
+    bound = sm_scale * qnorm[..., None] * sketches                        # [B,Hkv,Nb]
+    bound = jnp.where(base_valid[:, None, :], bound, -jnp.inf)
+    if skip_eps > 0.0:
+        thresh = bound.max(axis=-1, keepdims=True) + jnp.log(skip_eps)
+        keep = bound >= thresh
+    else:
+        keep = base_valid[:, None, :] & jnp.ones_like(bound, bool)
+    # stable order: surviving block ids first, then pad by repeating the last
+    order = jnp.argsort(~keep, axis=-1, stable=True)                      # [B,Hkv,Nb]
+    cnt = keep.sum(axis=-1).astype(jnp.int32)                             # [B,Hkv]
+    idx = jnp.minimum(jnp.arange(Nb)[None, None, :], jnp.maximum(cnt[..., None] - 1, 0))
+    bids = jnp.take_along_axis(order, idx, axis=-1).astype(jnp.int32)
+    return bids, cnt
+
+
+def hybrid_decode(q: jax.Array,
+                  base_k_q: jax.Array, base_v_q: jax.Array,
+                  base_k_scale: jax.Array, base_v_scale: jax.Array,
+                  base_valid: jax.Array,
+                  tail_k: jax.Array, tail_v: jax.Array, tail_len: jax.Array,
+                  sketches: Optional[jax.Array] = None,
+                  *, sm_scale: Optional[float] = None, skip_eps: float = 0.0,
+                  interpret: bool = False) -> jax.Array:
+    """Merge-on-read decode.  Shapes as in ref.ref_hybrid_decode.
+
+    q [B, Hq, D]; base_k_q/v_q int8 [B, Hkv, Nb, Bk, D];
+    base_*_scale [B, Hkv, Nb, 1, 1]; base_valid [B, Nb] bool;
+    tail_k/v [B, Hkv, T, D]; tail_len [B]; sketches [B, Hkv, Nb].
+    """
+    B, Hq, D = q.shape
+    _, Hkv, Nb, Bk, _ = base_k_q.shape
+    T = tail_k.shape[2]
+    G = Hq // Hkv
+    scale = (D ** -0.5) if sm_scale is None else sm_scale
+    qg = q.reshape(B, Hkv, G, D)
+    if sketches is None:
+        skip_eps = 0.0
+        sketches = jnp.ones((B, Hkv, Nb), jnp.float32)
+    bids, cnt = build_visit_list(qg, sketches, base_valid,
+                                 sm_scale=scale, skip_eps=skip_eps)
+    ksc = base_k_scale.reshape(B, Hkv, Nb)
+    vsc = base_v_scale.reshape(B, Hkv, Nb)
+
+    Dp = ((D + 127) // 128) * 128
+    Gp = max(8, G)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, Dp - D)))
+    kqp = jnp.pad(base_k_q, ((0, 0), (0, 0), (0, 0), (0, 0), (0, Dp - D)))
+    vqp = jnp.pad(base_v_q, ((0, 0), (0, 0), (0, 0), (0, 0), (0, Dp - D)))
+    tkp = jnp.pad(tail_k, ((0, 0), (0, 0), (0, 0), (0, Dp - D)))
+    tvp = jnp.pad(tail_v, ((0, 0), (0, 0), (0, 0), (0, Dp - D)))
+
+    kernel = functools.partial(_decode_kernel, sm_scale=scale, block_k=Bk,
+                               tail_t=T, groups=Gp)
+    grid = (B, Hkv, Nb)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, Gp, Dp), lambda b, h, j, bids, cnt, tl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, 1, Bk, Dp),
+                             lambda b, h, j, bids, cnt, tl: (b, h, bids[b, h, j], 0, 0)),
+                pl.BlockSpec((1, 1, 1, Bk, Dp),
+                             lambda b, h, j, bids, cnt, tl: (b, h, bids[b, h, j], 0, 0)),
+                pl.BlockSpec((1, 1, 1),
+                             lambda b, h, j, bids, cnt, tl: (b, h, bids[b, h, j])),
+                pl.BlockSpec((1, 1, 1),
+                             lambda b, h, j, bids, cnt, tl: (b, h, bids[b, h, j])),
+                pl.BlockSpec((1, 1, T, Dp), lambda b, h, j, bids, cnt, tl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, T, Dp), lambda b, h, j, bids, cnt, tl: (b, h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Gp, Dp),
+                                   lambda b, h, j, bids, cnt, tl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Gp, 1), jnp.float32),
+                pltpu.VMEM((Gp, 1), jnp.float32),
+                pltpu.VMEM((Gp, Dp), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, Dp), jnp.float32),
+        interpret=interpret,
+    )(bids, cnt, tail_len.astype(jnp.int32), qg, kqp, vqp, ksc, vsc, tkp, tvp)
+    return out[:, :, :G, :D].reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy:
+  * on TPU          → compiled Pallas kernels;
+  * on CPU (tests)  → the same kernels in interpret mode (bit-identical
+                      semantics, Python-emulated grid);
+  * inside the distributed dry-run (`REPRO_FORCE_REF=1` or use_kernels=False
+    at the model layer) → the pure-jnp references from ref.py, so HLO cost
+    analysis reflects the math, not the interpreter.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .hybrid_decode import hybrid_decode as _hybrid_decode
+from .ssd_scan import ssd_scan as _ssd
+from .columnar_scan import columnar_scan as _columnar_scan
+from .dict_groupby import dict_groupby as _dict_groupby
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    if _force_ref():
+        return ref.ref_flash(q, k, v, causal=causal, sm_scale=sm_scale,
+                             block_k=block_k)
+    return _flash(q, k, v, causal=causal, sm_scale=sm_scale, block_q=block_q,
+                  block_k=block_k, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "skip_eps"))
+def hybrid_decode(q, base_k_q, base_v_q, base_k_scale, base_v_scale,
+                  base_valid, tail_k, tail_v, tail_len, sketches=None, *,
+                  sm_scale: Optional[float] = None, skip_eps: float = 0.0):
+    if _force_ref():
+        return ref.ref_hybrid_decode(q, base_k_q, base_v_q, base_k_scale,
+                                     base_v_scale, base_valid, tail_k, tail_v,
+                                     tail_len, sm_scale=sm_scale)
+    return _hybrid_decode(q, base_k_q, base_v_q, base_k_scale, base_v_scale,
+                          base_valid, tail_k, tail_v, tail_len, sketches,
+                          sm_scale=sm_scale, skip_eps=skip_eps,
+                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, D_skip=None, *, chunk: int = 64):
+    if _force_ref():
+        return ref.ref_ssd_chunked(x, dt, A, B, C, chunk=chunk, D_skip=D_skip)
+    return _ssd(x, dt, A, B, C, chunk=chunk, D_skip=D_skip,
+                interpret=not _on_tpu())
+
+
+@jax.jit
+def columnar_scan(deltas, bases, counts, lo, hi, values=None, block_mask=None):
+    if _force_ref():
+        return ref.ref_columnar_scan(deltas, bases, counts, lo, hi, values)
+    return _columnar_scan(deltas, bases, counts, lo, hi, values, block_mask,
+                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("ndv", "block_n"))
+def dict_groupby(codes, values, *, ndv: int, block_n: int = 1024):
+    if _force_ref():
+        return ref.ref_dict_groupby(codes, values, ndv)
+    return _dict_groupby(codes, values, ndv, block_n=block_n,
+                         interpret=not _on_tpu())
+
+
+def quantize_kv_blocks(k: jax.Array, block: int):
+    """Encode KV [B, H, S, D] into int8 columnar blocks + per-block scales
+    (the column-encoding step of major compaction in the KV store).
+    Returns (codes int8 [B,H,Nb,Bk,D], scales f32 [B,H,Nb,1,1])."""
+    B, H, S, D = k.shape
+    assert S % block == 0
+    nb = S // block
+    kb = k.reshape(B, H, nb, block, D).astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(kb).max(axis=(3, 4), keepdims=True), 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(kb / scale), -127, 127).astype(jnp.int8)
+    return codes, scale

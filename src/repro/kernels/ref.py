@@ -1,0 +1,366 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` implements exactly the semantics the corresponding kernel is
+required to match (assert_allclose in tests/test_kernels.py).  They are also
+the implementations the distributed dry-run lowers (kernels run in interpret
+mode on CPU and would distort HLO cost analysis), so they are written to be
+memory-sane and GSPMD-friendly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention (prefill / train): causal GQA flash attention
+# ---------------------------------------------------------------------------
+
+
+def ref_mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+            sm_scale: Optional[float] = None) -> jax.Array:
+    """Naive full-materialization attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] with Hq % Hkv == 0.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = (D ** -0.5) if sm_scale is None else sm_scale
+    qg = q.reshape(B, Hkv, G, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def ref_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              sm_scale: Optional[float] = None, block_k: int = 512) -> jax.Array:
+    """Online-softmax attention with FlashAttention-2 gradient semantics.
+
+    Forward is the blocked online softmax (O(Sq·block_k) temporaries);
+    backward recomputes per-block probabilities from the saved (q, k, v, o,
+    lse) instead of stashing them — without this, layer-level remat keeps
+    one [B, H, Sq, block_k] f32 probability tensor per k-block alive
+    through the backward pass (measured 25+ GB/device on llama3.2-3b
+    train_4k; see EXPERIMENTS.md §Perf iteration 0).
+    """
+    scale = (q.shape[-1] ** -0.5) if sm_scale is None else sm_scale
+    return _flash_fwd_vjp(q, k, v, causal, scale, block_k)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_fwd_vjp(q, k, v, causal: bool, scale: float, block_k: int):
+    return _ref_flash_inner(q, k, v, causal=causal, sm_scale=scale,
+                            block_k=block_k)
+
+
+def _flash_fwd_rule(q, k, v, causal, scale, block_k):
+    o, lse = _ref_flash_inner(q, k, v, causal=causal, sm_scale=scale,
+                              block_k=block_k, return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, scale, block_k, res, do):
+    q, k, v, o, lse = res
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nk = (Sk + block_k - 1) // block_k
+    pad = nk * block_k - Sk
+    kb = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                      .reshape(B, Hkv, nk, block_k, D), 2, 0)
+    vb = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                      .reshape(B, Hkv, nk, block_k, D), 2, 0)
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32) * scale
+    og = o.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    dog = do.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    delta = (og * dog).sum(-1)                              # [B,Hkv,G,Sq]
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    lse_safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
+
+    def step(dq_acc, blk):
+        kc, vc, ki = blk
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+        kpos = ki * block_k + jnp.arange(block_k)
+        valid = kpos[None, :] < Sk
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        p = jnp.where(valid[None, None, None],
+                      jnp.exp(s - lse_safe[..., None]), 0.0)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vf)
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kf)
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0,
+                                  (kb, vb, jnp.arange(nk)))
+    dq = (dq * scale).reshape(B, Hq, Sq, D).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, Hkv, nk * block_k, D)[
+        :, :, :Sk].astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, Hkv, nk * block_k, D)[
+        :, :, :Sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_fwd_vjp.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def _ref_flash_inner(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, sm_scale: Optional[float] = None,
+                     block_k: int = 512, return_lse: bool = False):
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    Sk = k.shape[2]
+    scale = (D ** -0.5) if sm_scale is None else sm_scale
+    nk = (Sk + block_k - 1) // block_k
+    pad = nk * block_k - Sk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kp.reshape(B, Hkv, nk, block_k, D)
+    vb = vp.reshape(B, Hkv, nk, block_k, D)
+    qg = (q.reshape(B, Hkv, G, Sq, D) * scale).astype(jnp.float32)
+    qpos = jnp.arange(Sq) + (Sk - Sq)  # align causal frontier to the end of k
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, ki = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc.astype(jnp.float32))
+        kpos = ki * block_k + jnp.arange(block_k)
+        valid = kpos < Sk
+        if causal:
+            valid = valid[None, :] & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        else:
+            s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_new))
+        p = jnp.exp(s - jnp.where(jnp.isneginf(m_new), 0.0, m_new)[..., None])
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 2, 0)
+    vb_t = jnp.moveaxis(vb, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb_t, vb_t, jnp.arange(nk)))
+    o = (acc / jnp.maximum(l, 1e-30)[..., None]
+         ).reshape(B, Hq, Sq, D).astype(q.dtype)
+    if return_lse:
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))            # [B,Hkv,G,Sq]
+        return o, lse
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Hybrid merge-on-read decode (paper C1 on TPU)
+# ---------------------------------------------------------------------------
+
+
+def dequant_kv(blocks_q: jax.Array, scales: jax.Array) -> jax.Array:
+    """int8 blocks [.., Nb, Bk, D] * per-block scale [.., Nb, 1, 1] -> f32."""
+    return blocks_q.astype(jnp.float32) * scales
+
+
+def ref_hybrid_decode(q: jax.Array,
+                      base_k_q: jax.Array, base_v_q: jax.Array,
+                      base_k_scale: jax.Array, base_v_scale: jax.Array,
+                      base_valid: jax.Array,
+                      tail_k: jax.Array, tail_v: jax.Array,
+                      tail_len: jax.Array,
+                      *, sm_scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the merge-on-read decode kernel.
+
+    q:            [B, Hq, D]             one new token per sequence
+    base_k_q/v_q: [B, Hkv, Nb, Bk, D]    int8 columnar baseline blocks
+    base_*_scale: [B, Hkv, Nb, 1, 1]     f32 per-block quantization scales
+    base_valid:   [B, Nb]                bool — block materialized?
+    tail_k/v:     [B, Hkv, T, D]         f32/bf16 row-format incremental tail
+    tail_len:     [B]                    #valid tail rows
+    Semantics: full softmax attention over (dequantized baseline ++ tail).
+    """
+    B, Hq, D = q.shape
+    Hkv = base_k_q.shape[1]
+    Nb, Bk = base_k_q.shape[2], base_k_q.shape[3]
+    T = tail_k.shape[2]
+    scale = (D ** -0.5) if sm_scale is None else sm_scale
+    kb = dequant_kv(base_k_q, base_k_scale).reshape(B, Hkv, Nb * Bk, D)
+    vb = dequant_kv(base_v_q, base_v_scale).reshape(B, Hkv, Nb * Bk, D)
+    k = jnp.concatenate([kb, tail_k.astype(jnp.float32)], axis=2)
+    v = jnp.concatenate([vb, tail_v.astype(jnp.float32)], axis=2)
+    base_mask = jnp.repeat(base_valid, Bk, axis=1)               # [B, Nb*Bk]
+    tail_mask = jnp.arange(T)[None, :] < tail_len[:, None]       # [B, T]
+    mask = jnp.concatenate([base_mask, tail_mask], axis=1)       # [B, S]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)  # all-masked rows -> 0
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def ref_block_sketch(k: jax.Array, block: int) -> jax.Array:
+    """Zone-map sketch for KV blocks: max L2 norm of keys per block.
+
+    k: [B, Hkv, S, D] -> [B, Hkv, S//block] — the skipping-index analogue for
+    attention (score upper bound = ||q||·max_block||k||).
+    """
+    B, H, S, D = k.shape
+    nb = S // block
+    norms = jnp.linalg.norm(k.reshape(B, H, nb, block, D).astype(jnp.float32),
+                            axis=-1)
+    return norms.max(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) scan
+# ---------------------------------------------------------------------------
+
+
+def ref_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, *, D_skip: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential SSD recurrence (the exact oracle).
+
+    x:  [b, s, h, dh]   inputs per head
+    dt: [b, s, h]       softplus-activated step sizes (>0)
+    A:  [h]             negative state decay rate per head
+    B:  [b, s, n]       input projection (shared across heads, Mamba2 style)
+    C:  [b, s, n]       output projection
+    D_skip: [h] optional skip connection
+    Recurrence per head: h_t = exp(A*dt_t) * h_{t-1} + dt_t * B_t ⊗ x_t
+                         y_t = C_t^T h_t  (+ D*x_t)
+    """
+    b, s, h, dh = x.shape
+    n = B.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(A[None, :, None, None] * dtt[:, :, None, None])
+        upd = (dtt[:, :, None, None] * Bt[:, None, :, None]
+               * xt[:, :, None, :])                        # [b, h, n, dh]
+        hstate = decay * hstate + upd
+        yt = jnp.einsum("bn,bhnd->bhd", Ct, hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((b, h, n, dh), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                              # [b, s, h, dh]
+    if D_skip is not None:
+        y = y + D_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ref_ssd_chunked(x, dt, A, B, C, *, chunk: int = 64,
+                    D_skip: Optional[jax.Array] = None) -> jax.Array:
+    """Chunked SSD (the algorithm the Pallas kernel implements).
+
+    Within a chunk, the output is a masked 'attention-like' matmul
+    (C_i^T B_j · decay(i,j) · dt_j); across chunks a [h, n, dh] state is
+    carried.  Mathematically identical to ref_ssd.
+    """
+    b, s, h, dh = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, dh).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    def chunk_step(hstate, inp):
+        xk, dtk, Bk, Ck = inp                                # [b, chunk, ...]
+        # log-decay within the chunk: seg[t] = sum_{u<=t} A*dt_u
+        logd = A[None, None, :] * dtk                        # [b, c, h]
+        seg = jnp.cumsum(logd, axis=1)
+        # inter: contribution of the carried state to each position
+        inter = jnp.einsum("bcn,bhnd->bchd", Ck, hstate) * \
+            jnp.exp(seg)[..., None]                          # decay from start
+        # intra: attention-like within-chunk term
+        rel = seg[:, :, None, :] - seg[:, None, :, :]        # [b, c, c, h]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gate = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Ck, Bk)          # [b, c, c]
+        w = scores[..., None] * gate * dtk[:, None, :, :]    # [b, i, j, h]
+        intra = jnp.einsum("bijh,bjhd->bihd", w, xk)
+        y = inter + intra
+        # carry: state at end of chunk
+        tail_decay = jnp.exp(seg[:, -1:, :] - seg)           # [b, c, h]
+        upd = jnp.einsum("bcn,bchd->bhnd", Bk,
+                         xk * (dtk * tail_decay)[..., None])
+        hstate = hstate * jnp.exp(logd.sum(axis=1))[:, :, None, None] + upd
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, n, dh), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    _, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
+    if D_skip is not None:
+        y = y + D_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Columnar scan: filter + aggregate pushdown over FOR-encoded blocks
+# ---------------------------------------------------------------------------
+
+
+def ref_columnar_scan(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
+                      lo: jax.Array, hi: jax.Array,
+                      values: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Filter rows with lo <= decoded <= hi; aggregate a value column.
+
+    deltas: [Nb, Bk] int32 FOR offsets;  bases: [Nb] int64/int32 block bases;
+    counts: [Nb] valid rows per block;   lo/hi: scalars (decoded domain);
+    values: [Nb, Bk] f32 (aggregation target; defaults to decoded key).
+    Returns (count, sum, min, max) over selected rows.
+    """
+    Nb, Bk = deltas.shape
+    decoded = deltas.astype(jnp.int32) + bases[:, None].astype(jnp.int32)
+    valid = jnp.arange(Bk)[None, :] < counts[:, None]
+    sel = valid & (decoded >= lo) & (decoded <= hi)
+    vals = decoded.astype(jnp.float32) if values is None else values.astype(jnp.float32)
+    cnt = sel.sum()
+    s = jnp.where(sel, vals, 0.0).sum()
+    mn = jnp.where(sel, vals, jnp.inf).min()
+    mx = jnp.where(sel, vals, -jnp.inf).max()
+    return cnt.astype(jnp.int32), s, mn, mx
+
+
+# ---------------------------------------------------------------------------
+# Dictionary group-by pushdown (low-NDV aggregation / MoE dispatch counting)
+# ---------------------------------------------------------------------------
+
+
+def ref_dict_groupby(codes: jax.Array, values: jax.Array, ndv: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-code (sum, count) with codes in [0, ndv).  values: [N] f32."""
+    one_hot = jax.nn.one_hot(codes, ndv, dtype=jnp.float32)   # [N, G]
+    sums = one_hot.T @ values.astype(jnp.float32)
+    counts = one_hot.sum(axis=0).astype(jnp.int32)
+    return sums, counts

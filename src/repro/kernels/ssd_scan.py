@@ -1,0 +1,105 @@
+"""Mamba2 SSD (state-space duality) chunked scan (Pallas TPU).
+
+The SSD insight: within a chunk the recurrence is a small attention-like
+matmul (MXU work); across chunks only an [n, dh] state is carried.  Grid =
+(batch, heads, chunks) with chunks innermost/sequential; the carried state
+lives in VMEM scratch so the HBM traffic is exactly one pass over x/dt/B/C
+plus one y write — the memory-roofline optimum for the scan.
+
+VMEM per step (chunk=128, n=128, dh=64): x 32 KiB + B/C 2·64 KiB + state
+32 KiB + [c,c] gate 64 KiB ≈ 0.25 MiB.  chunk and dh are multiples of the
+128-lane MXU tile where the model allows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int, nstate: int, dhead: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # [c, dh]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # [c, 1]
+    A = a_ref[0, 0]                              # scalar
+    B = b_ref[0, 0].astype(jnp.float32)          # [c, n]
+    C = c_ref[0, 0].astype(jnp.float32)          # [c, n]
+
+    logd = A * dt[:, 0]                          # [c]
+    seg = jnp.cumsum(logd)                       # [c] inclusive
+    h = h_scr[...]                               # [n, dh]
+
+    # inter-chunk: carried state contribution
+    inter = jax.lax.dot_general(C, h, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    inter = inter * jnp.exp(seg)[:, None]        # [c, dh]
+
+    # intra-chunk: masked attention-like term
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [c, c]
+    rel = seg[:, None] - seg[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.where(rows >= cols, jnp.exp(rel), 0.0)
+    w = scores * gate * dt[:, 0][None, :]        # [c(i), c(j)]
+    intra = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0, 0] = (inter + intra).astype(y_ref.dtype)
+
+    # carry state to the next chunk
+    tail = jnp.exp(seg[-1] - seg)                # [c]
+    xw = x * (dt[:, 0] * tail)[:, None]          # [c, dh]
+    upd = jax.lax.dot_general(B, xw, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # [n, dh]
+    h_scr[...] = h * jnp.exp(seg[-1]) + upd
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 64,
+             D_skip: Optional[jax.Array] = None,
+             interpret: bool = False) -> jax.Array:
+    """x: [b, s, h, dh]; dt: [b, s, h]; A: [h]; B/C: [b, s, n] -> [b, s, h, dh].
+
+    Matches ref.ref_ssd exactly (same chunked math as ref.ref_ssd_chunked).
+    """
+    b, s, h, dh = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    xt = jnp.moveaxis(x, 2, 1).reshape(b, h, nc, chunk, dh)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(b, h, nc, chunk, 1)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    a2 = A.reshape(h, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nstate=n, dhead=dh)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, nc, chunk, dh), x.dtype),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, dh), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, dh),
+                               lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((n, dh), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a2, Bc, Cc)
+    y = jnp.moveaxis(out.reshape(b, h, s, dh), 1, 2)     # [b, s, h, dh]
+    if D_skip is not None:
+        y = y + (D_skip[None, None, :, None] * x.astype(jnp.float32)).astype(y.dtype)
+    return y.astype(x.dtype)

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the production meshes need 512
+placeholder devices.  Never set that flag globally (smoke tests and
+benchmarks must see 1 device).
+
+Per cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. builds the cell's step function + ShapeDtypeStruct args + shardings
+     (launch/steps.py — no allocation anywhere),
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(*args).compile()``,
+  4. records ``memory_analysis()`` (bytes/device), ``cost_analysis()``
+     (FLOPs + bytes accessed, per partition), and the collective-op bytes
+     parsed from the optimized HLO text,
+  5. writes one JSON to benchmarks/dryrun_results/ for the roofline
+     analysis (benchmarks/roofline.py) and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --sweep [--mesh both] [--force]
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],\s]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-shape bytes per collective op (the spec'd operand-size
+    proxy) + a ring-model wire-bytes estimate using the replica group size.
+
+    For all-gather the operand is result/g; for reduce-scatter the operand
+    is result*g; all-reduce/all-to-all/permute move ~result bytes.  Ring
+    wire bytes: ag/rs (g-1)/g · full, ar 2(g-1)/g · full, a2a (g-1)/g,
+    permute 1×.
+    """
+    per_op = {}
+    operand_total = 0
+    wire_total = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        rb = _shape_bytes(shape_str)
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start():line_end if line_end > 0 else None]
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else 1
+        if op == "all-gather":
+            operand = rb // max(g, 1)
+            wire = rb * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            operand = rb * g
+            wire = operand * (g - 1) / max(g, 1)
+        elif op == "all-reduce":
+            operand = rb
+            wire = 2 * rb * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            operand = rb
+            wire = rb * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            operand = rb
+            wire = rb
+        d = per_op.setdefault(op, {"count": 0, "operand_bytes": 0,
+                                   "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += operand
+        d["wire_bytes"] += wire
+        operand_total += operand
+        wire_total += wire
+    return {"per_op": per_op, "operand_bytes": operand_total,
+            "wire_bytes": wire_total}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh, make_rules
+    from repro.launch.steps import cell_artifacts
+    from repro.models.config import get_shape
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = make_rules(cfg, shape, mesh)
+
+    t0 = time.time()
+    step, args, in_sh, out_sh = cell_artifacts(cfg, shape, rules)
+    # donation mirrors the launchers: train donates (params, opt_state),
+    # decode donates the KV cache — XLA aliases them in place.
+    if shape.kind == "train":
+        donate = (0, 1)
+    elif shape.kind == "decode":
+        donate = (2,)
+    else:
+        donate = ()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = parse_collectives(hlo_text)
+    n_dev = mesh.devices.size
+    # trip-count-aware accounting (cost_analysis counts loop bodies once;
+    # every step here is scan-heavy) — see benchmarks/hlo_cost.py
+    try:
+        from benchmarks import hlo_cost
+        tc = hlo_cost.analyze(hlo_text)
+    except Exception as e:  # keep the cell green even if parsing regresses
+        tc = {"error": repr(e), "flops": 0.0, "bytes": 0.0,
+              "collectives": coll}
+
+    mem = {
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+    }
+    mem["total_per_device"] = (mem["argument_bytes"] + mem["output_bytes"]
+                               + mem["temp_bytes"] - mem["alias_bytes"])
+    print(f"[{arch} × {shape_name} × {mesh_kind}] devices={n_dev}")
+    print("memory_analysis:", ma)
+    print("cost_analysis(raw, loop bodies once): flops/device=%.4g "
+          "bytes/device=%.4g" % (ca.get("flops", 0.0),
+                                 ca.get("bytes accessed", 0.0)))
+    print("trip-aware: flops/device=%.4g bytes/device=%.4g coll_wire=%.4g"
+          % (tc.get("flops", 0.0), tc.get("bytes", 0.0),
+             tc.get("collectives", {}).get("wire_bytes", 0.0)))
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "raw_cost_analysis": {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            "collectives_body_once": coll,
+        },
+        "flops_per_device": float(tc.get("flops", 0.0)),
+        "bytes_per_device": float(tc.get("bytes", 0.0)),
+        "collectives": tc.get("collectives", {}),
+        "n_params": get_config(arch).n_params(),
+        "n_active_params": get_config(arch).n_active_params(),
+    }
+
+
+ALL_ARCHS = [
+    "seamless-m4t-medium", "starcoder2-7b", "llama3.2-3b", "qwen3-4b",
+    "deepseek-67b", "grok-1-314b", "kimi-k2-1t-a32b", "hymba-1.5b",
+    "phi-3-vision-4.2b", "mamba2-780m",
+]
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> Path:
+    safe = arch.replace(".", "_").replace("-", "_")
+    return RESULTS_DIR / f"{safe}__{shape}__{mesh}.json"
+
+
+def sweep(mesh_kinds, force: bool = False, timeout_s: int = 3600):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    cells = [(a, s, m) for a in ALL_ARCHS for s in ALL_SHAPES
+             for m in mesh_kinds]
+    for arch, shape, mesh in cells:
+        out = cell_path(arch, shape, mesh)
+        if out.exists() and not force:
+            prev = json.loads(out.read_text())
+            if prev.get("status") == "ok":
+                print(f"skip (cached): {out.name}")
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh]
+        print(f"=== {arch} × {shape} × {mesh}")
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=timeout_s,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            ok = r.returncode == 0 and out.exists()
+            if not ok:
+                out.write_text(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh,
+                    "status": "error",
+                    "stderr": r.stderr[-4000:], "stdout": r.stdout[-2000:],
+                }, indent=1))
+                print(f"  FAIL ({time.time()-t0:.0f}s): "
+                      f"{r.stderr.strip().splitlines()[-1][:200] if r.stderr.strip() else 'no stderr'}")
+            else:
+                print(f"  ok ({time.time()-t0:.0f}s)")
+        except subprocess.TimeoutExpired:
+            out.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "status": "timeout"}, indent=1))
+            print("  TIMEOUT")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.sweep:
+        kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        sweep(kinds, force=args.force)
+        return
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = cell_path(args.arch, args.shape, args.mesh)
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "traceback": traceback.format_exc()[-6000:]}
+        out.write_text(json.dumps(rec, indent=1))
+        print(rec["traceback"], file=sys.stderr)
+        sys.exit(1)
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

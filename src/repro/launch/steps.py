@@ -1,0 +1,333 @@
+"""Step builders + ShapeDtypeStruct input specs for every dry-run cell.
+
+One cell = (architecture × input shape × mesh).  The dry-run lowers:
+
+  train_4k     → ``train_step``  (fwd + chunked CE loss + bwd + optimizer)
+  prefill_32k  → ``prefill_step`` (fwd filling a dense KV cache)
+  decode_32k   → ``serve_step``  (one token, dense per-layer KV cache)
+  long_500k    → ``serve_step_hybrid`` (one token over the hybrid KV store —
+                 the paper's merge-on-read + zone-map prune; SSM archs use
+                 their native O(1)-state decode instead)
+
+Everything here is allocation-free: parameters, optimizer state, caches and
+batches are ``jax.eval_shape``/``ShapeDtypeStruct`` stand-ins; only the
+launchers (train.py / serve.py) materialize real arrays.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.frontends import frontend_specs, audio_frame_len
+from repro.optim import (OptConfig, apply_updates, clip_by_global_norm,
+                         make_optimizer, opt_state_specs)
+from repro.serve import hybrid_cache as H
+from repro.serve.decode import decode_step_hybrid, init_serve_cache
+from repro.sharding import MeshRules, cache_specs, param_specs
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    """AdamW by default; factored Adafactor for the ≥300B MoEs, where full
+    f32 moments cannot fit the pod (see optim/optimizers.py docstring)."""
+    if cfg.n_params() > 2e11:
+        return OptConfig(name="adafactor", b1=0.0, lr=1e-4)
+    return OptConfig(name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Shape/spec helpers (allocation-free)
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: T.cast_params(cfg, T.init_params(cfg, jax.random.PRNGKey(0))))
+
+
+def serve_param_shapes(cfg: ModelConfig):
+    """Serving weights are bf16 (served from bf16 checkpoints): f32 weights
+    would not fit TP-only sharding for the ≥67B archs (§Perf iteration D1)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cfg.np_dtype),
+        param_shapes(cfg))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch stand-ins."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs.update(frontend_specs(cfg, B, S, cfg.np_dtype))
+    return specs
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules
+                 ) -> Dict[str, P]:
+    out = {}
+    for name, sds in batch_specs(cfg, shape).items():
+        bspec = rules.P("batch") if shape.global_batch > 1 else P(None)
+        axes = (bspec[0] if len(bspec) else None,) + (None,) * (len(sds.shape) - 1)
+        out[name] = P(*axes)
+    return out
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, rules: MeshRules,
+                    opt_cfg: Optional[OptConfig] = None,
+                    n_micro: int = 4, pspecs=None):
+    """Microbatched train step (gradient accumulation).
+
+    The per-layer remat carry is the activation-memory floor: for
+    llama3.2-3b train_4k it is 28 × [16, 4096, 3072] bf16 ≈ 11.3 GB/device
+    at full batch.  Scanning ``n_micro`` microbatches divides every
+    activation term by n_micro while the accumulated f32 gradient tree
+    stays parameter-sharded (ZeRO) — the standard large-scale recipe
+    (EXPERIMENTS.md §Perf iteration 0).
+    """
+    opt_cfg = opt_cfg or opt_config_for(cfg)
+    _, update_fn = make_optimizer(opt_cfg)
+    # §Perf iteration S2: the microbatch scan reduces the full sharded
+    # gradient tree across the data axis EVERY microbatch (f32 — measured
+    # 616 GB/step wire on starcoder2-7b).  Accumulating in bf16 halves the
+    # wire bytes and the accumulator HBM; the optimizer still sees the
+    # f32 mean.  Off by default; flipped per-cell via REPRO_ACC_DTYPE.
+    acc_dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        os.environ.get("REPRO_ACC_DTYPE", "float32")]
+
+    # §Perf iteration S3: cast master weights to the compute dtype ONCE per
+    # step, outside the microbatch scan, so the per-layer FSDP all-gathers
+    # move bf16 (not f32) — the convert would otherwise sit *after* the
+    # gather in XLA's schedule.  Gradients flow to the f32 masters through
+    # the cast (bf16 grads are converted back at the cast site).
+    def loss_fn(p, mb):
+        pc = jax.tree.map(lambda w: w.astype(cfg.np_dtype)
+                          if w.dtype == jnp.float32 else w, p)
+        extra = {k: mb[k] for k in ("frames", "patches") if k in mb}
+        hidden, aux = T.forward(cfg, rules, pc, mb["tokens"], extra=extra)
+        loss = T.lm_loss(cfg, rules, pc, hidden, mb["labels"])
+        return loss, aux
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        nm = n_micro if (n_micro > 1 and B % n_micro == 0) else 1
+
+        def constrain_like_params(tree):
+            if pspecs is None or rules.mesh is None:
+                return tree
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(rules.mesh, s)),
+                tree, pspecs)
+
+        if nm == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            dropped = aux.get("moe_dropped", jnp.zeros(()))
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(nm, B // nm, *x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                gacc, lacc, dacc = carry
+                (l, aux), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), gacc, g)
+                gacc = constrain_like_params(gacc)
+                return (gacc, lacc + l,
+                        dacc + aux.get("moe_dropped", jnp.zeros(()))), None
+
+            g0 = constrain_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params))
+            (grads, ltot, dtot), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            loss, dropped = ltot / nm, dtot / nm
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        updates, opt_state = update_fn(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "moe_dropped": dropped}
+        return params, opt_state, metrics
+
+    return train_step, opt_cfg
+
+
+def train_artifacts(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules,
+                    opt_cfg: Optional[OptConfig] = None,
+                    n_micro: Optional[int] = None):
+    """(step_fn, arg ShapeDtypeStructs, in_shardings, donate) for train."""
+    pshapes = param_shapes(cfg)
+    pspecs = param_specs(pshapes, cfg, rules)
+    if n_micro is None:
+        n_micro = int(os.environ.get("REPRO_N_MICRO", "4"))
+    step, opt_cfg = make_train_step(cfg, rules, opt_cfg, n_micro=n_micro,
+                                    pspecs=pspecs)
+    init_fn, _ = make_optimizer(opt_cfg)
+    oshapes = jax.eval_shape(init_fn, pshapes)
+    ospecs = opt_state_specs(oshapes, pspecs)
+    bspecs = batch_pspecs(cfg, shape, rules)
+    args = (pshapes, oshapes, batch_specs(cfg, shape))
+    shardings = (jax.tree.map(lambda s: NamedSharding(rules.mesh, s), pspecs),
+                 jax.tree.map(lambda s: NamedSharding(rules.mesh, s), ospecs),
+                 jax.tree.map(lambda s: NamedSharding(rules.mesh, s), bspecs))
+    out_shardings = (shardings[0], shardings[1], None)
+    return step, args, shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# prefill_step
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, rules: MeshRules, max_len: int):
+    def prefill_step(params, batch):
+        extra = {k: batch[k] for k in ("frames", "patches") if k in batch}
+        last_hidden, cache = T.prefill(cfg, rules, params, batch["tokens"],
+                                       max_len, extra=extra)
+        logits = T.logits_fn(cfg, rules, params, last_hidden[:, None])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def prefill_artifacts(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    # cache sized to the prompt (+ prepended patch embeddings for VLMs)
+    max_len = shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+    step = make_prefill_step(cfg, rules, max_len)
+    pshapes = param_shapes(cfg)
+    pspecs = param_specs(pshapes, cfg, rules)
+    bspecs = batch_pspecs(cfg, shape, rules)
+    args = (pshapes, batch_specs(cfg, shape))
+    shardings = (jax.tree.map(lambda s: NamedSharding(rules.mesh, s), pspecs),
+                 jax.tree.map(lambda s: NamedSharding(rules.mesh, s), bspecs))
+    return step, args, shardings, None
+
+
+# ---------------------------------------------------------------------------
+# serve_step (dense cache; decode_32k)
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(cfg: ModelConfig, rules: MeshRules):
+    def serve_step(params, token, cache):
+        logits, cache = T.decode_step(cfg, rules, params, token, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def serve_artifacts(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = audio_frame_len(cfg, S) if cfg.family == "encdec" else 0
+    cache_shapes = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, B, S, enc_len=enc_len))
+    cspecs = cache_specs(cache_shapes, rules)
+    step = make_serve_step(cfg, rules)
+    pshapes = serve_param_shapes(cfg)
+    pspecs = param_specs(pshapes, cfg, rules)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = rules.P("batch") if B > 1 else P(None)
+    tspec = P(tok_spec[0] if len(tok_spec) else None, None)
+    args = (pshapes, tok, cache_shapes)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), tree)
+    shardings = (ns(pspecs), NamedSharding(rules.mesh, tspec), ns(cspecs))
+    out_shardings = (NamedSharding(rules.mesh, tspec), ns(cspecs))
+    return step, args, shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# serve_step_hybrid (hybrid KV store; long_500k)
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step_hybrid(cfg: ModelConfig, rules: MeshRules, budget: int):
+    def serve_step(params, token, cache):
+        if cfg.family == "ssm":      # attention-free: native O(1) decode
+            logits, cache = T.decode_step(cfg, rules, params, token, cache)
+        else:
+            logits, cache = decode_step_hybrid(cfg, rules, params, token,
+                                               cache, budget)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def serve_hybrid_artifacts(cfg: ModelConfig, shape: ShapeConfig,
+                           rules: MeshRules, budget_frac: float = 0.25):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        cache_shapes = jax.eval_shape(
+            functools.partial(T.init_cache, cfg, B, S))
+        cspecs = cache_specs(cache_shapes, rules)
+        budget = 0
+    else:
+        spec = H.hybrid_spec(cfg, B, S, budget_frac)
+        # shard block count must divide the kv axis size
+        nsh = rules.axis_size("kv_seq")
+        nb = ((spec.max_blocks + nsh - 1) // nsh) * nsh
+        spec = H.HybridSpec(cfg.n_layers, B, cfg.n_kv_heads, cfg.hd, nb,
+                            spec.budget, spec.block)
+        enc_len = audio_frame_len(cfg, S) if cfg.family == "encdec" else 0
+        cache_shapes = jax.eval_shape(
+            functools.partial(init_serve_cache, cfg, spec, enc_len=enc_len))
+        cspecs = dict(H.cache_pspecs(spec, rules))
+        kv = tuple(a for a in rules.kv_seq
+                   if rules.mesh is not None and a in rules.mesh.axis_names)
+        kv = kv if kv else None
+        if "ssm_conv" in cache_shapes:
+            cspecs["ssm_conv"] = P()
+            cspecs["ssm_ssd"] = P()
+        if "ck" in cache_shapes:
+            cspecs["ck"] = P(None, None, kv, None, None)
+            cspecs["cv"] = P(None, None, kv, None, None)
+        budget = spec.budget
+    step = make_serve_step_hybrid(cfg, rules, budget)
+    pshapes = serve_param_shapes(cfg)
+    pspecs = param_specs(pshapes, cfg, rules)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    args = (pshapes, tok, cache_shapes)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), tree)
+    shardings = (ns(pspecs), NamedSharding(rules.mesh, P(None, None)),
+                 ns(cspecs))
+    out_shardings = (NamedSharding(rules.mesh, P(None, None)), ns(cspecs))
+    return step, args, shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# Cell dispatcher
+# ---------------------------------------------------------------------------
+
+
+def cell_artifacts(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    """(step_fn, args, in_shardings, out_shardings) for one dry-run cell."""
+    if shape.kind == "train":
+        return train_artifacts(cfg, shape, rules)
+    if shape.kind == "prefill":
+        return prefill_artifacts(cfg, shape, rules)
+    if shape.seq_len > 100_000:
+        return serve_hybrid_artifacts(cfg, shape, rules)
+    return serve_artifacts(cfg, shape, rules)

@@ -1,0 +1,59 @@
+"""Training launcher.
+
+Reduced-scale CPU run (end-to-end, real arrays):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 20 --batch 4 --seq 128
+
+Production pods use the same Trainer + dry-run-validated shardings; this
+entry point materializes parameters with ``reshard`` onto whatever mesh the
+runtime actually has (elastic: a checkpoint written on any mesh restores
+onto any other).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="small same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, TokenStore, synth_corpus
+    from repro.train import Trainer, TrainConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    store = TokenStore(cfg.vocab_size)
+    synth_corpus(store, n_docs=max(64, args.batch * 16), seed=0,
+                 max_len=args.seq)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch, pack=False)
+
+    tr = Trainer(cfg, TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                                  n_micro=args.n_micro))
+    resumed = args.resume and tr.restore()
+    if not resumed:
+        tr.init()
+    print(f"[train] arch={args.arch} reduced={args.reduced} "
+          f"resumed={resumed} start_step={tr.state['step']}")
+    out = tr.fit(store.batches(dcfg))
+    print(f"[train] done at step {out['final_step']}, "
+          f"skipped={out['skipped']}, events={len(out['events'])}")
+    tbl = out["dashboard"]
+    for i in range(tbl.nrows):
+        print("  window:", tbl.row(i))
+
+
+if __name__ == "__main__":
+    main()

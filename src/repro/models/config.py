@@ -1,0 +1,200 @@
+"""Model configuration system.
+
+One ``ModelConfig`` describes any architecture in the assigned pool (dense /
+MoE / SSM / hybrid / enc-dec / VLM / audio).  ``reduced()`` produces the
+small same-family config used by CPU smoke tests; the full configs are only
+ever lowered via ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str
+
+    n_layers: int
+    d_model: int
+    n_heads: int               # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None     # defaults to d_model // n_heads
+
+    # options
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    moe_sharding: str = "ep"   # 'ep' (experts sharded) | 'tp' (expert ffn sharded)
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+
+    # enc-dec
+    n_enc_layers: int = 0
+    enc_ratio: int = 8         # encoder length = seq_len // enc_ratio (frontend stub)
+
+    # vlm
+    n_patches: int = 0         # prepended patch embeddings (frontend stub)
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"   # master weights; bf16 for the 1T MoE
+                                   # (f32 params alone would be 16 GB/chip)
+
+    # execution knobs
+    use_kernels: bool = False          # Pallas kernels (interpret on CPU) vs jnp refs
+    remat: str = "block"               # 'none' | 'block' — activation ckpt per layer
+    attn_block_q: int = 256
+    attn_block_k: int = 512
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 so the embedding/lm_head shard
+        evenly over the model axis (50280 and 256206 in the pool don't).
+        Padded logit slots are masked to -1e30 in logits_fn."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can run long_500k natively (constant-state scan)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch decodes (enc-dec included)
+
+    @property
+    def ssm_heads(self) -> int:
+        if self.ssm_state == 0:
+            return 0
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    @property
+    def np_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def param_np_dtype(self):
+        return {"bfloat16": jnp.bfloat16,
+                "float32": jnp.float32}[self.param_dtype]
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, f, V, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        hd, Hq, Hkv = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * hd * (Hq + 2 * Hkv) + Hq * hd * d
+        mlp = 3 * d * f if f else 0
+        moe = 0
+        if self.n_experts:
+            moe = self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+            mlp = 0 if self.d_ff == 0 else mlp
+        ssm = 0
+        if self.ssm_state:
+            din = self.ssm_expand * self.d_model
+            ssm = (d * (2 * din + 2 * self.ssm_state + self.ssm_heads)
+                   + din * d + 2 * self.ssm_heads)
+        per_layer = mlp + moe
+        if self.family == "ssm":
+            per_layer += ssm
+        elif self.family == "hybrid":
+            per_layer += attn + ssm
+        else:
+            per_layer += attn
+        total = L * per_layer + V * d * (1 if self.tie_embeddings else 2)
+        total += self.n_enc_layers * (attn + 3 * d * f)  # encoder stack
+        if self.n_enc_layers:  # decoder cross-attention
+            total += L * (d * hd * (Hq + 2 * Hkv) + Hq * hd * d)
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        dense_like = self.n_params() - self.n_layers * (
+            self.n_experts * 3 * self.d_model * self.d_ff_expert)
+        active_moe = self.n_layers * self.top_k * 3 * self.d_model * self.d_ff_expert
+        return int(dense_like + active_moe)
+
+    def reduced(self) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=2,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=64,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=16 if self.n_heads else None,
+            d_ff=128 if self.d_ff else 0,
+            d_ff_expert=64 if self.n_experts else 0,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            vocab_size=256,
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=16,
+            n_patches=min(self.n_patches, 16),
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # 'train' | 'prefill' | 'decode'
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,43 @@
+"""Modality frontend STUBS (audio frames / vision patches).
+
+Per the assignment, ``[audio]``/``[vlm]`` entries specify the transformer
+BACKBONE only; the modality frontend is a stub whose job is to define the
+*shape contract*: ``input_specs()`` provides precomputed frame/patch
+embeddings.  ``sample_*`` generate random embeddings for CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def audio_frame_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Encoder frames for an [audio] enc-dec backbone (stub: seq//ratio)."""
+    return max(seq_len // cfg.enc_ratio, 8)
+
+
+def frontend_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the frontend outputs of one batch."""
+    if cfg.family == "encdec":
+        se = audio_frame_len(cfg, seq_len)
+        return {"frames": jax.ShapeDtypeStruct((batch, se, cfg.d_model), dtype)}
+    if cfg.family == "vlm" and cfg.n_patches:
+        return {"patches": jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), dtype)}
+    return {}
+
+
+def sample_frontend(cfg: ModelConfig, key: jax.Array, batch: int, seq_len: int,
+                    dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Random frontend embeddings matching frontend_specs (smoke tests)."""
+    specs = frontend_specs(cfg, batch, seq_len, dtype)
+    out = {}
+    for i, (name, sds) in enumerate(sorted(specs.items())):
+        out[name] = jax.random.normal(jax.random.fold_in(key, i), sds.shape,
+                                      dtype) * 0.02
+    return out

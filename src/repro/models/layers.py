@@ -1,0 +1,218 @@
+"""Core transformer layers (functional, pytree params, GSPMD-annotated).
+
+All weights are plain jnp arrays in nested dicts; per-layer weights are
+stacked along a leading L dim and consumed via lax.scan (small HLO, fast
+compiles, natural remat boundary).  Sharding is applied through
+``MeshRules.constrain`` at the few activation points that matter; weight
+layouts come from ``repro.sharding.param_specs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.config import ModelConfig
+from repro.sharding import MeshRules
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = (shape[-2] ** -0.5) if scale is None and len(shape) >= 2 else (scale or 1.0)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Statistics in f32, scaling multiply in the input dtype.
+
+    §Perf iteration S4: multiplying the full f32 upcast (xf · rsqrt · w)
+    makes every backward cotangent through the norm f32 — measured as
+    ~500 GB/step of f32 activation all-reduces on starcoder2-7b train_4k.
+    Computing rsqrt(var) in f32 and scaling in bf16 keeps the residual
+    stream's collectives in bf16 (the standard mixed-precision norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * (1.0 + w).astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [S] or [B, S].
+
+    Angles/sin/cos in f32, rotation multiply in x.dtype: rotating the f32
+    upcast turns every q/k cotangent f32, which inflates the padded-head
+    all-gathers and the d(qkv) psums 2× (§Perf iteration S4 — measured on
+    starcoder2-7b train_4k)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [.., S, hd/2]
+    if ang.ndim == 2:                                    # [S, hd/2] -> [1, S, ...]
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key, n_layers: int, cross: bool = False
+                   ) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    d, hd = cfg.d_model, cfg.hd
+    p = {
+        "wq": _init(ks[0], (n_layers, d, cfg.n_heads * hd)),
+        "wk": _init(ks[1], (n_layers, d, cfg.n_kv_heads * hd)),
+        "wv": _init(ks[2], (n_layers, d, cfg.n_kv_heads * hd)),
+        "wo": _init(ks[3], (n_layers, cfg.n_heads * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((n_layers, hd))
+        p["k_norm"] = jnp.zeros((n_layers, hd))
+    return p
+
+
+def attention(cfg: ModelConfig, rules: MeshRules, lp: Dict[str, Any],
+              x: jax.Array, positions: jax.Array, *,
+              causal: bool = True,
+              kv_input: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              cache_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None,
+              return_kv: bool = False, rope: bool = True,
+              write_cache: bool = True):
+    """One attention layer (self or cross).
+
+    x: [B, S, d].  Four modes:
+      * train/prefill self-attn: kv from x, flash path.
+      * cross-attn:              kv from kv_input (no causal mask).
+      * decode w/ dense cache:   cache_kv=(k,v) [B, Skv, Hkv, hd] holds past,
+                                 cache_pos[B] is the write position; S == 1.
+    Returns (out [B, S, d], (k, v) or updated (k, v)).
+    """
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ lp["wq"].astype(x.dtype)).reshape(B, S, Hq, hd)
+    src = x if kv_input is None else kv_input
+    k = (src @ lp["wk"].astype(x.dtype)).reshape(B, src.shape[1], Hkv, hd)
+    v = (src @ lp["wv"].astype(x.dtype)).reshape(B, src.shape[1], Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kpos, cfg.rope_theta)
+    # §Perf iteration S1 (REFUTED, kept for the record): sharding the query
+    # *sequence* when heads don't divide tp (starcoder 36 % 16) was
+    # predicted to remove padded-head gathers, but measured 2.5× MORE
+    # collective bytes — without moving the whole residual stream to
+    # sequence-parallel, every attention boundary reshards [B,S,d].
+    # Head sharding (with GSPMD padding) stays.
+    q = rules.constrain(q, "batch", None, "tp", None)
+    k = rules.constrain(k, "batch", None, None, None)
+
+    if cache_kv is not None:
+        # decode: append this step's kv at cache_pos, attend over the cache
+        ck, cv = cache_kv                              # [B, Skv, Hkv, hd]
+        Skv = ck.shape[1]
+        if cache_pos.ndim == 0:
+            cache_pos = jnp.full((B,), cache_pos, jnp.int32)
+        if write_cache:
+            onehot = (jnp.arange(Skv)[None, :] == cache_pos[:, None])
+            ck = jnp.where(onehot[:, :, None, None], k.astype(ck.dtype), ck)
+            cv = jnp.where(onehot[:, :, None, None], v.astype(cv.dtype), cv)
+        ck = rules.constrain(ck, "batch", "kv_seq", None, None)
+        cv = rules.constrain(cv, "batch", "kv_seq", None, None)
+        mask = jnp.arange(Skv)[None, :] <= cache_pos[:, None]   # [B, Skv]
+        G = Hq // Hkv
+        qh = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32) * (hd ** -0.5)
+        s = jnp.einsum("bshgd,bthd->bhgst", qh, ck.astype(jnp.float32))
+        s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - jax.lax.stop_gradient(m))
+        o = jnp.einsum("bhgst,bthd->bshgd", p, cv.astype(jnp.float32))
+        o = o / p.sum(axis=-1).transpose(0, 3, 1, 2)[..., None]
+        o = o.reshape(B, S, Hq * hd).astype(x.dtype)
+        out = o @ lp["wo"].astype(x.dtype)
+        return rules.constrain(out, "batch", None, None), (ck, cv)
+
+    # train / prefill / cross: flash path
+    qt = q.transpose(0, 2, 1, 3)                       # [B, Hq, S, hd]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if cfg.use_kernels:
+        ot = kops.flash_attention(qt, kt, vt, causal=causal)
+    else:
+        ot = kref.ref_flash(qt, kt, vt, causal=causal, block_k=cfg.attn_block_k)
+    o = ot.transpose(0, 2, 1, 3).reshape(B, S, Hq * hd)
+    out = o @ lp["wo"].astype(x.dtype)
+    out = rules.constrain(out, "batch", None, None)
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, n_layers: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": _init(ks[0], (n_layers, d, f)),
+        "w3": _init(ks[1], (n_layers, d, f)),
+        "w2": _init(ks[2], (n_layers, f, d)),
+    }
+
+
+def mlp(rules: MeshRules, lp: Dict[str, Any], x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ lp["w1"].astype(x.dtype)) * (x @ lp["w3"].astype(x.dtype))
+    h = rules.constrain(h, "batch", None, "tp")
+    out = h @ lp["w2"].astype(x.dtype)
+    return rules.constrain(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    p = {"embed": _init(ks[0], (cfg.vocab_padded, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init(ks[1], (cfg.d_model, cfg.vocab_padded))
+    return p
+
+
+def embed(rules: MeshRules, params, tokens: jax.Array, dtype) -> jax.Array:
+    x = params["embed"].astype(dtype)[tokens]
+    return rules.constrain(x, "batch", None, None)
+
+
+def unembed(rules: MeshRules, params, x: jax.Array) -> jax.Array:
+    if "lm_head" in params:
+        w = params["lm_head"].astype(x.dtype)
+    else:
+        w = params["embed"].astype(x.dtype).T
+    logits = x @ w
+    return rules.constrain(logits, "batch", None, "tp")

@@ -1,0 +1,130 @@
+"""Mamba2 (SSD) block — train scan + O(1)-state decode step.
+
+Layout follows the Mamba2 paper: one input projection produces
+(z | x | B | C | dt); a short depthwise causal conv over (x|B|C); the SSD
+recurrence runs per head with shared B/C (ngroups=1); gated output
+projection.  The sequence mix is the chunked SSD algorithm — the Pallas
+kernel (kernels/ssd_scan.py) on TPU, its jnp twin (ref_ssd_chunked) for the
+dry-run, and the sequential ref for decode.
+
+Decode carries (conv_state [K-1, din+2n], ssd_state [h, n, dh]) per layer —
+constant-size, which is why the hybrid KV store (C1) is *inapplicable* to
+this family (DESIGN.md §Arch-applicability): there is nothing to compact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.config import ModelConfig
+from repro.models.layers import _init
+from repro.sharding import MeshRules
+
+CONV_K = 4
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    din = cfg.ssm_expand * cfg.d_model
+    nheads = din // cfg.ssm_head_dim
+    return din, nheads, cfg.ssm_state
+
+
+def init_ssm(cfg: ModelConfig, key, n_layers: int) -> Dict[str, Any]:
+    din, h, n = ssm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * din + 2 * n + h           # z | x | B | C | dt
+    return {
+        "in_proj": _init(ks[0], (n_layers, d, proj_out)),
+        "conv": _init(ks[1], (n_layers, CONV_K, din + 2 * n), scale=0.5),
+        "A_log": jnp.zeros((n_layers, h)),
+        "D": jnp.ones((n_layers, h)),
+        "dt_bias": jnp.zeros((n_layers, h)),
+        "out_proj": _init(ks[2], (n_layers, din, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    din, h, n = ssm_dims(cfg)
+    z, xbc_dt = jnp.split(proj, [din], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [din + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv, K taps.  xbc: [B, S, C]; w: [K, C].
+    state: [B, K-1, C] trailing context (decode).  Returns (y, new_state)."""
+    B, S, C = xbc.shape
+    K = w.shape[0]
+    if state is None:
+        ctx = jnp.zeros((B, K - 1, C), xbc.dtype)
+    else:
+        ctx = state.astype(xbc.dtype)
+    full = jnp.concatenate([ctx, xbc], axis=1)          # [B, S+K-1, C]
+    y = sum(full[:, i:i + S] * w[i][None, None] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, C), xbc.dtype)
+    return jax.nn.silu(y), new_state
+
+
+def ssm_mix(cfg: ModelConfig, rules: MeshRules, lp: Dict[str, Any],
+            x: jax.Array, *, state: Optional[Dict[str, jax.Array]] = None
+            ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: [B, S, d].  state None -> train/prefill (full scan);
+    state dict -> single-token decode with O(1) recurrent state."""
+    B, S, d = x.shape
+    din, h, n = ssm_dims(cfg)
+    proj = x @ lp["in_proj"].astype(x.dtype)
+    proj = rules.constrain(proj, "batch", None, "tp")
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))       # [h]
+    new_state = None
+
+    if state is None:
+        xbc, _ = _causal_conv(xbc, lp["conv"].astype(x.dtype))
+        xs, Bm, Cm = jnp.split(xbc, [din, din + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + lp["dt_bias"].astype(jnp.float32))
+        xh = xs.reshape(B, S, h, cfg.ssm_head_dim)
+        if cfg.use_kernels and S % cfg.ssm_chunk == 0:
+            y = kops.ssd_scan(xh, dt, A, Bm.astype(jnp.float32),
+                              Cm.astype(jnp.float32), lp["D"].astype(jnp.float32),
+                              chunk=cfg.ssm_chunk)
+        else:
+            chunk = cfg.ssm_chunk if S % cfg.ssm_chunk == 0 else S
+            y = kref.ref_ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                                     Cm.astype(jnp.float32), chunk=chunk,
+                                     D_skip=lp["D"].astype(jnp.float32))
+        y = y.reshape(B, S, din)
+    else:
+        conv_st = state["conv"]                          # [B, K-1, din+2n]
+        xbc, conv_st = _causal_conv(xbc, lp["conv"].astype(x.dtype), conv_st)
+        xs, Bm, Cm = jnp.split(xbc, [din, din + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + lp["dt_bias"].astype(jnp.float32))  # [B, 1, h]
+        ssd_st = state["ssd"].astype(jnp.float32)        # [B, h, n, dh]
+        decay = jnp.exp(A[None, :, None, None] * dt[:, 0, :, None, None])
+        upd = (dt[:, 0, :, None, None] * Bm[:, 0, None, :, None]
+               * xs.reshape(B, h, cfg.ssm_head_dim)[:, :, None, :])
+        ssd_st = decay * ssd_st + upd
+        yt = jnp.einsum("bn,bhnd->bhd", Cm[:, 0].astype(jnp.float32), ssd_st)
+        yt = yt + lp["D"].astype(jnp.float32)[None, :, None] * \
+            xs.reshape(B, h, cfg.ssm_head_dim).astype(jnp.float32)
+        y = yt.reshape(B, 1, din).astype(x.dtype)
+        new_state = {"conv": conv_st, "ssd": ssd_st}
+
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ lp["out_proj"].astype(x.dtype)
+    return rules.constrain(out, "batch", None, None), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    din, h, n = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, din + 2 * n), jnp.float32),
+        "ssd": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+    }

@@ -1,0 +1,440 @@
+"""Unified LM covering the assigned architecture pool.
+
+One functional model whose block composition is driven by ``ModelConfig``:
+
+  dense / vlm       — attn + SwiGLU MLP
+  moe               — attn + MoE FFN (Data-Shuffle dispatch, models/moe.py)
+  ssm               — Mamba2 SSD mix only (attention-free)
+  hybrid (hymba)    — *parallel* attn + SSM heads on the same normed input,
+                      fused with a learned per-layer mix, + MLP
+  encdec (seamless) — bidirectional encoder over frontend frames + causal
+                      decoder with cross-attention
+  vlm (phi-3-v)     — patch embeddings (frontend stub) prepended to tokens
+
+Per-layer weights are stacked on a leading L axis and consumed via
+``jax.lax.scan`` (small HLO, fast multi-device compiles); ``cfg.remat``
+selects the activation-checkpoint policy at the block boundary.
+
+Three entry points used by the launchers:
+
+  * ``forward``      — train/prefill: tokens -> final hidden states
+  * ``lm_loss``      — chunked cross-entropy (never materializes [B,S,V])
+  * ``decode_step``  — one token through per-layer dense caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.sharding import MeshRules
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    nl, d = cfg.n_layers, cfg.d_model
+    p: Dict[str, Any] = {"embed": L.init_embed(cfg, ks[0])}
+
+    lyr: Dict[str, Any] = {"ln1": jnp.zeros((nl, d))}
+    if cfg.family != "ssm":
+        lyr["attn"] = L.init_attention(cfg, ks[1], nl)
+    if cfg.ssm_state and cfg.family in ("ssm", "hybrid"):
+        lyr["ssm"] = S.init_ssm(cfg, ks[2], nl)
+    if cfg.family == "hybrid":
+        lyr["mix"] = jnp.zeros((nl, 2))  # learned attn/ssm fusion logits
+    if cfg.n_experts:
+        lyr["ln2"] = jnp.zeros((nl, d))
+        lyr["moe"] = M.init_moe(cfg, ks[3], nl)
+    elif cfg.d_ff:
+        lyr["ln2"] = jnp.zeros((nl, d))
+        lyr["mlp"] = L.init_mlp(cfg, ks[4], nl)
+    if cfg.family == "encdec":
+        lyr["ln_cross"] = jnp.zeros((nl, d))
+        lyr["cross"] = L.init_attention(cfg, ks[5], nl, cross=True)
+    p["layers"] = lyr
+    p["final_norm"] = jnp.zeros((d,))
+
+    if cfg.n_enc_layers:
+        p["enc_layers"] = {
+            "ln1": jnp.zeros((cfg.n_enc_layers, d)),
+            "attn": L.init_attention(cfg, ks[6], cfg.n_enc_layers),
+            "ln2": jnp.zeros((cfg.n_enc_layers, d)),
+            "mlp": L.init_mlp(cfg, ks[7], cfg.n_enc_layers),
+        }
+        p["enc_norm"] = jnp.zeros((d,))
+    return p
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def cast_params(cfg: ModelConfig, params):
+    """Cast master weights to cfg.param_dtype (bf16 for the 1T MoE)."""
+    dt = cfg.param_np_dtype
+    return jax.tree.map(lambda x: x.astype(dt), params)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec family): bidirectional self-attention over frontend frames
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, rules: MeshRules, params, frames: jax.Array
+           ) -> jax.Array:
+    """frames: [B, Se, d] precomputed frontend embeddings (stub) -> [B, Se, d]."""
+    B, Se, _ = frames.shape
+    pos = jnp.arange(Se)
+
+    def block(x, lp):
+        h, _ = L.attention(cfg, rules, lp["attn"], L.rms_norm(x, lp["ln1"]),
+                           pos, causal=False)
+        x = x + h
+        x = x + L.mlp(rules, lp["mlp"], L.rms_norm(x, lp["ln2"]))
+        return x, None
+
+    if cfg.remat == "block":
+        block = jax.checkpoint(block)
+    x, _ = jax.lax.scan(block, frames.astype(cfg.np_dtype), params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only / decoder forward (train & prefill)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_block(cfg: ModelConfig, rules: MeshRules, x, lp, pos,
+                   enc_x: Optional[jax.Array]):
+    """One decoder block.  Returns (x, aux) with aux = MoE drop fraction."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, lp["ln1"])
+    if cfg.family == "ssm":
+        mix, _ = S.ssm_mix(cfg, rules, lp["ssm"], h)
+        x = x + mix
+    elif cfg.family == "hybrid":
+        attn_out, _ = L.attention(cfg, rules, lp["attn"], h, pos)
+        ssm_out, _ = S.ssm_mix(cfg, rules, lp["ssm"], h)
+        w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+        x = x + (w[0] * attn_out.astype(jnp.float32)
+                 + w[1] * ssm_out.astype(jnp.float32)).astype(x.dtype)
+    else:
+        attn_out, _ = L.attention(cfg, rules, lp["attn"], h, pos)
+        x = x + attn_out
+    if cfg.family == "encdec":
+        c, _ = L.attention(cfg, rules, lp["cross"], L.rms_norm(x, lp["ln_cross"]),
+                           pos, causal=False, kv_input=enc_x,
+                           kv_positions=jnp.arange(enc_x.shape[1]), rope=False)
+        x = x + c
+    if cfg.n_experts:
+        y, dropped = M.moe_ffn(cfg, rules, lp["moe"], L.rms_norm(x, lp["ln2"]))
+        x = x + y
+        aux = dropped.astype(jnp.float32)
+    elif cfg.d_ff:
+        x = x + L.mlp(rules, lp["mlp"], L.rms_norm(x, lp["ln2"]))
+    return x, aux
+
+
+def forward(cfg: ModelConfig, rules: MeshRules, params, tokens: jax.Array,
+            *, extra: Optional[Dict[str, jax.Array]] = None,
+            positions: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens [B, S] -> (hidden [B, S', d], aux).  S' == S except for VLM,
+    where the frontend patch embeddings are prepended (S' = P + S)."""
+    extra = extra or {}
+    x = L.embed(rules, params["embed"], tokens, cfg.np_dtype)  # [B, S, d]
+    if cfg.family == "vlm" and "patches" in extra:
+        patches = extra["patches"].astype(cfg.np_dtype)        # [B, P, d]
+        x = jnp.concatenate([patches, x], axis=1)
+        x = rules.constrain(x, "batch", None, None)
+    B, Sx, _ = x.shape
+    pos = jnp.arange(Sx) if positions is None else positions
+
+    enc_x = None
+    if cfg.family == "encdec":
+        enc_x = encode(cfg, rules, params, extra["frames"])
+
+    def block(carry, lp):
+        y, aux = _decoder_block(cfg, rules, carry, lp, pos, enc_x)
+        return y, aux
+
+    if cfg.remat == "block":
+        block = jax.checkpoint(block)
+    x, auxs = jax.lax.scan(block, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    return x, {"moe_dropped": auxs.mean()}
+
+
+def logits_fn(cfg: ModelConfig, rules: MeshRules, params, hidden: jax.Array
+              ) -> jax.Array:
+    logits = L.unembed(rules, params["embed"], hidden)
+    Vp = logits.shape[-1]
+    if Vp > cfg.vocab_size:  # mask the vocab-padding slots (config.py)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
+        logits = jnp.where(iota < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def lm_loss(cfg: ModelConfig, rules: MeshRules, params, hidden: jax.Array,
+            labels: jax.Array, *, chunk: int = 512) -> jax.Array:
+    """Chunked next-token cross-entropy.  hidden [B, S, d], labels [B, S]
+    (-1 = masked).  Never materializes the full [B, S, V] logits tensor —
+    the vocab matmul + softmax run per sequence-chunk inside a scan, and
+    the target logit is extracted with a masked reduction over the
+    (tp-sharded) vocab axis rather than ``take_along_axis``, which would
+    force GSPMD to all-gather the logits chunk (measured 16.8 GB/device
+    for llama3.2-3b train_4k — see EXPERIMENTS.md §Perf iteration 0)."""
+    B, Sx, d = hidden.shape
+    Sl = labels.shape[1]
+    if Sx != Sl:  # VLM: loss only over the token positions (patches carry none)
+        hidden = hidden[:, Sx - Sl:]
+    S = labels.shape[1]
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    hc = jnp.moveaxis(hidden.reshape(B, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    V = cfg.vocab_padded
+
+    def one(carry, xs):
+        h, lab = xs
+        logits = logits_fn(cfg, rules, params, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+                  == jnp.maximum(lab, 0)[..., None])
+        tgt = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        valid = lab >= 0
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        tl, tv = carry
+        return (tl + nll.sum(), tv + valid.sum()), None
+
+    (tot, n), _ = jax.lax.scan(one, (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                               (hc, lc))
+    return tot / jnp.maximum(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# Dense-cache decode (one token per step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Dict[str, jax.Array]:
+    """Per-layer dense KV cache pytree.  All leaves carry a leading L dim.
+
+    ``pos`` [B] is the next write position (== number of valid tokens)."""
+    nl, hd, Hkv = cfg.n_layers, cfg.hd, cfg.n_kv_heads
+    cache: Dict[str, jax.Array] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((nl, batch, max_len, Hkv, hd), cfg.np_dtype)
+        cache["v"] = jnp.zeros((nl, batch, max_len, Hkv, hd), cfg.np_dtype)
+    if cfg.ssm_state and cfg.family in ("ssm", "hybrid"):
+        din, h, n = S.ssm_dims(cfg)
+        cache["ssm_conv"] = jnp.zeros((nl, batch, S.CONV_K - 1, din + 2 * n),
+                                      jnp.float32)
+        cache["ssm_ssd"] = jnp.zeros((nl, batch, h, n, cfg.ssm_head_dim),
+                                     jnp.float32)
+    if cfg.family == "encdec":
+        cache["ck"] = jnp.zeros((nl, batch, enc_len, Hkv, hd), cfg.np_dtype)
+        cache["cv"] = jnp.zeros((nl, batch, enc_len, Hkv, hd), cfg.np_dtype)
+    return cache
+
+
+def precompute_cross_kv(cfg: ModelConfig, rules: MeshRules, params,
+                        enc_x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Encoder output -> per-decoder-layer cross KV ([L, B, Se, Hkv, hd])."""
+    B, Se, _ = enc_x.shape
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+
+    def one(_, lp):
+        k = (enc_x @ lp["wk"].astype(enc_x.dtype)).reshape(B, Se, Hkv, hd)
+        v = (enc_x @ lp["wv"].astype(enc_x.dtype)).reshape(B, Se, Hkv, hd)
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(one, None, params["layers"]["cross"])
+    return ck, cv
+
+
+def decode_step(cfg: ModelConfig, rules: MeshRules, params,
+                token: jax.Array, cache: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """token [B, 1] + cache -> (logits [B, 1, V], new cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]                                     # [B]
+    x = L.embed(rules, params["embed"], token, cfg.np_dtype)
+
+    def block(carry, xs):
+        x = carry
+        lp, layer_cache = xs
+        new_cache = {}
+        aux = jnp.zeros((), jnp.float32)
+        h = L.rms_norm(x, lp["ln1"])
+        if cfg.family == "ssm":
+            st = {"conv": layer_cache["ssm_conv"], "ssd": layer_cache["ssm_ssd"]}
+            mix, st = S.ssm_mix(cfg, rules, lp["ssm"], h, state=st)
+            new_cache["ssm_conv"], new_cache["ssm_ssd"] = st["conv"], st["ssd"]
+            x = x + mix
+        elif cfg.family == "hybrid":
+            a, (nk, nv) = L.attention(cfg, rules, lp["attn"], h, pos[:, None],
+                                      cache_kv=(layer_cache["k"], layer_cache["v"]),
+                                      cache_pos=pos)
+            st = {"conv": layer_cache["ssm_conv"], "ssd": layer_cache["ssm_ssd"]}
+            m, st = S.ssm_mix(cfg, rules, lp["ssm"], h, state=st)
+            w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+            x = x + (w[0] * a.astype(jnp.float32)
+                     + w[1] * m.astype(jnp.float32)).astype(x.dtype)
+            new_cache["k"], new_cache["v"] = nk, nv
+            new_cache["ssm_conv"], new_cache["ssm_ssd"] = st["conv"], st["ssd"]
+        else:
+            a, (nk, nv) = L.attention(cfg, rules, lp["attn"], h, pos[:, None],
+                                      cache_kv=(layer_cache["k"], layer_cache["v"]),
+                                      cache_pos=pos)
+            x = x + a
+            new_cache["k"], new_cache["v"] = nk, nv
+        if cfg.family == "encdec":
+            ck, cv = layer_cache["ck"], layer_cache["cv"]
+            Se = ck.shape[1]
+            c, _ = L.attention(cfg, rules, lp["cross"], L.rms_norm(x, lp["ln_cross"]),
+                               pos[:, None], causal=False, rope=False,
+                               cache_kv=(ck, cv), write_cache=False,
+                               cache_pos=jnp.full((B,), Se - 1, jnp.int32))
+            # cross cache is static (fully prefilled): attend over all Se
+            x = x + c
+            new_cache["ck"], new_cache["cv"] = ck, cv
+        if cfg.n_experts:
+            y, dropped = M.moe_ffn(cfg, rules, lp["moe"], L.rms_norm(x, lp["ln2"]))
+            x = x + y
+            aux = dropped.astype(jnp.float32)
+        elif cfg.d_ff:
+            x = x + L.mlp(rules, lp["mlp"], L.rms_norm(x, lp["ln2"]))
+        return x, (new_cache, aux)
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, (new_layer_caches, _) = jax.lax.scan(block, x,
+                                            (params["layers"], layer_caches))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = logits_fn(cfg, rules, params, x)
+    new_cache = dict(new_layer_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also fills a dense cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, rules: MeshRules, params, tokens: jax.Array,
+            max_len: int, *, extra: Optional[Dict[str, jax.Array]] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Run the full prompt, return (last hidden [B, d], filled cache)."""
+    extra = extra or {}
+    B, Sp = tokens.shape
+    x = L.embed(rules, params["embed"], tokens, cfg.np_dtype)
+    if cfg.family == "vlm" and "patches" in extra:
+        x = jnp.concatenate([extra["patches"].astype(cfg.np_dtype), x], axis=1)
+    Sx = x.shape[1]
+    pos = jnp.arange(Sx)
+    enc_x = None
+    if cfg.family == "encdec":
+        enc_x = encode(cfg, rules, params, extra["frames"])
+
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+
+    def block(carry, lp):
+        x = carry
+        out_cache = {}
+        h = L.rms_norm(x, lp["ln1"])
+        if cfg.family == "ssm":
+            mix, _ = S.ssm_mix(cfg, rules, lp["ssm"], h)
+            # rebuild terminal state by a short sequential pass over the tail
+            st = _ssm_terminal_state(cfg, lp["ssm"], h)
+            x = x + mix
+            out_cache["ssm_conv"], out_cache["ssm_ssd"] = st
+        elif cfg.family == "hybrid":
+            a, kv = L.attention(cfg, rules, lp["attn"], h, pos, return_kv=True)
+            m, _ = S.ssm_mix(cfg, rules, lp["ssm"], h)
+            st = _ssm_terminal_state(cfg, lp["ssm"], h)
+            w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+            x = x + (w[0] * a.astype(jnp.float32)
+                     + w[1] * m.astype(jnp.float32)).astype(x.dtype)
+            out_cache["k"] = _pad_kv(kv[0], max_len)
+            out_cache["v"] = _pad_kv(kv[1], max_len)
+            out_cache["ssm_conv"], out_cache["ssm_ssd"] = st
+        else:
+            a, kv = L.attention(cfg, rules, lp["attn"], h, pos, return_kv=True)
+            x = x + a
+            out_cache["k"] = _pad_kv(kv[0], max_len)
+            out_cache["v"] = _pad_kv(kv[1], max_len)
+        if cfg.family == "encdec":
+            c, ckv = L.attention(cfg, rules, lp["cross"],
+                                 L.rms_norm(x, lp["ln_cross"]), pos,
+                                 causal=False, kv_input=enc_x,
+                                 kv_positions=jnp.arange(enc_x.shape[1]),
+                                 rope=False, return_kv=True)
+            x = x + c
+            out_cache["ck"], out_cache["cv"] = ckv
+        if cfg.n_experts:
+            y, _ = M.moe_ffn(cfg, rules, lp["moe"], L.rms_norm(x, lp["ln2"]))
+            x = x + y
+        elif cfg.d_ff:
+            x = x + L.mlp(rules, lp["mlp"], L.rms_norm(x, lp["ln2"]))
+        return x, out_cache
+
+    if cfg.remat == "block":
+        block = jax.checkpoint(block)
+    x, caches = jax.lax.scan(block, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    cache = dict(caches)
+    cache["pos"] = jnp.full((B,), Sx, jnp.int32)
+    return x[:, -1], cache
+
+
+def _pad_kv(k: jax.Array, max_len: int) -> jax.Array:
+    B, Sp, Hkv, hd = k.shape
+    return jnp.pad(k, ((0, 0), (0, max_len - Sp), (0, 0), (0, 0)))
+
+
+def _ssm_terminal_state(cfg: ModelConfig, lp, h: jax.Array):
+    """Recover (conv_state, ssd_state) after a prefill pass.
+
+    The SSD terminal state is rebuilt by replaying the projected sequence
+    through the sequential recurrence once (cheap relative to the mix)."""
+    B, Sx, _ = h.shape
+    din, nh, n = S.ssm_dims(cfg)
+    proj = h @ lp["in_proj"].astype(h.dtype)
+    _, xbc, dt_raw = S._split_proj(cfg, proj)
+    conv_state = jnp.concatenate(
+        [jnp.zeros((B, S.CONV_K - 1, din + 2 * n), h.dtype), xbc],
+        axis=1)[:, -(S.CONV_K - 1):].astype(jnp.float32)
+    xbc_c, _ = S._causal_conv(xbc, lp["conv"].astype(h.dtype))
+    xs, Bm, Cm = jnp.split(xbc_c, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, Sx, nh, cfg.ssm_head_dim).astype(jnp.float32)
+
+    def step(hs, inp):
+        xt, dtt, Bt = inp
+        decay = jnp.exp(A[None, :, None, None] * dtt[:, :, None, None])
+        upd = dtt[:, :, None, None] * Bt[:, None, :, None] * xt[:, :, None, :]
+        return decay * hs + upd, None
+
+    h0 = jnp.zeros((B, nh, n, cfg.ssm_head_dim), jnp.float32)
+    hs, _ = jax.lax.scan(step, h0, (jnp.moveaxis(xh, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(Bm.astype(jnp.float32), 1, 0)))
+    return conv_state, hs

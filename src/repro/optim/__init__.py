@@ -1,0 +1,22 @@
+from repro.optim.optimizers import (
+    OptConfig,
+    adafactor_init,
+    adamw_init,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+    opt_state_specs,
+)
+from repro.optim.compress import (
+    CompressState,
+    compress_init,
+    compressed_gradients,
+)
+
+__all__ = [
+    "OptConfig", "adamw_init", "adafactor_init", "apply_updates",
+    "clip_by_global_norm", "cosine_schedule", "make_optimizer",
+    "opt_state_specs", "CompressState", "compress_init",
+    "compressed_gradients",
+]

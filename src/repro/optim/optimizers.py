@@ -1,0 +1,227 @@
+"""Optimizers for the training substrate (pure-pytree, GSPMD-friendly).
+
+Two families:
+
+* ``adamw``     — the default for ≤100B-class architectures.  First/second
+  moments are full f32 pytrees sharded exactly like the parameters (ZeRO-3:
+  the fsdp axis shards them with the weights), so optimizer memory scales
+  1/N with the mesh.
+
+* ``adafactor`` — factored second moment (row/col statistics), optional
+  momentum-free (beta1=0) mode.  This is the production choice for the
+  trillion-parameter MoE in the pool (kimi-k2): full AdamW state for 1.04T
+  params is 8.3 TB f32 which cannot fit a 256-chip v5e pod; factored state
+  is ~1/d_model of that (see DESIGN.md §Distribution and EXPERIMENTS.md
+  §Dry-run for the measured bytes).
+
+Both share ``apply_updates`` / ``clip_by_global_norm`` and a cosine LR
+schedule with linear warmup.  ``make_optimizer`` returns an
+``(init_fn, update_fn)`` pair closed over an ``OptConfig``.
+
+The second-moment factoring rule follows the Adafactor paper: for a tensor
+with ndim >= 2 the last two dims are factored; 0/1-dim tensors keep full v.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # 'adamw' | 'adafactor'
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9                # adafactor: 0.0 disables momentum
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, pre_clip_norm)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                      ).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def _adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                   + cfg.weight_decay * p.astype(jnp.float32))
+        return u, m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return updates, {"step": step, "m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; beta1=0 drops momentum entirely)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+def adafactor_init(params, b1: float = 0.0) -> Dict[str, Any]:
+    def vstate(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    st = {"step": jnp.zeros((), jnp.int32),
+          "v": jax.tree.map(vstate, params,
+                            is_leaf=lambda x: hasattr(x, "shape"))}
+    if b1 > 0.0:
+        st["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return st
+
+
+def _adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8          # paper's t^-0.8
+
+    def upd(g, vst, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = decay * vst["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vst["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None],
+                                   1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+            nvst = {"vr": vr, "vc": vc}
+        else:
+            v = decay * vst["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(v + 1e-30)
+            nvst = {"v": v}
+        # update clipping (RMS <= 1) per the Adafactor paper
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = -lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+        return u, nvst
+
+    leaves_g, tdef = jax.tree.flatten(grads)
+    leaves_v = tdef.flatten_up_to(state["v"])
+    leaves_p = jax.tree.leaves(params)
+    outs = [upd(g, v, p) for g, v, p in zip(leaves_g, leaves_v, leaves_p)]
+    updates = tdef.unflatten([o[0] for o in outs])
+    new_v = tdef.unflatten([o[1] for o in outs])
+    new_state = {"step": step, "v": new_v}
+
+    if "m" in state:
+        b1 = cfg.b1
+        new_m = jax.tree.map(lambda m, u: b1 * m + (1 - b1) * u,
+                             state["m"], updates)
+        updates = new_m
+        new_state["m"] = new_m
+    return updates, new_state
+
+
+# ---------------------------------------------------------------------------
+# Factory + sharding specs
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: OptConfig
+                   ) -> Tuple[Callable[[Any], Any],
+                              Callable[[Any, Any, Any], Tuple[Any, Any]]]:
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params)
+    -> (updates, new_state))."""
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: _adamw_update(cfg, g, s, p)
+    if cfg.name == "adafactor":
+        init = lambda p: adafactor_init(p, b1=cfg.b1)
+        return init, lambda g, s, p: _adafactor_update(cfg, g, s, p)
+    raise ValueError(cfg.name)
+
+
+def opt_state_specs(opt_state, pspecs):
+    """PartitionSpec pytree for the optimizer state, derived from the param
+    specs: full-shape moments inherit the param spec; factored moments drop
+    the reduced axis; scalars are replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def match(vst, spec):
+        if isinstance(vst, dict) and "vr" in vst:        # factored
+            return {"vr": P(*spec[:-1]), "vc": P(*(spec[:-2] + spec[-1:]))}
+        if isinstance(vst, dict) and "v" in vst:
+            return {"v": spec}
+        return spec
+
+    out: Dict[str, Any] = {"step": P()}
+    if "m" in opt_state:
+        out["m"] = pspecs
+    if "v" in opt_state and isinstance(opt_state.get("v"), dict) \
+            and "step" not in opt_state["v"]:
+        # adamw: v mirrors params; adafactor: per-leaf dict {vr,vc}|{v}
+        is_fact = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        sample = jax.tree.leaves(opt_state["v"],
+                                 is_leaf=is_fact)
+        if sample and isinstance(sample[0], dict):
+            out["v"] = jax.tree.map(match, opt_state["v"], pspecs,
+                                    is_leaf=is_fact)
+        else:
+            out["v"] = pspecs
+    return out

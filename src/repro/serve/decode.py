@@ -1,0 +1,137 @@
+"""Decode step over the hybrid KV store (merge-on-read serving path).
+
+``decode_step_hybrid`` mirrors ``transformer.decode_step`` but self-attention
+reads the LSM-style hybrid cache (serve/hybrid_cache.py): the new token's
+(k, v) is appended to the row-format tail (MemTable write), attention is the
+zone-map-pruned merge-on-read over encoded blocks + tail, and every
+``BLOCK`` steps the host loop calls ``compact`` (minor compaction).
+
+Family handling:
+  dense / moe / vlm — hybrid self-attention;
+  hybrid (hymba)    — hybrid self-attention + O(1) SSM state in parallel;
+  encdec (seamless) — hybrid decoder self-attention; cross-KV is a *static
+                      baseline* (computed once at prefill, never appended —
+                      the encoder output compacts exactly once, DESIGN.md
+                      §Arch-applicability);
+  ssm (mamba2)      — inapplicable (constant-size state, nothing to
+                      compact); use transformer.decode_step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.serve import hybrid_cache as H
+from repro.sharding import MeshRules
+
+
+def init_serve_cache(cfg: ModelConfig, spec: H.HybridSpec,
+                     enc_len: int = 0) -> Dict[str, Any]:
+    """Hybrid cache + per-family extras (SSM state, cross KV)."""
+    cache = H.init_hybrid_cache(spec, cfg.np_dtype)
+    B = spec.batch
+    if cfg.ssm_state and cfg.family in ("hybrid",):
+        din, h, n = S.ssm_dims(cfg)
+        cache["ssm_conv"] = jnp.zeros((cfg.n_layers, B, S.CONV_K - 1,
+                                       din + 2 * n), jnp.float32)
+        cache["ssm_ssd"] = jnp.zeros((cfg.n_layers, B, h, n,
+                                      cfg.ssm_head_dim), jnp.float32)
+    if cfg.family == "encdec":
+        cache["ck"] = jnp.zeros((cfg.n_layers, B, enc_len, cfg.n_kv_heads,
+                                 cfg.hd), cfg.np_dtype)
+        cache["cv"] = jnp.zeros((cfg.n_layers, B, enc_len, cfg.n_kv_heads,
+                                 cfg.hd), cfg.np_dtype)
+    return cache
+
+
+_LAYER_KEYS = ("kq", "vq", "kscale", "vscale", "sketch", "tail_k", "tail_v",
+               "ssm_conv", "ssm_ssd", "ck", "cv")
+_GLOBAL_KEYS = ("pos", "tail_len", "n_blocks")
+
+
+def decode_step_hybrid(cfg: ModelConfig, rules: MeshRules, params,
+                       token: jax.Array, cache: Dict[str, jax.Array],
+                       budget: int
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """token [B, 1] + hybrid cache -> (logits [B, 1, V], new cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]                                          # [B]
+    tail_len = cache["tail_len"]
+    x = L.embed(rules, params["embed"], token, cfg.np_dtype)    # [B, 1, d]
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+
+    def self_attn(lp, h, layer_cache):
+        ap = lp["attn"]
+        q = (h @ ap["wq"].astype(h.dtype)).reshape(B, 1, Hq, hd)
+        k = (h @ ap["wk"].astype(h.dtype)).reshape(B, 1, Hkv, hd)
+        v = (h @ ap["wv"].astype(h.dtype)).reshape(B, 1, Hkv, hd)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, ap["q_norm"])
+            k = L.rms_norm(k, ap["k_norm"])
+        q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+        # MemTable write first, so the token attends to itself
+        lc = H.append_tail(
+            layer_cache, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            tail_len)
+        o = H.hybrid_attention(cfg, rules, {**lc, "n_blocks": cache["n_blocks"],
+                                            "tail_len": tail_len + 1},
+                               q[:, 0], budget)                 # [B, Hq, hd]
+        out = o.reshape(B, 1, Hq * hd) @ ap["wo"].astype(h.dtype)
+        return out, lc
+
+    def block(carry, xs):
+        x = carry
+        lp, layer_cache = xs
+        new_cache = {}
+        h = L.rms_norm(x, lp["ln1"])
+        if cfg.family == "hybrid":
+            a, lc = self_attn(lp, h, layer_cache)
+            st = {"conv": layer_cache["ssm_conv"], "ssd": layer_cache["ssm_ssd"]}
+            m, st = S.ssm_mix(cfg, rules, lp["ssm"], h, state=st)
+            w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+            x = x + (w[0] * a.astype(jnp.float32)
+                     + w[1] * m.astype(jnp.float32)).astype(x.dtype)
+            new_cache.update({k: lc[k] for k in
+                              ("tail_k", "tail_v", "kq", "vq", "kscale",
+                               "vscale", "sketch") if k in lc})
+            new_cache["ssm_conv"], new_cache["ssm_ssd"] = st["conv"], st["ssd"]
+        else:
+            a, lc = self_attn(lp, h, layer_cache)
+            x = x + a
+            new_cache.update({k: lc[k] for k in
+                              ("tail_k", "tail_v", "kq", "vq", "kscale",
+                               "vscale", "sketch") if k in lc})
+        if cfg.family == "encdec":
+            ck, cv = layer_cache["ck"], layer_cache["cv"]
+            Se = ck.shape[1]
+            c, _ = L.attention(cfg, rules, lp["cross"],
+                               L.rms_norm(x, lp["ln_cross"]), pos[:, None],
+                               causal=False, rope=False, cache_kv=(ck, cv),
+                               write_cache=False,
+                               cache_pos=jnp.full((B,), Se - 1, jnp.int32))
+            x = x + c
+            new_cache["ck"], new_cache["cv"] = ck, cv
+        if cfg.n_experts:
+            y, _ = M.moe_ffn(cfg, rules, lp["moe"], L.rms_norm(x, lp["ln2"]))
+            x = x + y
+        elif cfg.d_ff:
+            x = x + L.mlp(rules, lp["mlp"], L.rms_norm(x, lp["ln2"]))
+        return x, new_cache
+
+    layer_caches = {k: v for k, v in cache.items() if k in _LAYER_KEYS}
+    x, new_layer = jax.lax.scan(block, x, (params["layers"], layer_caches))
+    x = L.rms_norm(x, params["final_norm"])
+    from repro.models.transformer import logits_fn
+    logits = logits_fn(cfg, rules, params, x)
+    new_cache = dict(new_layer)
+    new_cache["pos"] = pos + 1
+    new_cache["tail_len"] = tail_len + 1
+    new_cache["n_blocks"] = cache["n_blocks"]
+    return logits, new_cache

@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Mesh axes: ``(pod, data, model)`` multi-pod, ``(data, model)`` single pod.
+
+Logical axes used throughout the model zoo:
+
+  batch   — token batch                  -> ('pod', 'data')
+  fsdp    — ZeRO-3 weight shard axis     -> ('pod', 'data')
+  tp      — tensor axis (heads/ffn/vocab)-> ('model',)
+  ep      — MoE expert shard axis        -> per-arch ('data','model') or ('data',)
+  etp     — MoE expert-ffn tensor axis   -> per-arch () or ('model',)
+  kv_seq  — KV-cache sequence axis       -> per-shape: () for train/prefill,
+             ('model',) for decode_32k, ('data','model') for long_500k
+
+``MeshRules.P`` resolves logical names to a PartitionSpec against the current
+mesh (dropping absent axes), ``constrain`` applies
+``with_sharding_constraint`` (a no-op when mesh is None, so the same model
+code runs in CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh] = None
+    batch: Tuple[str, ...] = ("pod", "data")
+    fsdp: Tuple[str, ...] = ("pod", "data")
+    tp: Tuple[str, ...] = ("model",)
+    ep: Tuple[str, ...] = ("data", "model")
+    etp: Tuple[str, ...] = ()
+    kv_seq: Tuple[str, ...] = ()
+
+    def _resolve(self, name: Logical):
+        if name is None:
+            return None
+        if isinstance(name, tuple):  # already-concrete mesh axes
+            axes = name
+        else:
+            axes = getattr(self, name)
+        if self.mesh is None:
+            return None
+        present = tuple(a for a in axes if a in self.mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def P(self, *logical: Logical) -> P:
+        """Resolve logical axes, dropping a mesh axis from later positions
+        if an earlier position already claimed it (e.g. batch=('data',) and
+        kv_seq=('data','model') on the same tensor)."""
+        used: set = set()
+        out = []
+        for l in logical:
+            r = self._resolve(l)
+            if r is None:
+                out.append(None)
+                continue
+            axes = (r,) if isinstance(r, str) else tuple(r)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            out.append(None if not axes
+                       else (axes[0] if len(axes) == 1 else axes))
+        return P(*out)
+
+    def sharding(self, *logical: Logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.P(*logical))
+
+    def constrain(self, x, *logical: Logical):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+    def axis_size(self, name: Logical) -> int:
+        if self.mesh is None:
+            return 1
+        r = self._resolve(name)
+        if r is None:
+            return 1
+        axes = (r,) if isinstance(r, str) else r
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # ---- per-arch / per-shape specializations ------------------------------
+
+    def with_moe(self, moe_sharding: str) -> "MeshRules":
+        """'ep':  experts over the flattened (data, model) axes — many small
+                  experts whose count divides the mesh.
+        'tp':  experts over data, expert ffn over model — kimi-k2's 384
+               experts (384 % 256 != 0 but 384 % 16 == 0).
+        'etp': experts unsharded, expert ffn over (data, model) — grok-1's
+               8 big experts (8 < any axis; 32768-wide ffn shards 256-way).
+        """
+        if moe_sharding == "ep":
+            return dataclasses.replace(self, ep=("data", "model"), etp=())
+        if moe_sharding == "etp":
+            return dataclasses.replace(self, ep=(), etp=("data", "model"))
+        return dataclasses.replace(self, ep=("data",), etp=("model",))
+
+    def with_kv_seq(self, axes: Tuple[str, ...]) -> "MeshRules":
+        return dataclasses.replace(self, kv_seq=axes)
+
+
+def param_specs(params, cfg, rules: MeshRules):
+    """PartitionSpec pytree matching the model parameter pytree.
+
+    Resolution is by parameter path name — the single source of truth for how
+    every weight in the zoo is laid out on the mesh.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {}
+
+    def spec_for(path: str, ndim: int) -> P:
+        # stacked per-layer weights carry a leading L dim (never sharded)
+        lead = ("layers" in path or "enc_layers" in path)
+
+        def wrap(*axes):
+            axes = ((None,) + axes) if lead else axes
+            assert len(axes) == ndim, (path, ndim, axes)
+            return rules.P(*axes)
+
+        name = path.split("/")[-1]
+        if name in ("embed",):                       # [V, d]
+            # vocab over model only: the token gather partitions cleanly
+            # (masked local gather + psum); 2-D sharding of the table makes
+            # GSPMD emit an invalid dynamic-slice inside the microbatch scan.
+            return wrap("tp", None)
+        if name in ("lm_head",):                     # [d, V]
+            return wrap("fsdp", "tp")
+        if name in ("wq", "wk", "wv"):               # [d, H*hd]
+            return wrap("fsdp", "tp")
+        if name == "wo":                             # [H*hd, d]
+            return wrap("tp", "fsdp")
+        # Expert weights: E on ep axes, ffn on etp axes, d replicated (it must
+        # be whole inside the shard_map expert FFN; see models/moe.py).
+        if name in ("w1", "w3") and "experts" in path:   # [E, d, fe]
+            return wrap("ep", None, "etp")
+        if name == "w2" and "experts" in path:           # [E, fe, d]
+            return wrap("ep", "etp", None)
+        if name in ("w1", "w3"):                     # [d, f]
+            return wrap("fsdp", "tp")
+        if name == "w2":                             # [f, d]
+            return wrap("tp", "fsdp")
+        if name == "router":                         # [d, E]
+            return wrap("fsdp", None)
+        if name == "in_proj":                        # [d, ssm_inner]
+            return wrap("fsdp", "tp")
+        if name == "out_proj":                       # [din, d]
+            return wrap("tp", "fsdp")
+        if name in ("A_log", "D", "dt_bias"):        # [h]
+            return wrap("tp")
+        if name == "conv":                           # [K, channels]
+            return wrap(None, "tp")
+        # norms, scales, biases — replicated
+        return wrap(*([None] * (ndim - (1 if lead else 0))))
+
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}/{k}") for k, v in tree.items()}
+        return spec_for(prefix, tree.ndim if hasattr(tree, "ndim") else len(tree.shape))
+
+    return build(params)
+
+
+def cache_specs(cache, rules: MeshRules):
+    """Dense decode cache specs, key-aware.
+
+    k/v/ck/cv [L, B, S, Hkv, hd]: batch over batch axes (when divisible),
+    sequence over kv_seq.  SSM states ([L,B,K-1,C] conv, [L,B,h,n,dh] ssd):
+    batch only — head counts in the pool (e.g. hymba's 50) don't divide the
+    model axis, and the states are small.  ``pos`` replicated.
+    """
+    def batch_axes_for(b: int):
+        n = rules.axis_size("batch")
+        return "batch" if (n > 1 and b % n == 0) else None
+
+    specs = {}
+    for name, x in cache.items():
+        if name in ("k", "v", "ck", "cv"):
+            specs[name] = rules.P(None, batch_axes_for(x.shape[1]),
+                                  "kv_seq", None, None)
+        elif name in ("ssm_conv", "ssm_ssd"):
+            specs[name] = rules.P(None, batch_axes_for(x.shape[1]),
+                                  *([None] * (x.ndim - 2)))
+        else:  # pos etc.
+            specs[name] = rules.P(*([None] * x.ndim))
+    return specs

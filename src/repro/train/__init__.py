@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, Trainer
+
+__all__ = ["TrainConfig", "Trainer"]

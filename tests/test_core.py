@@ -1,0 +1,204 @@
+"""Core Mercury behaviour: LSM merge-on-read, encodings, skipping, engine.
+
+Property tests (hypothesis) pin the paper's central invariants:
+  * merge-on-read over (baseline ⊕ incremental) ≡ a naive replay oracle,
+    under any interleaving of DML and compactions (§III-A);
+  * encodings round-trip and evaluate predicates without decompression
+    (§III-E);
+  * the skipping index never produces false negatives (§III-F);
+  * the vectorized engine ≡ the scalar engine on random queries (§V).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.encoding import encode_column
+from repro.core.lsm import LSMStore
+from repro.core.relation import (ColType, Column, ColumnSpec, Predicate,
+                                 PredOp, Table, schema)
+from repro.core.skipping import SkippingIndex, Verdict
+from repro.core import engine as eng
+from repro.core.engine import QAgg, Query, ScalarEngine, VectorEngine
+
+SCH = schema(("k", ColType.INT), ("a", ColType.INT), ("b", ColType.FLOAT))
+
+
+# ---------------------------------------------------------------------------
+# LSM merge-on-read == replay oracle (hypothesis)
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["insert", "update", "delete", "minor", "major"]),
+        st.integers(0, 19),            # key
+        st.integers(-50, 50),          # value
+    ),
+    min_size=1, max_size=60)
+
+
+@given(ops_strategy)
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_lsm_merge_on_read_equals_oracle(ops):
+    store = LSMStore(SCH, block_rows=8)
+    oracle = {}
+    for op, k, v in ops:
+        if op == "insert":
+            if k not in oracle:
+                store.insert({"k": k, "a": v, "b": float(v) / 2})
+                oracle[k] = (v, float(v) / 2)
+        elif op == "update":
+            if k in oracle:
+                store.update(k, {"a": v})
+                oracle[k] = (v, oracle[k][1])
+        elif op == "delete":
+            if k in oracle:
+                store.delete(k)
+                del oracle[k]
+        elif op == "minor":
+            store.freeze_memtable()
+            store.minor_compact()
+        else:
+            store.major_compact()
+    table, _ = store.scan()
+    got = {int(r["k"]): (int(r["a"]), float(r["b"]))
+           for r in table.rows()}
+    assert got == oracle
+    # point reads agree too
+    for k in range(20):
+        row = store.get(k)
+        assert (row is None) == (k not in oracle)
+        if row is not None:
+            assert int(row["a"]) == oracle[k][0]
+
+
+def test_lsm_snapshot_reads_are_stable():
+    store = LSMStore(SCH)
+    for i in range(10):
+        store.insert({"k": i, "a": i, "b": float(i)})
+    ts = store.current_ts
+    store.update(3, {"a": 999})
+    store.delete(5)
+    table, _ = store.scan(ts=ts)      # MVCC: read the old snapshot
+    rows = {int(r["k"]): int(r["a"]) for r in table.rows()}
+    assert rows[3] == 3 and 5 in rows
+    table2, _ = store.scan()
+    rows2 = {int(r["k"]): int(r["a"]) for r in table2.rows()}
+    assert rows2[3] == 999 and 5 not in rows2
+
+
+def test_lsm_baseline_only_scan_skips_merge():
+    """After major compaction, scans touch no incremental rows (§III-A)."""
+    store = LSMStore(SCH)
+    for i in range(100):
+        store.insert({"k": i, "a": i % 7, "b": 0.0})
+    store.major_compact()
+    _, stats = store.scan((Predicate("a", PredOp.EQ, 3),))
+    assert stats.rows_merged_incremental == 0
+    store.insert({"k": 1000, "a": 3, "b": 0.0})
+    _, stats = store.scan((Predicate("a", PredOp.EQ, 3),))
+    assert stats.rows_merged_incremental == 1
+
+
+# ---------------------------------------------------------------------------
+# encodings (hypothesis round-trip + encoded-domain predicates)
+# ---------------------------------------------------------------------------
+
+int_cols = st.lists(st.integers(-1000, 1000), min_size=1, max_size=200)
+
+
+@given(int_cols)
+@settings(max_examples=60, deadline=None)
+def test_int_encoding_roundtrip(vals):
+    col = Column.from_values(ColumnSpec("x", ColType.INT), vals)
+    enc = encode_column(col)
+    np.testing.assert_array_equal(enc.decode(), col.values)
+
+
+@given(int_cols, st.integers(-1000, 1000))
+@settings(max_examples=40, deadline=None)
+def test_encoded_domain_predicate_equals_decoded(vals, pivot):
+    col = Column.from_values(ColumnSpec("x", ColType.INT), vals)
+    enc = encode_column(col)
+    for op in (PredOp.EQ, PredOp.LE, PredOp.GT):
+        pred = Predicate("x", op, pivot)
+        got = enc.eval_pred(pred)      # None = encoding can't answer (fine)
+        if got is not None:
+            np.testing.assert_array_equal(got, pred.eval(col))
+
+
+@given(st.lists(st.sampled_from(["alpha", "alpine", "alps", "beta", "bet"]),
+                min_size=1, max_size=100))
+@settings(max_examples=40, deadline=None)
+def test_str_encoding_roundtrip(vals):
+    col = Column.from_values(ColumnSpec("s", ColType.STR), vals)
+    enc = encode_column(col)
+    np.testing.assert_array_equal(enc.decode(), col.values)
+
+
+def test_choose_encoding_prefers_dict_for_low_ndv():
+    lo = Column.from_values(ColumnSpec("x", ColType.INT), [1, 2, 3] * 100)
+    hi = Column.from_values(ColumnSpec("x", ColType.INT),
+                            list(range(300)))
+    assert encode_column(lo).nbytes() < encode_column(hi).nbytes()
+
+
+# ---------------------------------------------------------------------------
+# skipping index: conservative pruning + sketch aggregates
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(-100, 100), min_size=8, max_size=300),
+       st.integers(-100, 100), st.integers(-100, 100))
+@settings(max_examples=60, deadline=None)
+def test_skipping_index_no_false_negatives(vals, lo, hi):
+    lo, hi = min(lo, hi), max(lo, hi)
+    arr = np.asarray(vals, np.int64)
+    idx = SkippingIndex.build(arr, block_rows=16)
+    pred = Predicate("x", PredOp.BETWEEN, lo, hi)
+    verdicts = idx.prune(pred)
+    for b in range(len(verdicts)):
+        blk = arr[b * 16:(b + 1) * 16]
+        match = (blk >= lo) & (blk <= hi)
+        if verdicts[b] == Verdict.NONE.value:
+            assert not match.any()     # pruning must be conservative
+        if verdicts[b] == Verdict.ALL.value:
+            assert match.all()
+
+
+@given(st.lists(st.integers(-100, 100), min_size=8, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_sketch_aggregates_match_exact(vals):
+    arr = np.asarray(vals, np.int64)
+    idx = SkippingIndex.build(arr, block_rows=16)
+    assert idx.try_aggregate("min") == arr.min()
+    assert idx.try_aggregate("max") == arr.max()
+    assert idx.try_aggregate("sum") == arr.sum()
+    assert idx.try_aggregate("count_star") == len(arr)
+
+
+# ---------------------------------------------------------------------------
+# vectorized engine == scalar engine
+# ---------------------------------------------------------------------------
+
+
+def _random_table(rng, n=500):
+    return Table.from_columns(
+        schema(("id", ColType.INT), ("g", ColType.INT), ("v", ColType.FLOAT)),
+        {"id": np.arange(n),
+         "g": rng.integers(0, 5, n),
+         "v": rng.normal(size=n)})
+
+
+@pytest.mark.parametrize("agg", ["count", "sum", "min", "max", "avg"])
+def test_vector_engine_matches_scalar_engine(agg, rng):
+    t = _random_table(rng)
+    q = Query(preds=(Predicate("g", PredOp.IN, (1, 3)),),
+              group_by=("g",), aggs=(QAgg(agg, "v", "out"),))
+    vres = VectorEngine().execute(t, q)
+    sres = ScalarEngine().execute(t, q)
+    gv = {int(r["g"]): r["out"] for r in vres}
+    gs = {int(r["g"]): r["out"] for r in sres}
+    assert gv.keys() == gs.keys()
+    for k in gv:
+        np.testing.assert_allclose(gv[k], gs[k], rtol=1e-9)

@@ -1,0 +1,134 @@
+"""Hybrid KV store (C1+S1+S2 on TPU): exactness, compaction, pruning."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve import hybrid_cache as H
+from repro.serve.decode import decode_step_hybrid, init_serve_cache
+from repro.sharding import MeshRules
+
+KEY = jax.random.PRNGKey(1)
+RULES = MeshRules()
+
+
+def dense_oracle(q, k, v, length, Hkv, D):
+    Hq = q.shape[0]
+    s = jnp.einsum("hgd,htd->hgt",
+                   q.reshape(Hkv, Hq // Hkv, D) * D ** -0.5,
+                   k.astype(jnp.float32))
+    s = jnp.where(jnp.arange(k.shape[1])[None, None] < length, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hgt,htd->hgd", p,
+                      v.astype(jnp.float32)).reshape(Hq, D)
+
+
+@pytest.mark.parametrize("lengths", [[384, 300], [128, 17], [512, 512]])
+def test_hybrid_attention_matches_dense_at_full_budget(lengths):
+    L, B, Hkv, Hq, S, D = 2, 2, 2, 4, 512, 32
+    ks = jax.random.split(KEY, 3)
+    spec = H.HybridSpec(L, B, Hkv, D, max_blocks=S // H.BLOCK,
+                        budget=S // H.BLOCK)
+    k = jax.random.normal(ks[0], (L, B, Hkv, S, D))
+    v = jax.random.normal(ks[1], (L, B, Hkv, S, D))
+    cache = H.from_dense(spec, k, v, jnp.asarray(lengths), jnp.float32)
+    q = jax.random.normal(ks[2], (B, Hq, D))
+    lc = {kk: vv[0] for kk, vv in cache.items() if hasattr(vv, "ndim")
+          and vv.ndim > 1 and kk not in ("pos", "tail_len", "n_blocks")}
+    lc.update({kk: cache[kk] for kk in ("n_blocks", "tail_len")})
+    out = H.hybrid_attention(
+        ModelConfig("t", "dense", L, 64, Hq, Hkv, 128, 256, head_dim=D),
+        RULES, lc, q, budget=spec.budget)
+    for b in range(B):
+        want = dense_oracle(q[b], k[0, b], v[0, b], lengths[b], Hkv, D)
+        cos = float(jnp.sum(out[b] * want)
+                    / (jnp.linalg.norm(out[b]) * jnp.linalg.norm(want)))
+        assert cos > 0.999          # int8 block encoding tolerance
+
+
+def test_budget_monotonicity():
+    """More visited blocks → closer to exact (S2 prune is graceful)."""
+    L, B, Hkv, Hq, S, D = 1, 1, 2, 4, 1024, 32
+    ks = jax.random.split(KEY, 3)
+    nb = S // H.BLOCK
+    k = jax.random.normal(ks[0], (L, B, Hkv, S, D))
+    v = jax.random.normal(ks[1], (L, B, Hkv, S, D))
+    q = jax.random.normal(ks[2], (B, Hq, D))
+    cfg = ModelConfig("t", "dense", L, 64, Hq, Hkv, 128, 256, head_dim=D)
+    spec = H.HybridSpec(L, B, Hkv, D, nb, nb)
+    cache = H.from_dense(spec, k, v, jnp.asarray([S]), jnp.float32)
+    lc = {kk: vv[0] for kk, vv in cache.items() if hasattr(vv, "ndim")
+          and vv.ndim > 1 and kk not in ("pos", "tail_len", "n_blocks")}
+    lc.update({kk: cache[kk] for kk in ("n_blocks", "tail_len")})
+    exact = H.hybrid_attention(cfg, RULES, lc, q, budget=nb)
+    errs = []
+    for budget in (1, 2, 4, nb):
+        out = H.hybrid_attention(cfg, RULES, lc, q, budget=budget)
+        errs.append(float(jnp.abs(out - exact).max()))
+    assert errs[-1] < 1e-5
+    assert errs[0] >= errs[-1]
+
+
+def test_compaction_preserves_attention():
+    """Minor compaction (tail → encoded block) must not change the merged
+    read beyond int8 quantization noise — the LSM invariant."""
+    cfg = get_config("llama3_2_3b").reduced()
+    params = T.init_params(cfg, KEY)
+    spec = H.hybrid_spec(cfg, 2, 512)
+    cache = init_serve_cache(cfg, spec)
+    tok = jnp.asarray([[3], [7]])
+    # fill exactly one block so compaction triggers
+    for i in range(H.BLOCK):
+        logits_pre, cache = decode_step_hybrid(cfg, RULES, params, tok, cache,
+                                               spec.budget)
+    assert int(cache["tail_len"][0]) == H.BLOCK
+    compacted = H.compact(cache)
+    assert int(compacted["n_blocks"][0]) == 1
+    assert int(compacted["tail_len"][0]) == 0
+    la, _ = decode_step_hybrid(cfg, RULES, params, tok, cache, spec.budget)
+    lb, _ = decode_step_hybrid(cfg, RULES, params, tok, compacted,
+                               spec.budget)
+    a = jax.nn.softmax(np.asarray(la[:, 0], np.float32), axis=-1)
+    b = jax.nn.softmax(np.asarray(lb[:, 0], np.float32), axis=-1)
+    assert float(jnp.abs(a - b).max()) < 5e-2
+
+
+def test_hybrid_decode_matches_dense_decode():
+    """End-to-end: hybrid-store decode ≈ dense-cache decode (int8 tol)."""
+    cfg = get_config("qwen3_4b").reduced()
+    params = T.init_params(cfg, KEY)
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    dense = T.init_cache(cfg, B, S + 2)
+    spec = H.hybrid_spec(cfg, B, 256, budget_frac=1.0)
+    hyb = init_serve_cache(cfg, spec)
+    for t in range(S):
+        ld, dense = T.decode_step(cfg, RULES, params, toks[:, t:t + 1], dense)
+        lh, hyb = decode_step_hybrid(cfg, RULES, params, toks[:, t:t + 1],
+                                     hyb, spec.budget)
+    pd = jax.nn.softmax(np.asarray(ld[:, 0], np.float32), -1)
+    ph = jax.nn.softmax(np.asarray(lh[:, 0], np.float32), -1)
+    assert float(np.abs(pd - ph).max()) < 5e-2
+    assert int(hyb["pos"][0]) == S
+
+
+@given(st.integers(1, 4), st.integers(0, 127))
+@settings(max_examples=10, deadline=None)
+def test_from_dense_block_tail_split(nblocks, tail):
+    """pos = blocks·Bk + tail always lands tokens in the right stores."""
+    L, B, Hkv, D = 1, 1, 1, 8
+    S = nblocks * H.BLOCK + 128
+    length = nblocks * H.BLOCK + tail
+    k = jnp.ones((L, B, Hkv, S, D))
+    v = jnp.ones((L, B, Hkv, S, D))
+    spec = H.HybridSpec(L, B, Hkv, D, S // H.BLOCK, 4)
+    cache = H.from_dense(spec, k, v, jnp.asarray([length]), jnp.float32)
+    assert int(cache["n_blocks"][0]) == nblocks
+    assert int(cache["tail_len"][0]) == tail
+    assert int(cache["pos"][0]) == length

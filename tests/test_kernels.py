@@ -1,0 +1,185 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA 4:1
+    (1, 4, 1, 128, 128),    # MQA, wide head
+    (2, 4, 2, 192, 32),     # non-power-of-two seq
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_vs_oracle(B, Hq, Hkv, S, D, causal, dtype):
+    ks = keys(3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.ref_mha(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_custom_vjp_matches_naive_grads():
+    ks = keys(3)
+    B, Hq, Hkv, S, D = 2, 4, 2, 160, 32
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    for causal in (True, False):
+        f1 = lambda a, b, c: (ref.ref_flash(a, b, c, causal=causal,
+                                            block_k=64) ** 2).sum()
+        f2 = lambda a, b, c: (ref.ref_mha(a, b, c, causal=causal) ** 2).sum()
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hybrid merge-on-read decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Skv,D,blk", [
+    (2, 8, 4, 256, 64, 64),
+    (1, 4, 4, 128, 128, 128),
+    (2, 4, 1, 512, 64, 128),
+])
+def test_hybrid_decode_kernel_vs_oracle(B, Hq, Hkv, Skv, D, blk):
+    ks = keys(6)
+    nb = Skv // blk
+    k = jax.random.normal(ks[0], (B, Hkv, Skv, D))
+    v = jax.random.normal(ks[1], (B, Hkv, Skv, D))
+    kq, ksc = ops.quantize_kv_blocks(k, blk)
+    vq, vsc = ops.quantize_kv_blocks(v, blk)
+    q = jax.random.normal(ks[2], (B, Hq, D))
+    valid = jnp.arange(nb)[None] < jnp.asarray(
+        [[nb]] if B == 1 else [[nb], [max(nb // 2, 1)]])
+    Tl = 32
+    tk = jax.random.normal(ks[3], (B, Hkv, Tl, D))
+    tv = jax.random.normal(ks[4], (B, Hkv, Tl, D))
+    tl = jnp.asarray([7] if B == 1 else [7, 19])
+    out = ops.hybrid_decode(q, kq, vq, ksc, vsc, valid, tk, tv, tl)
+    want = ref.ref_hybrid_decode(q, kq, vq, ksc, vsc, valid, tk, tv, tl)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_hybrid_decode_zone_map_prune_is_conservative():
+    """skip_eps>0 drops only blocks that cannot matter: output stays close
+    to exact when the pruned blocks' bounds are far below the max.
+
+    The hot block must be hot in *score*, not just in norm (the sketch
+    bounds |score|): q and the planted block live in the positive orthant
+    so q·k is genuinely large there."""
+    ks = keys(6)
+    B, Hq, Hkv, Skv, D, blk = 1, 4, 2, 512, 64, 64
+    k = jax.random.normal(ks[0], (B, Hkv, Skv, D)) * 0.05
+    k = k.at[:, :, 64:128].set(
+        jnp.abs(jax.random.normal(ks[5], (B, Hkv, 64, D))) * 3.0)
+    v = jax.random.normal(ks[1], (B, Hkv, Skv, D))
+    kq, ksc = ops.quantize_kv_blocks(k, blk)
+    vq, vsc = ops.quantize_kv_blocks(v, blk)
+    q = jnp.abs(jax.random.normal(ks[2], (B, Hq, D)))
+    valid = jnp.ones((B, Skv // blk), bool)
+    tk = jnp.zeros((B, Hkv, 16, D)); tv = jnp.zeros((B, Hkv, 16, D))
+    tl = jnp.zeros((B,), jnp.int32)
+    sketches = ref.ref_block_sketch(k, blk)
+    exact = ops.hybrid_decode(q, kq, vq, ksc, vsc, valid, tk, tv, tl)
+    pruned = ops.hybrid_decode(q, kq, vq, ksc, vsc, valid, tk, tv, tl,
+                               sketches, skip_eps=1e-6)
+    np.testing.assert_allclose(pruned, exact, atol=5e-3, rtol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,h,dh,n,chunk", [
+    (2, 128, 4, 16, 16, 32),
+    (1, 256, 2, 32, 64, 64),
+    (2, 64, 8, 8, 8, 16),
+])
+def test_ssd_kernel_vs_sequential_oracle(B, S, h, dh, n, chunk):
+    ks = keys(6)
+    x = jax.random.normal(ks[0], (B, S, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, n))
+    Cm = jax.random.normal(ks[4], (B, S, n))
+    D = jnp.ones((h,))
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    want = ref.ref_ssd(x, dt, A, Bm, Cm, D_skip=D)
+    np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-3)
+
+
+def test_ssd_chunked_equals_sequential():
+    ks = keys(5)
+    B, S, h, dh, n = 2, 96, 3, 8, 12
+    x = jax.random.normal(ks[0], (B, S, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, n))
+    Cm = jax.random.normal(ks[4], (B, S, n))
+    got = ref.ref_ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    want = ref.ref_ssd(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# columnar scan / dict group-by
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nb,rows", [(4, 128), (8, 256), (1, 128)])
+def test_columnar_scan_kernel(nb, rows):
+    ks = keys(4)
+    deltas = jax.random.randint(ks[0], (nb, rows), 0, 50, jnp.int32)
+    bases = jax.random.randint(ks[1], (nb,), 0, 500, jnp.int32)
+    counts = jnp.full((nb,), rows, jnp.int32).at[-1].set(rows // 2)
+    vals = jax.random.normal(ks[2], (nb, rows))
+    for lo, hi in ((100, 400), (0, 1000), (480, 481)):
+        out = ops.columnar_scan(deltas, bases, counts,
+                                jnp.int32(lo), jnp.int32(hi), vals)
+        want = ref.ref_columnar_scan(deltas, bases, counts,
+                                     jnp.int32(lo), jnp.int32(hi), vals)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(want[0]))
+        np.testing.assert_allclose(np.asarray(out[1]), np.asarray(want[1]),
+                                   atol=1e-4, rtol=1e-5)
+        if int(out[0]) > 0:   # empty selection: min/max sentinels
+            # (±1e30 kernel vs ±inf ref) are semantically equal
+            for a, b in zip(out[2:], want[2:]):
+                np.testing.assert_allclose(np.asarray(a, np.float32),
+                                           np.asarray(b, np.float32),
+                                           atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("N,ndv", [(512, 8), (2048, 16), (1024, 128)])
+def test_dict_groupby_kernel(N, ndv):
+    ks = keys(2)
+    codes = jax.random.randint(ks[0], (N,), 0, ndv, jnp.int32)
+    vals = jax.random.normal(ks[1], (N,))
+    sums, counts = ops.dict_groupby(codes, vals, ndv=ndv)
+    wsums, wcounts = ref.ref_dict_groupby(codes, vals, ndv)
+    np.testing.assert_allclose(sums, wsums, atol=1e-3, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(wcounts))

@@ -1,0 +1,218 @@
+"""Integration: trainer fault tolerance, scheduler behaviour, data pipeline."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, TokenStore, synth_corpus
+from repro.models import transformer as T
+from repro.serve.scheduler import Request, Scheduler, ServeConfig
+from repro.sharding import MeshRules
+from repro.train import Trainer, TrainConfig
+
+RULES = MeshRules()
+
+
+@pytest.fixture(scope="module")
+def reduced_cfg():
+    return get_config("llama3_2_3b").reduced()
+
+
+@pytest.fixture(scope="module")
+def corpus(reduced_cfg):
+    st = TokenStore(reduced_cfg.vocab_size)
+    synth_corpus(st, n_docs=80, seed=11)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_batches_deterministic(corpus):
+    dc = DataConfig(seq_len=64, global_batch=2, seed=5)
+    a = next(corpus.batches(dc))
+    b = next(corpus.batches(dc))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_filter_pushdown_respects_quality(corpus):
+    dc = DataConfig(seq_len=64, global_batch=2, min_quality=0.8)
+    docs = corpus.select_docs(dc)
+    table, _ = corpus.meta.scan()
+    qual = {int(r["doc_id"]): float(r["quality"]) for r in table.rows()}
+    assert len(docs) > 0
+    assert all(qual[int(d[0])] >= 0.8 for d in docs)
+
+
+def test_packing_alignment(corpus):
+    """labels[t] == tokens[t+1] within every packed segment."""
+    dc = DataConfig(seq_len=96, global_batch=2, pack=True)
+    b = next(corpus.batches(dc))
+    toks, labs, segs = b["tokens"], b["labels"], b["segments"]
+    for r in range(toks.shape[0]):
+        for t in range(95):
+            if segs[r, t] != 0 and segs[r, t] == segs[r, t + 1] \
+                    and labs[r, t] >= 0:
+                assert labs[r, t] == toks[r, t + 1]
+
+
+def test_source_stats_mv_matches_recount(corpus):
+    table, _ = corpus.meta.scan()
+    want = {}
+    for r in table.rows():
+        want[int(r["source"])] = want.get(int(r["source"]), 0) + int(r["length"])
+    tot = sum(want.values())
+    got = corpus.source_weights()
+    for s, w in got.items():
+        np.testing.assert_allclose(w, want[s] / tot, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# trainer fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_nan_guard_skips_and_recovers(reduced_cfg, corpus, tmp_path):
+    dc = DataConfig(seq_len=32, global_batch=2, pack=False, seed=1)
+    tr = Trainer(reduced_cfg,
+                 TrainConfig(steps=6, ckpt_dir=str(tmp_path), window_size=3))
+    tr.init()
+
+    real = tr.step_fn
+    calls = {"n": 0}
+
+    def poisoned(params, opt, batch):
+        p, o, m = real(params, opt, batch)
+        calls["n"] += 1
+        if calls["n"] == 3:                # one poisoned step
+            m = dict(m)
+            m["loss"] = jnp.asarray(float("nan"))
+        return p, o, m
+
+    tr.step_fn = poisoned
+    out = tr.fit(corpus.batches(dc))
+    assert out["final_step"] == 6
+    assert out["skipped"] == 1
+    assert any(e[0] == "nan_skip" for e in out["events"])
+
+
+def test_straggler_detection(reduced_cfg, corpus, tmp_path):
+    import time as _time
+    dc = DataConfig(seq_len=32, global_batch=2, pack=False, seed=2)
+    flagged = []
+    tr = Trainer(reduced_cfg,
+                 TrainConfig(steps=6, ckpt_dir=str(tmp_path),
+                             straggler_factor=2.0),
+                 straggler_hook=lambda s, ms: flagged.append(s))
+    tr.init()
+    real = tr.step_fn
+    calls = {"n": 0}
+
+    def slow(params, opt, batch):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            _time.sleep(0.5)               # simulated straggler host
+        return real(params, opt, batch)
+
+    tr.step_fn = slow
+    out = tr.fit(corpus.batches(dc))
+    assert any(e[0] == "straggler" for e in out["events"])
+    assert flagged  # hook fired
+
+
+def test_restart_replays_to_same_state(reduced_cfg, corpus, tmp_path):
+    dc = DataConfig(seq_len=32, global_batch=2, pack=False, seed=3)
+    t1 = Trainer(reduced_cfg, TrainConfig(
+        steps=8, ckpt_dir=str(tmp_path), baseline_every=4, delta_every=2))
+    t1.init()
+    t1.fit(corpus.batches(dc))
+    w1 = np.asarray(jax.tree.leaves(t1.state["params"])[0])
+
+    t2 = Trainer(reduced_cfg, TrainConfig(
+        steps=8, ckpt_dir=str(tmp_path), baseline_every=4, delta_every=2))
+    assert t2.restore()
+    assert t2.state["step"] == 8
+    w2 = np.asarray(jax.tree.leaves(t2.state["params"])[0])
+    np.testing.assert_allclose(w1, w2, atol=1e-6)
+
+
+def test_dashboard_mv_windows(reduced_cfg, corpus, tmp_path):
+    dc = DataConfig(seq_len=32, global_batch=2, pack=False, seed=4)
+    tr = Trainer(reduced_cfg, TrainConfig(steps=6, ckpt_dir=str(tmp_path),
+                                          window_size=2))
+    tr.init()
+    out = tr.fit(corpus.batches(dc))
+    tbl = out["dashboard"]
+    n_total = sum(int(tbl.row(i)["n"]) for i in range(tbl.nrows))
+    assert n_total == 6
+
+
+# ---------------------------------------------------------------------------
+# serving scheduler
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served(reduced_cfg):
+    params = T.init_params(reduced_cfg, jax.random.PRNGKey(0))
+    return reduced_cfg, params
+
+
+def isolated_generate(cfg, params, prompt, max_new):
+    cache = T.init_cache(cfg, 1, 256)
+    tok = None
+    for t in prompt:
+        logits, cache = T.decode_step(cfg, RULES, params,
+                                      jnp.asarray([[t]]), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+    out = []
+    for _ in range(max_new):
+        out.append(tok)
+        logits, cache = T.decode_step(cfg, RULES, params,
+                                      jnp.asarray([[tok]]), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+    return out
+
+
+def test_continuous_batching_matches_isolated(served):
+    cfg, params = served
+    sch = Scheduler(cfg, RULES, params,
+                    ServeConfig(batch_slots=3, max_len=128, prefix_len=64))
+    prompts = [[1, 2, 3, 4, 5], [9, 8, 7], [4, 4, 4, 4]]
+    for i, p in enumerate(prompts):
+        sch.submit(Request(rid=i, tenant="t", prompt=p, max_new=5))
+    done = sorted(sch.run(), key=lambda r: r.rid)
+    assert len(done) == 3
+    for r in done:
+        assert r.out == isolated_generate(cfg, params, r.prompt, 5)
+
+
+def test_prefix_mv_hit_gives_same_output(served):
+    cfg, params = served
+    shared = list(range(1, 9))             # multiple of prefix_len=8
+    s1 = Scheduler(cfg, RULES, params,
+                   ServeConfig(batch_slots=1, max_len=128, prefix_len=8))
+    s1.submit(Request(rid=0, tenant="t", prompt=shared + [42], max_new=4))
+    s1.submit(Request(rid=1, tenant="t", prompt=shared + [43], max_new=4))
+    done = sorted(s1.run(), key=lambda r: r.rid)
+    assert done[1].prefix_hit               # second request reused the MV
+    want = isolated_generate(cfg, params, shared + [43], 4)
+    assert done[1].out == want
+
+
+def test_tenant_budget_isolation(served):
+    cfg, params = served
+    sch = Scheduler(cfg, RULES, params,
+                    ServeConfig(batch_slots=2, max_len=128,
+                                tenant_budget=24))
+    for i in range(3):
+        sch.submit(Request(rid=i, tenant="greedy",
+                           prompt=[1, 2, 3, 4], max_new=8))
+    sch.submit(Request(rid=9, tenant="modest", prompt=[5, 6], max_new=4))
+    done = sch.run(max_ticks=120)
+    rids = {r.rid for r in done}
+    assert 9 in rids                        # modest tenant not starved
+    assert sch.metrics["rejected_budget"] > 0
