@@ -1,10 +1,18 @@
 """Benchmark driver: one suite per paper table/figure + the roofline table.
 
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--suite NAME]
+                                          [--json OUT.json]
+
+``--json`` switches to smoke mode: each selected suite that exposes a
+``smoke()`` function runs a tiny-N self-checking variant (e.g. the
+vectorized suite asserts pushdown ≥ 1.0× vs full decode) and the collected
+metrics are written to the given JSON file, so the perf trajectory lands in
+``BENCH_*.json`` across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -20,11 +28,45 @@ SUITES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, help="substring suite filter")
+    ap.add_argument("--suite", default=None,
+                    help="substring suite filter (alias of --only)")
+    ap.add_argument("--json", default=None,
+                    help="smoke mode: run suites' smoke() and write metrics")
     args = ap.parse_args()
+    pick = args.only or args.suite
     failures = []
+
+    if args.json:
+        results = {}
+        for name, mod_name in SUITES:
+            if pick and pick.lower() not in name.lower():
+                continue
+            mod = __import__(mod_name, fromlist=["run"])
+            if not hasattr(mod, "smoke"):
+                continue
+            t0 = time.time()
+            try:
+                results[name] = mod.smoke()
+                results[name]["smoke_wall_s"] = round(time.time() - t0, 3)
+                print(f"[{name}] smoke ok: {results[name]}")
+            except Exception as e:
+                failures.append(name)
+                print(f"[{name}] smoke FAILED: {e}")
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+        if failures:
+            print("FAILED smoke suites:", failures)
+            sys.exit(1)
+        if not results:
+            print(f"no suite matching {pick!r} exposes smoke(); "
+                  f"available: {[n for n, _ in SUITES]}")
+            sys.exit(1)
+        return
+
     for name, mod_name in SUITES:
-        if args.only and args.only not in name:
+        if pick and pick.lower() not in name.lower():
             continue
         t0 = time.time()
         try:

@@ -43,6 +43,14 @@ class EncodedColumn:
     def decode(self) -> np.ndarray:
         raise NotImplementedError
 
+    def decode_idx(self, idx: np.ndarray) -> np.ndarray:
+        """Late materialization: decode only the rows in ``idx``.
+
+        Encodings with random access (plain/delta/dict/const) override this
+        with an O(|idx|) gather; the base fallback decodes the whole block.
+        """
+        return self.decode()[idx]
+
     def nbytes(self) -> int:
         raise NotImplementedError
 
@@ -86,6 +94,9 @@ class PlainEncoded(EncodedColumn):
     def decode(self):
         return self.values
 
+    def decode_idx(self, idx):
+        return self.values[idx]
+
     def nbytes(self):
         return self.values.nbytes
 
@@ -128,6 +139,9 @@ class DeltaFOREncoded(EncodedColumn):
 
     def decode(self):
         return (self.deltas.astype(np.int64) + self.base).astype(self.out_dtype)
+
+    def decode_idx(self, idx):
+        return (self.deltas[idx].astype(np.int64) + self.base).astype(self.out_dtype)
 
     def nbytes(self):
         return self.deltas.nbytes + 8
@@ -182,6 +196,9 @@ class DictEncoded(EncodedColumn):
     def decode(self):
         return self.dictionary[self.codes]
 
+    def decode_idx(self, idx):
+        return self.dictionary[self.codes[idx]]
+
     def nbytes(self):
         return self.dictionary.nbytes + self.codes.nbytes
 
@@ -220,6 +237,9 @@ class ConstEncoded(EncodedColumn):
 
     def decode(self):
         return np.broadcast_to(self.value, (self.count,)).copy()
+
+    def decode_idx(self, idx):
+        return np.broadcast_to(self.value, (len(idx),)).copy()
 
     def nbytes(self):
         return int(self.value.nbytes) + 4

@@ -75,24 +75,25 @@ class ScalarEngine:
             out = [{c: r[c] for c in (q.project or table.schema.names)} for r in rows]
         else:
             groups: Dict[Tuple, Dict[str, Any]] = {}
+            # accumulate once per distinct column: two aggs over the same
+            # column (e.g. sum(v) + avg(v)) share one accumulator
+            agg_cols = sorted({a.column for a in q.aggs if a.column})
             for r in rows:
                 k = tuple(r[c] for c in q.group_by)
                 st = groups.setdefault(k, {"_n": 0, "_sums": {}, "_mins": {},
                                            "_maxs": {}, "_cnts": {}})
                 st["_n"] += 1
-                for a in q.aggs:
-                    if a.column is None:
-                        continue
-                    v = r[a.column]
+                for cname in agg_cols:
+                    v = r[cname]
                     if v is None:
                         continue
-                    st["_cnts"][a.column] = st["_cnts"].get(a.column, 0) + 1
+                    st["_cnts"][cname] = st["_cnts"].get(cname, 0) + 1
                     if isinstance(v, (int, float)):
-                        st["_sums"][a.column] = st["_sums"].get(a.column, 0) + v
-                    mn = st["_mins"].get(a.column)
-                    st["_mins"][a.column] = v if mn is None or v < mn else mn
-                    mx = st["_maxs"].get(a.column)
-                    st["_maxs"][a.column] = v if mx is None or v > mx else mx
+                        st["_sums"][cname] = st["_sums"].get(cname, 0) + v
+                    mn = st["_mins"].get(cname)
+                    st["_mins"][cname] = v if mn is None or v < mn else mn
+                    mx = st["_maxs"].get(cname)
+                    st["_maxs"][cname] = v if mx is None or v > mx else mx
             out = []
             for k, st in groups.items():
                 r = {c: v for c, v in zip(q.group_by, k)}
@@ -144,13 +145,19 @@ class VectorEngine:
         self.batch_size = batch_size
         self.low_ndv_threshold = low_ndv_threshold
 
-    def execute(self, table: Table, q: Query) -> List[Dict[str, Any]]:
-        n = len(table)
+    @staticmethod
+    def columns_needed(q: Query, all_names: Sequence[str]) -> set:
         needed = set(c for c in q.group_by)
         needed |= {a.column for a in q.aggs if a.column}
         needed |= {p.column for p in q.preds}
-        needed |= set(q.project or (table.schema.names if not q.aggs else ()))
-        cols = {c: table.col(c) for c in needed}
+        needed |= set(q.project or (all_names if not q.aggs else ()))
+        return needed
+
+    def execute(self, table: Table, q: Query) -> List[Dict[str, Any]]:
+        # Operator pipeline: scan → filter → late-materialize → finalize.
+        n = len(table)
+        cols = {c: table.col(c)
+                for c in self.columns_needed(q, table.schema.names)}
 
         # ---- filter: batch-at-a-time with attribute flags ----
         sel: Optional[np.ndarray] = None
@@ -168,17 +175,25 @@ class VectorEngine:
             v = cols[name].values
             return v if idx is None else v[idx]
 
+        return self.finalize(q, c, n if idx is None else idx.shape[0],
+                             table.schema.names)
+
+    def finalize(self, q: Query, c: Callable[[str], np.ndarray], n_rows: int,
+                 all_names: Sequence[str]) -> List[Dict[str, Any]]:
+        """Terminal pipeline stages over already-filtered columns: project /
+        flat aggregate / group-by, then sort + limit.  ``c(name)`` returns the
+        filtered (late-materialized) values of one column; shared by the
+        in-memory vectorized path and the block-pushdown executor."""
         if not q.aggs:
-            names = list(q.project or table.schema.names)
+            names = list(q.project or all_names)
             data = {nm: c(nm) for nm in names}
             m = next(iter(data.values())).shape[0] if data else 0
             out = [{nm: _item(data[nm][i]) for nm in names} for i in range(m)]
         elif not q.group_by:
             out = [self._agg_flat({a: c(a.column) for a in q.aggs if a.column},
-                                  q.aggs,
-                                  n_rows=(n if idx is None else idx.shape[0]))]
+                                  q.aggs, n_rows=n_rows)]
         else:
-            out = self._groupby(q, c, n if idx is None else idx.shape[0])
+            out = self._groupby(q, c, n_rows)
 
         if q.sort_by:
             out = self._sort(out, q.sort_by)
@@ -221,12 +236,8 @@ class VectorEngine:
         else:
             try:
                 packed = pack_sort_keys([k for k in keys])
-                uniq, codes = np.unique(packed, return_inverse=True)
-                first = np.zeros(uniq.shape[0], np.int64)
-                seen = np.full(uniq.shape[0], -1, np.int64)
-                order = np.arange(codes.shape[0])
-                np.minimum.at(seen, codes, order)
-                first = seen
+                uniq, first, codes = np.unique(packed, return_index=True,
+                                               return_inverse=True)
                 key_rows = [tuple(_item(k[i]) for k in keys) for i in first]
             except ValueError:
                 stacked = np.rec.fromarrays(keys)
@@ -249,6 +260,9 @@ class VectorEngine:
                 s = np.bincount(codes, weights=v.astype(np.float64), minlength=G)
                 agg_results[a.alias] = s / np.maximum(counts, 1) if a.op == "avg" else s
             elif a.op in ("min", "max"):
+                if v.size == 0:
+                    agg_results[a.alias] = np.empty((0,), v.dtype)
+                    continue
                 fill = v.max() if a.op == "min" else v.min()
                 acc = np.full(G, fill, v.dtype)
                 (np.minimum if a.op == "min" else np.maximum).at(acc, codes, v)
@@ -297,29 +311,59 @@ def hash_join(left: Table, right: Table, lkey: str, rkey: str,
     lk, rk = left.col(lkey).values, right.col(rkey).values
     ls = np.argsort(lk, kind="stable")
     rs = np.argsort(rk, kind="stable")
-    out = []
-    i = j = 0
     lks, rks = lk[ls], rk[rs]
-    while i < lks.shape[0] and j < rks.shape[0]:
-        if lks[i] < rks[j]:
-            i += 1
-        elif lks[i] > rks[j]:
-            j += 1
-        else:
-            v = lks[i]
-            i2 = i
-            while i2 < lks.shape[0] and lks[i2] == v:
-                i2 += 1
-            j2 = j
-            while j2 < rks.shape[0] and rks[j2] == v:
-                j2 += 1
-            for a in range(i, i2):
-                la = left.row(int(ls[a]))
-                for b in range(j, j2):
-                    rb = {f"r_{k}": x for k, x in right.row(int(rs[b])).items()}
-                    out.append({**la, **rb})
-            i, j = i2, j2
+    # Matched-run arithmetic replaces the per-pair Python emission loop:
+    # for each common key, the output segment is the cartesian product of the
+    # left and right runs, laid out left-major (same order as the old loop).
+    vals = np.intersect1d(lks, rks)
+    l_lo = np.searchsorted(lks, vals, "left")
+    l_hi = np.searchsorted(lks, vals, "right")
+    r_lo = np.searchsorted(rks, vals, "left")
+    r_hi = np.searchsorted(rks, vals, "right")
+    lcnt, rcnt = l_hi - l_lo, r_hi - r_lo
+    pairs = lcnt * rcnt
+    total = int(pairs.sum())
+    if total == 0:
+        return []
+    key_id = np.repeat(np.arange(vals.shape[0]), pairs)
+    seg_start = np.concatenate([[0], np.cumsum(pairs)[:-1]])
+    t = np.arange(total) - seg_start[key_id]          # offset within segment
+    rc = rcnt[key_id]
+    a, b = t // rc, t % rc
+    lidx = ls[l_lo[key_id] + a]
+    ridx = rs[r_lo[key_id] + b]
+    # Bulk column gather, then emit dicts (null-aware, as Table.row was).
+    gathered: List[Tuple[str, np.ndarray, Optional[np.ndarray]]] = []
+    for name in left.schema.names:
+        col = left.col(name)
+        gathered.append((name, col.values[lidx],
+                         None if col.nulls is None else col.nulls[lidx]))
+    for name in right.schema.names:
+        col = right.col(name)
+        gathered.append((f"r_{name}", col.values[ridx],
+                         None if col.nulls is None else col.nulls[ridx]))
+    out = []
+    for i in range(total):
+        out.append({nm: (None if nulls is not None and nulls[i]
+                         else _item(vals_[i]))
+                    for nm, vals_, nulls in gathered})
     return out
+
+
+def make_engine(kind: str, **kw):
+    """Planner entry point: 'scalar' | 'vectorized' | 'pushdown'.
+
+    'pushdown' returns the block-granular executor over an ``LSMStore``
+    (``core.pushdown.PushdownExecutor``); the other two operate on a
+    fully-decoded ``Table``."""
+    if kind == "scalar":
+        return ScalarEngine()
+    if kind == "vectorized":
+        return VectorEngine(**kw)
+    if kind == "pushdown":
+        from .pushdown import PushdownExecutor
+        return PushdownExecutor(**kw)
+    raise ValueError(f"unknown engine kind {kind!r}")
 
 
 def _item(v):

@@ -28,6 +28,7 @@ import numpy as np
 from .encoding import EncodedColumn, choose_encoding
 from .relation import And, Column, ColType, Predicate, Schema, Table
 from .skipping import Sketch, SkippingIndex, Verdict, DEFAULT_BLOCK_ROWS
+from .vec import BatchAttrs
 
 
 class DmlType(enum.Enum):
@@ -149,6 +150,26 @@ class ColumnSSTable:
 
 
 @dataclasses.dataclass
+class BlockView:
+    """One block of the columnar baseline, *without* decoding: per-column
+    encoded payloads + per-column leaf sketches + batch attrs.  This is the
+    unit the pushdown executor iterates — zone-map pruning reads ``sketches``,
+    encoded-domain predicates read ``encoded``, and late materialization
+    calls ``encoded[c].decode_idx(sel)`` only for surviving rows."""
+
+    bid: int                              # block ordinal
+    lo: int                               # first row (global baseline index)
+    hi: int                               # one past last row
+    encoded: Dict[str, EncodedColumn]
+    sketches: Dict[str, Sketch]
+    attrs: BatchAttrs
+
+    @property
+    def nrows(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass
 class VirtualSSTable:
     """Baseline = per-column SSTables glued into one virtual SSTable, with a
     sorted pk array as the row locator."""
@@ -165,6 +186,30 @@ class VirtualSSTable:
 
     def nbytes(self) -> int:
         return sum(c.nbytes() for c in self.cols.values()) + self.pks.nbytes
+
+    @property
+    def n_blocks(self) -> int:
+        if self.nrows == 0:
+            return 0
+        return (self.nrows + self.block_rows - 1) // self.block_rows
+
+    def block_bounds(self, b: int) -> Tuple[int, int]:
+        lo = b * self.block_rows
+        return lo, min(lo + self.block_rows, self.nrows)
+
+    def block_view(self, b: int, columns: Sequence[str]) -> BlockView:
+        lo, hi = self.block_bounds(b)
+        encoded = {c: self.cols[c].blocks[b] for c in columns}
+        sketches = {c: self.cols[c].index.leaf_sketch(b) for c in columns}
+        null_count = max((s.null_count for s in sketches.values()), default=0)
+        return BlockView(b, lo, hi, encoded, sketches,
+                         BatchAttrs.for_block(null_count))
+
+    def iter_blocks(self, columns: Sequence[str]) -> Iterable[BlockView]:
+        """Block-iteration API for the pushdown executor: encoded blocks plus
+        per-block sketches, no decoding."""
+        for b in range(self.n_blocks):
+            yield self.block_view(b, columns)
 
     def locate(self, pk: Any) -> int:
         """Row index of pk, or -1."""
@@ -403,6 +448,16 @@ class LSMStore:
                 out[pk] = v
         return {pk: v for pk, v in out.items() if v.ts > self.baseline.version}
 
+    def live_incremental_rows(self, inc: Dict[Any, Version],
+                              preds: Sequence[Predicate] = ()
+                              ) -> List[Dict[str, Any]]:
+        """Row-format predicate filter over live (non-DELETE) incremental
+        versions — the merge-on-read half shared by ``scan`` and the
+        pushdown executor."""
+        return [v.row for v in inc.values()
+                if v.op != DmlType.DELETE
+                and _row_matches(v.row, preds, self.schema)]
+
     def _merged_rows(self, ts: int) -> Dict[Any, Dict[str, Any]]:
         rows: Dict[Any, Dict[str, Any]] = {}
         base = self.baseline
@@ -489,19 +544,7 @@ class LSMStore:
             base_cols = {name: None for name in columns}
 
         # -- incremental rows: row-at-a-time predicate eval (row format) ----
-        inc_rows: List[Dict[str, Any]] = []
-        for pk, v in inc.items():
-            if v.op == DmlType.DELETE:
-                continue
-            row = v.row
-            ok = True
-            for p in preds:
-                col = Column.from_values(self.schema.spec(p.column), [row[p.column]])
-                if not p.eval(col)[0]:
-                    ok = False
-                    break
-            if ok:
-                inc_rows.append(row)
+        inc_rows = self.live_incremental_rows(inc, preds)
         sub_schema = Schema(tuple(self.schema.spec(c) for c in columns))
         out_cols: Dict[str, Column] = {}
         for name in columns:

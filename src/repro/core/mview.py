@@ -224,13 +224,17 @@ class MaterializedAggView:
 
     def full_refresh(self, ts: Optional[int] = None) -> int:
         ts = self.base.current_ts if ts is None else ts
-        hidden: Dict[Tuple[Any, ...], _GroupState] = {}
-        tbl, _ = self.base.scan(self.defn.preds, ts, columns=self._cols_needed())
-        for row in tbl.rows():
-            k = self._group_key(row)
-            g = hidden.setdefault(k, _GroupState(k))
-            self._apply_row(g, row, +1)
-        self.stats["rows_processed"] += len(tbl)
+        hidden = self._pushdown_groups(ts)
+        if hidden is None:
+            # Row-at-a-time fallback (incremental rows containing NULLs).
+            hidden = {}
+            tbl, _ = self.base.scan(self.defn.preds, ts,
+                                    columns=self._cols_needed())
+            for row in tbl.rows():
+                k = self._group_key(row)
+                g = hidden.setdefault(k, _GroupState(k))
+                self._apply_row(g, row, +1)
+            self.stats["rows_processed"] += len(tbl)
         self.stats["full_refreshes"] += 1
         # atomic swap of hidden table with the live container:
         self.groups = hidden
@@ -239,6 +243,55 @@ class MaterializedAggView:
         if self.mlog is not None:
             self.stats["mlog_purged"] += self.mlog.purge_upto(ts)
         return ts
+
+    def _pushdown_groups(self, ts: int
+                         ) -> Optional[Dict[Tuple[Any, ...], "_GroupState"]]:
+        """Compute the hidden container via the block-pushdown executor
+        (zone-map pruning + encoded-domain predicates + late
+        materialization) instead of a full decode + per-row Python loop.
+
+        Returns None when incremental rows carry NULLs in needed columns —
+        the vectorized path has no null bitmap there, so the row path's
+        per-column null skipping cannot be reproduced — or when min/max is
+        tracked over a STR column (no numpy min/max ufunc for bytes)."""
+        from .engine import QAgg, Query
+        from .pushdown import PushdownExecutor
+        needed = self._cols_needed()
+        for v in self.base._incremental_effective(ts).values():
+            if v.row is not None and any(v.row.get(c) is None for c in needed):
+                return None
+        for col, track in self._agg_columns().items():
+            if track and self.base.schema.spec(col).ctype == ColType.STR:
+                return None
+        aggs: List[QAgg] = [QAgg("count", None, "__n")]
+        for col, track in sorted(self._agg_columns().items()):
+            spec = self.base.schema.spec(col)
+            aggs.append(QAgg("count", col, f"__cnt_{col}"))
+            if spec.ctype in (ColType.INT, ColType.FLOAT):
+                aggs.append(QAgg("sum", col, f"__sum_{col}"))
+            if track:
+                aggs.append(QAgg("min", col, f"__min_{col}"))
+                aggs.append(QAgg("max", col, f"__max_{col}"))
+        q = Query(preds=tuple(self.defn.preds),
+                  group_by=tuple(self.defn.group_by), aggs=tuple(aggs))
+        rows = PushdownExecutor().execute(self.base, q, ts)
+        hidden: Dict[Tuple[Any, ...], _GroupState] = {}
+        for r in rows:
+            n = int(r["__n"])
+            if n == 0:        # group-less query over an empty store
+                continue
+            k = tuple(r[c] for c in self.defn.group_by)
+            g = _GroupState(k, count_star=n)
+            for col, track in self._agg_columns().items():
+                g.counts[col] = int(r[f"__cnt_{col}"])
+                if f"__sum_{col}" in r:
+                    g.sums[col] = r[f"__sum_{col}"]
+                if track:
+                    g.mins[col] = r[f"__min_{col}"]
+                    g.maxs[col] = r[f"__max_{col}"]
+            hidden[k] = g
+            self.stats["rows_processed"] += n
+        return hidden
 
     # ---- incremental refresh (in-place, algebraic) --------------------------
 

@@ -181,6 +181,11 @@ class SkippingIndex:
         self.root = level[0] if level else -1
         self.n_blocks = len(leaf_sketches)
 
+    def leaf_sketch(self, b: int) -> Sketch:
+        """Sketch of data block ``b`` (leaves are the first ``n_blocks`` nodes,
+        appended in block order by ``__init__``)."""
+        return self.nodes[b].sketch
+
     @staticmethod
     def build(values: np.ndarray, nulls: Optional[np.ndarray] = None,
               block_rows: int = DEFAULT_BLOCK_ROWS,

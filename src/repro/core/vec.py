@@ -41,6 +41,13 @@ class BatchAttrs:
     def conservative() -> "BatchAttrs":
         return BatchAttrs(has_null=True, all_active=False)
 
+    @staticmethod
+    def for_block(null_count: int, all_active: bool = True) -> "BatchAttrs":
+        """Attrs for one storage block, derived from its skipping-index
+        sketch: clean blocks (no nulls, nothing filtered) let every
+        downstream operator skip mask/null handling (§V-B.1)."""
+        return BatchAttrs(has_null=null_count > 0, all_active=all_active)
+
 
 @dataclasses.dataclass
 class FixedBatch:

@@ -6,10 +6,12 @@ hybrid_decode   — C1 merge-on-read decode: int8 columnar baseline + row tail,
 ssd_scan        — Mamba2 SSD chunked scan
 columnar_scan   — S1+S2 filter/aggregate pushdown over encoded blocks
 dict_groupby    — low-NDV group-by pushdown (one-hot MXU formulation)
+fused_scan_agg  — BETWEEN filter in the encoded domain fused with grouped
+                  count/sum/min/max over dictionary codes (q1/q3 shapes)
 
 Every kernel has a pure-jnp oracle in ref.py; ops.py holds the jitted
 dispatching wrappers.
 """
 from . import ops, ref
-from .ops import (columnar_scan, dict_groupby, flash_attention, hybrid_decode,
-                  quantize_kv_blocks, ssd_scan)
+from .ops import (columnar_scan, dict_groupby, flash_attention,
+                  fused_scan_agg, hybrid_decode, quantize_kv_blocks, ssd_scan)

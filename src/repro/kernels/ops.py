@@ -23,6 +23,7 @@ from .hybrid_decode import hybrid_decode as _hybrid_decode
 from .ssd_scan import ssd_scan as _ssd
 from .columnar_scan import columnar_scan as _columnar_scan
 from .dict_groupby import dict_groupby as _dict_groupby
+from .fused_scan_agg import fused_scan_agg as _fused_scan_agg
 
 
 def _on_tpu() -> bool:
@@ -76,6 +77,16 @@ def columnar_scan(deltas, bases, counts, lo, hi, values=None, block_mask=None):
         return ref.ref_columnar_scan(deltas, bases, counts, lo, hi, values)
     return _columnar_scan(deltas, bases, counts, lo, hi, values, block_mask,
                           interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("ndv",))
+def fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, *, ndv: int,
+                   block_mask=None):
+    if _force_ref():
+        return ref.ref_fused_scan_agg(deltas, bases, counts, lo, hi, codes,
+                                      values, ndv, block_mask)
+    return _fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, ndv,
+                           block_mask, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("ndv", "block_n"))

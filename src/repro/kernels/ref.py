@@ -364,3 +364,32 @@ def ref_dict_groupby(codes: jax.Array, values: jax.Array, ndv: int
     sums = one_hot.T @ values.astype(jnp.float32)
     counts = one_hot.sum(axis=0).astype(jnp.int32)
     return sums, counts
+
+
+# ---------------------------------------------------------------------------
+# Fused filter + grouped aggregation over encoded blocks
+# ---------------------------------------------------------------------------
+
+
+def ref_fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
+                       lo, hi, codes: jax.Array, values: jax.Array, ndv: int,
+                       block_mask: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Grouped (count, sum, min, max) of ``values`` per group code, over rows
+    whose decoded filter column lies in [lo, hi].  Same layout/semantics as
+    ``fused_scan_agg.py``: deltas/codes/values are [Nb, Bk], bases/counts are
+    [Nb]; empty groups report count 0, sum 0, min +inf, max -inf."""
+    Nb, Bk = deltas.shape
+    decoded = deltas.astype(jnp.int32) + bases[:, None].astype(jnp.int32)
+    valid = jnp.arange(Bk)[None, :] < counts[:, None]
+    if block_mask is not None:
+        valid = valid & block_mask[:, None]
+    sel = valid & (decoded >= lo) & (decoded <= hi)
+    one_hot = jax.nn.one_hot(codes.reshape(-1), ndv, dtype=jnp.float32)
+    one_hot = one_hot * sel.reshape(-1, 1)
+    vals = values.astype(jnp.float32).reshape(-1)
+    cnts = one_hot.sum(axis=0)
+    sums = one_hot.T @ vals
+    mins = jnp.where(one_hot > 0, vals[:, None], jnp.inf).min(axis=0)
+    maxs = jnp.where(one_hot > 0, vals[:, None], -jnp.inf).max(axis=0)
+    return cnts.astype(jnp.int32), sums, mins, maxs

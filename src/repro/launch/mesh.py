@@ -26,20 +26,29 @@ from repro.models.config import ModelConfig, ShapeConfig
 from repro.sharding import MeshRules
 
 
+def make_mesh_compat(shape: Tuple[int, ...], axes: Tuple[str, ...]
+                     ) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist in newer releases; older ones
+    default to Auto axes anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_smoke_mesh(shape: Tuple[int, ...] = (2, 2),
                     axes: Tuple[str, ...] = ("data", "model")
                     ) -> jax.sharding.Mesh:
     """Tiny mesh for CPU multi-device tests (requires host-device override)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_rules(cfg: ModelConfig, shape: Optional[ShapeConfig],

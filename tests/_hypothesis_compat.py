@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for mixed test modules.
+
+``from tests._hypothesis_compat import HealthCheck, given, settings, st``
+behaves exactly like the real hypothesis imports when the package is
+installed (requirements-dev.txt).  When it is missing, property tests
+degrade to a clean per-test skip instead of killing collection of the whole
+module — deterministic tests in the same file keep running.  Modules that
+contain *only* property tests should use ``pytest.importorskip`` instead
+(see test_core_properties.py).
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy-building expression at module import time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: _AnyStrategy()
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _AnyStrategy()
+    HealthCheck = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -1,16 +1,11 @@
 """Core Mercury behaviour: LSM merge-on-read, encodings, skipping, engine.
 
-Property tests (hypothesis) pin the paper's central invariants:
-  * merge-on-read over (baseline ⊕ incremental) ≡ a naive replay oracle,
-    under any interleaving of DML and compactions (§III-A);
-  * encodings round-trip and evaluate predicates without decompression
-    (§III-E);
-  * the skipping index never produces false negatives (§III-F);
-  * the vectorized engine ≡ the scalar engine on random queries (§V).
+Deterministic tests only — the hypothesis property tests live in
+test_core_properties.py and are skipped when hypothesis isn't installed
+(requirements-dev.txt), so the tier-1 suite always collects.
 """
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.encoding import encode_column
 from repro.core.lsm import LSMStore
@@ -24,52 +19,34 @@ SCH = schema(("k", ColType.INT), ("a", ColType.INT), ("b", ColType.FLOAT))
 
 
 # ---------------------------------------------------------------------------
-# LSM merge-on-read == replay oracle (hypothesis)
+# LSM merge-on-read == replay oracle (deterministic seed of the property)
 # ---------------------------------------------------------------------------
 
-ops_strategy = st.lists(
-    st.tuples(
-        st.sampled_from(["insert", "update", "delete", "minor", "major"]),
-        st.integers(0, 19),            # key
-        st.integers(-50, 50),          # value
-    ),
-    min_size=1, max_size=60)
 
-
-@given(ops_strategy)
-@settings(max_examples=60, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-def test_lsm_merge_on_read_equals_oracle(ops):
+def test_lsm_merge_on_read_equals_oracle_seeded(rng):
     store = LSMStore(SCH, block_rows=8)
     oracle = {}
-    for op, k, v in ops:
-        if op == "insert":
-            if k not in oracle:
-                store.insert({"k": k, "a": v, "b": float(v) / 2})
-                oracle[k] = (v, float(v) / 2)
-        elif op == "update":
-            if k in oracle:
-                store.update(k, {"a": v})
-                oracle[k] = (v, oracle[k][1])
-        elif op == "delete":
-            if k in oracle:
-                store.delete(k)
-                del oracle[k]
+    ops = ["insert", "update", "delete", "minor", "major"]
+    for op, k, v in zip(rng.choice(ops, 200, p=[.5, .2, .1, .1, .1]),
+                        rng.integers(0, 19, 200), rng.integers(-50, 50, 200)):
+        k, v = int(k), int(v)
+        if op == "insert" and k not in oracle:
+            store.insert({"k": k, "a": v, "b": float(v) / 2})
+            oracle[k] = (v, float(v) / 2)
+        elif op == "update" and k in oracle:
+            store.update(k, {"a": v})
+            oracle[k] = (v, oracle[k][1])
+        elif op == "delete" and k in oracle:
+            store.delete(k)
+            del oracle[k]
         elif op == "minor":
             store.freeze_memtable()
             store.minor_compact()
-        else:
+        elif op == "major":
             store.major_compact()
     table, _ = store.scan()
-    got = {int(r["k"]): (int(r["a"]), float(r["b"]))
-           for r in table.rows()}
+    got = {int(r["k"]): (int(r["a"]), float(r["b"])) for r in table.rows()}
     assert got == oracle
-    # point reads agree too
-    for k in range(20):
-        row = store.get(k)
-        assert (row is None) == (k not in oracle)
-        if row is not None:
-            assert int(row["a"]) == oracle[k][0]
 
 
 def test_lsm_snapshot_reads_are_stable():
@@ -101,39 +78,45 @@ def test_lsm_baseline_only_scan_skips_merge():
 
 
 # ---------------------------------------------------------------------------
-# encodings (hypothesis round-trip + encoded-domain predicates)
+# encodings: deterministic round-trip + encoded-domain predicates
 # ---------------------------------------------------------------------------
 
-int_cols = st.lists(st.integers(-1000, 1000), min_size=1, max_size=200)
 
-
-@given(int_cols)
-@settings(max_examples=60, deadline=None)
+@pytest.mark.parametrize("vals", [
+    [0], [5, 5, 5, 5], list(range(-100, 100)),
+    [7, -3, 1000, -1000, 7, 7], [1, 2, 3] * 40,
+])
 def test_int_encoding_roundtrip(vals):
     col = Column.from_values(ColumnSpec("x", ColType.INT), vals)
     enc = encode_column(col)
     np.testing.assert_array_equal(enc.decode(), col.values)
 
 
-@given(int_cols, st.integers(-1000, 1000))
-@settings(max_examples=40, deadline=None)
-def test_encoded_domain_predicate_equals_decoded(vals, pivot):
+def test_encoded_domain_predicate_equals_decoded(rng):
+    vals = rng.integers(-1000, 1000, 200).tolist()
     col = Column.from_values(ColumnSpec("x", ColType.INT), vals)
     enc = encode_column(col)
-    for op in (PredOp.EQ, PredOp.LE, PredOp.GT):
-        pred = Predicate("x", op, pivot)
-        got = enc.eval_pred(pred)      # None = encoding can't answer (fine)
-        if got is not None:
-            np.testing.assert_array_equal(got, pred.eval(col))
+    for pivot in (-1000, -17, 0, 400, 999):
+        for op in (PredOp.EQ, PredOp.LE, PredOp.GT, PredOp.BETWEEN):
+            pred = Predicate("x", op, pivot, pivot + 300)
+            got = enc.eval_pred(pred)      # None = encoding can't answer
+            if got is not None:
+                np.testing.assert_array_equal(got, pred.eval(col))
 
 
-@given(st.lists(st.sampled_from(["alpha", "alpine", "alps", "beta", "bet"]),
-                min_size=1, max_size=100))
-@settings(max_examples=40, deadline=None)
-def test_str_encoding_roundtrip(vals):
-    col = Column.from_values(ColumnSpec("s", ColType.STR), vals)
-    enc = encode_column(col)
-    np.testing.assert_array_equal(enc.decode(), col.values)
+def test_encoding_decode_idx_matches_full_decode(rng):
+    """Late materialization: decode_idx(sel) ≡ decode()[sel] per encoding."""
+    cases = [
+        rng.integers(0, 5, 128),                # dict
+        rng.integers(1000, 1064, 128),          # delta/FOR
+        np.full(128, 42, np.int64),             # const
+        rng.integers(-10**6, 10**6, 128),       # plain-ish
+    ]
+    for vals in cases:
+        col = Column.from_values(ColumnSpec("x", ColType.INT), vals.tolist())
+        enc = encode_column(col)
+        sel = np.nonzero(rng.random(128) < 0.2)[0]
+        np.testing.assert_array_equal(enc.decode_idx(sel), enc.decode()[sel])
 
 
 def test_choose_encoding_prefers_dict_for_low_ndv():
@@ -144,37 +127,36 @@ def test_choose_encoding_prefers_dict_for_low_ndv():
 
 
 # ---------------------------------------------------------------------------
-# skipping index: conservative pruning + sketch aggregates
+# skipping index: conservative pruning + sketch aggregates (seeded)
 # ---------------------------------------------------------------------------
 
 
-@given(st.lists(st.integers(-100, 100), min_size=8, max_size=300),
-       st.integers(-100, 100), st.integers(-100, 100))
-@settings(max_examples=60, deadline=None)
-def test_skipping_index_no_false_negatives(vals, lo, hi):
-    lo, hi = min(lo, hi), max(lo, hi)
-    arr = np.asarray(vals, np.int64)
+def test_skipping_index_no_false_negatives(rng):
+    arr = rng.integers(-100, 100, 300).astype(np.int64)
     idx = SkippingIndex.build(arr, block_rows=16)
-    pred = Predicate("x", PredOp.BETWEEN, lo, hi)
-    verdicts = idx.prune(pred)
-    for b in range(len(verdicts)):
-        blk = arr[b * 16:(b + 1) * 16]
-        match = (blk >= lo) & (blk <= hi)
-        if verdicts[b] == Verdict.NONE.value:
-            assert not match.any()     # pruning must be conservative
-        if verdicts[b] == Verdict.ALL.value:
-            assert match.all()
+    for lo, hi in ((-100, 100), (0, 10), (-3, -3), (90, 100)):
+        pred = Predicate("x", PredOp.BETWEEN, lo, hi)
+        verdicts = idx.prune(pred)
+        for b in range(len(verdicts)):
+            blk = arr[b * 16:(b + 1) * 16]
+            match = (blk >= lo) & (blk <= hi)
+            if verdicts[b] == Verdict.NONE.value:
+                assert not match.any()     # pruning must be conservative
+            if verdicts[b] == Verdict.ALL.value:
+                assert match.all()
 
 
-@given(st.lists(st.integers(-100, 100), min_size=8, max_size=300))
-@settings(max_examples=40, deadline=None)
-def test_sketch_aggregates_match_exact(vals):
-    arr = np.asarray(vals, np.int64)
+def test_sketch_aggregates_match_exact(rng):
+    arr = rng.integers(-100, 100, 300).astype(np.int64)
     idx = SkippingIndex.build(arr, block_rows=16)
     assert idx.try_aggregate("min") == arr.min()
     assert idx.try_aggregate("max") == arr.max()
     assert idx.try_aggregate("sum") == arr.sum()
     assert idx.try_aggregate("count_star") == len(arr)
+    for b in range(idx.n_blocks):
+        blk = arr[b * 16:(b + 1) * 16]
+        leaf = idx.leaf_sketch(b)
+        assert leaf.count == len(blk) and leaf.vsum == blk.sum()
 
 
 # ---------------------------------------------------------------------------
@@ -202,3 +184,65 @@ def test_vector_engine_matches_scalar_engine(agg, rng):
     assert gv.keys() == gs.keys()
     for k in gv:
         np.testing.assert_allclose(gv[k], gs[k], rtol=1e-9)
+
+
+def test_multi_key_groupby_reads_first_row_of_each_group(rng):
+    """Regression: the packed multi-key path used a -1 sentinel that
+    np.minimum.at never replaced, so key rows were read from the *last*
+    element instead of the group's first occurrence."""
+    n = 400
+    t = Table.from_columns(
+        schema(("id", ColType.INT), ("g1", ColType.INT), ("g2", ColType.INT),
+               ("v", ColType.FLOAT)),
+        {"id": np.arange(n),
+         "g1": rng.integers(0, 4, n),
+         "g2": rng.integers(0, 3, n),
+         "v": rng.normal(size=n)})
+    q = Query(group_by=("g1", "g2"),
+              aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "s")))
+    vres = VectorEngine().execute(t, q)
+    sres = ScalarEngine().execute(t, q)
+    gv = {(int(r["g1"]), int(r["g2"])): (r["n"], r["s"]) for r in vres}
+    gs = {(int(r["g1"]), int(r["g2"])): (r["n"], r["s"]) for r in sres}
+    assert gv.keys() == gs.keys()
+    for k in gv:
+        assert gv[k][0] == gs[k][0]
+        np.testing.assert_allclose(gv[k][1], gs[k][1], rtol=1e-9)
+
+
+def test_multi_key_groupby_three_keys():
+    t = Table.from_columns(
+        schema(("id", ColType.INT), ("a", ColType.INT), ("b", ColType.INT),
+               ("c", ColType.INT)),
+        {"id": [0, 1, 2, 3, 4, 5],
+         "a": [1, 1, 2, 2, 1, 2],
+         "b": [7, 7, 8, 8, 9, 8],
+         "c": [0, 0, 1, 1, 0, 1]})
+    q = Query(group_by=("a", "b", "c"), aggs=(QAgg("count", None, "n"),),
+              sort_by=("a", "b"))
+    vres = VectorEngine().execute(t, q)
+    assert [(r["a"], r["b"], r["c"], r["n"]) for r in vres] == [
+        (1, 7, 0, 2), (1, 9, 0, 1), (2, 8, 1, 3)]
+
+
+# ---------------------------------------------------------------------------
+# hash join: vectorized emission == scalar hash path
+# ---------------------------------------------------------------------------
+
+
+def test_hash_join_vectorized_matches_scalar(rng):
+    left = Table.from_columns(
+        schema(("lid", ColType.INT), ("k", ColType.INT), ("x", ColType.FLOAT)),
+        {"lid": np.arange(60), "k": rng.integers(0, 10, 60),
+         "x": rng.normal(size=60)})
+    right = Table.from_columns(
+        schema(("rid", ColType.INT), ("k", ColType.INT), ("y", ColType.FLOAT)),
+        {"rid": np.arange(25), "k": rng.integers(0, 12, 25),
+         "y": rng.normal(size=25)})
+    got = eng.hash_join(left, right, "k", "k", vectorized=True)
+    want = eng.hash_join(left, right, "k", "k", vectorized=False)
+    key = lambda r: (r["k"], r["lid"], r["r_rid"])
+    assert sorted(got, key=key) == sorted(want, key=key)
+    # duplicate-heavy and empty-intersection edges
+    assert eng.hash_join(left.take(np.asarray([], np.int64)), right,
+                         "k", "k", vectorized=True) == []

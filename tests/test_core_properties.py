@@ -1,0 +1,139 @@
+"""Hypothesis property tests for the core invariants (paper §III/§V).
+
+Kept in their own module so the tier-1 suite still collects when
+``hypothesis`` is absent (see requirements-dev.txt); the deterministic
+versions of these invariants live in test_core.py / test_pushdown.py.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.encoding import encode_column
+from repro.core.lsm import LSMStore
+from repro.core.relation import (ColType, Column, ColumnSpec, Predicate,
+                                 PredOp, schema)
+from repro.core.skipping import SkippingIndex, Verdict
+
+SCH = schema(("k", ColType.INT), ("a", ColType.INT), ("b", ColType.FLOAT))
+
+
+# ---------------------------------------------------------------------------
+# LSM merge-on-read == replay oracle
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["insert", "update", "delete", "minor", "major"]),
+        st.integers(0, 19),            # key
+        st.integers(-50, 50),          # value
+    ),
+    min_size=1, max_size=60)
+
+
+@given(ops_strategy)
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_lsm_merge_on_read_equals_oracle(ops):
+    store = LSMStore(SCH, block_rows=8)
+    oracle = {}
+    for op, k, v in ops:
+        if op == "insert":
+            if k not in oracle:
+                store.insert({"k": k, "a": v, "b": float(v) / 2})
+                oracle[k] = (v, float(v) / 2)
+        elif op == "update":
+            if k in oracle:
+                store.update(k, {"a": v})
+                oracle[k] = (v, oracle[k][1])
+        elif op == "delete":
+            if k in oracle:
+                store.delete(k)
+                del oracle[k]
+        elif op == "minor":
+            store.freeze_memtable()
+            store.minor_compact()
+        else:
+            store.major_compact()
+    table, _ = store.scan()
+    got = {int(r["k"]): (int(r["a"]), float(r["b"]))
+           for r in table.rows()}
+    assert got == oracle
+    # point reads agree too
+    for k in range(20):
+        row = store.get(k)
+        assert (row is None) == (k not in oracle)
+        if row is not None:
+            assert int(row["a"]) == oracle[k][0]
+
+
+# ---------------------------------------------------------------------------
+# encodings (round-trip + encoded-domain predicates)
+# ---------------------------------------------------------------------------
+
+int_cols = st.lists(st.integers(-1000, 1000), min_size=1, max_size=200)
+
+
+@given(int_cols)
+@settings(max_examples=60, deadline=None)
+def test_int_encoding_roundtrip(vals):
+    col = Column.from_values(ColumnSpec("x", ColType.INT), vals)
+    enc = encode_column(col)
+    np.testing.assert_array_equal(enc.decode(), col.values)
+
+
+@given(int_cols, st.integers(-1000, 1000))
+@settings(max_examples=40, deadline=None)
+def test_encoded_domain_predicate_equals_decoded(vals, pivot):
+    col = Column.from_values(ColumnSpec("x", ColType.INT), vals)
+    enc = encode_column(col)
+    for op in (PredOp.EQ, PredOp.LE, PredOp.GT):
+        pred = Predicate("x", op, pivot)
+        got = enc.eval_pred(pred)      # None = encoding can't answer (fine)
+        if got is not None:
+            np.testing.assert_array_equal(got, pred.eval(col))
+
+
+@given(st.lists(st.sampled_from(["alpha", "alpine", "alps", "beta", "bet"]),
+                min_size=1, max_size=100))
+@settings(max_examples=40, deadline=None)
+def test_str_encoding_roundtrip(vals):
+    col = Column.from_values(ColumnSpec("s", ColType.STR), vals)
+    enc = encode_column(col)
+    np.testing.assert_array_equal(enc.decode(), col.values)
+
+
+# ---------------------------------------------------------------------------
+# skipping index: conservative pruning + sketch aggregates
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(-100, 100), min_size=8, max_size=300),
+       st.integers(-100, 100), st.integers(-100, 100))
+@settings(max_examples=60, deadline=None)
+def test_skipping_index_no_false_negatives(vals, lo, hi):
+    lo, hi = min(lo, hi), max(lo, hi)
+    arr = np.asarray(vals, np.int64)
+    idx = SkippingIndex.build(arr, block_rows=16)
+    pred = Predicate("x", PredOp.BETWEEN, lo, hi)
+    verdicts = idx.prune(pred)
+    for b in range(len(verdicts)):
+        blk = arr[b * 16:(b + 1) * 16]
+        match = (blk >= lo) & (blk <= hi)
+        if verdicts[b] == Verdict.NONE.value:
+            assert not match.any()     # pruning must be conservative
+        if verdicts[b] == Verdict.ALL.value:
+            assert match.all()
+
+
+@given(st.lists(st.integers(-100, 100), min_size=8, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_sketch_aggregates_match_exact(vals):
+    arr = np.asarray(vals, np.int64)
+    idx = SkippingIndex.build(arr, block_rows=16)
+    assert idx.try_aggregate("min") == arr.min()
+    assert idx.try_aggregate("max") == arr.max()
+    assert idx.try_aggregate("sum") == arr.sum()
+    assert idx.try_aggregate("count_star") == len(arr)

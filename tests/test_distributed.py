@@ -28,8 +28,8 @@ def test_moe_distributed_matches_single_device():
         from repro.sharding import MeshRules
         cfg = dataclasses.replace(get_config("kimi_k2_1t").reduced(),
                                   capacity_factor=16.0, moe_sharding="ep")
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
         key = jax.random.PRNGKey(0)
         lp = jax.tree.map(lambda x: x[0], M.init_moe(cfg, key, 1))
         x = jax.random.normal(key, (4, 16, cfg.d_model))
@@ -65,8 +65,8 @@ def test_hybrid_attention_distributed_matches_local():
               and kk not in ("pos", "tail_len", "n_blocks")}
         lc.update({kk: cache[kk] for kk in ("n_blocks", "tail_len")})
         local = H.hybrid_attention(cfg, MeshRules(), lc, q, budget=nb)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         rules = MeshRules(mesh=mesh).with_kv_seq(("data", "model"))
         with mesh:
             dist = jax.jit(lambda lc, q: H.hybrid_attention(
@@ -84,8 +84,8 @@ def test_compressed_psum_across_pod_axis():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.optim.compress import compressed_psum
-        mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4, 2), ("pod", "data"))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
 
         def f(xl):
@@ -113,8 +113,8 @@ def test_train_step_runs_on_2x2_mesh():
         from repro.models.config import ShapeConfig
         cfg = get_config("qwen3_4b").reduced()
         shape = ShapeConfig("t", 32, 4, "train")
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
         rules = make_rules(cfg, shape, mesh)
         step, args, in_sh, out_sh = train_artifacts(cfg, shape, rules,
                                                     n_micro=2)

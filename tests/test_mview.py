@@ -1,7 +1,7 @@
 """Materialized views: incremental ≡ full refresh, freshness, complexity."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+from tests._hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.lsm import LSMStore
 from repro.core.mview import (AggSpec, MAVDefinition, MJVDefinition,
@@ -100,6 +100,30 @@ def test_full_refresh_hidden_table_swap_equals_incremental():
     a = {int(r["g"]): (int(r["n"]), int(r["sv"])) for r in inc.query().rows()}
     b = {int(r["g"]): (int(r["n"]), int(r["sv"])) for r in full.query().rows()}
     assert a == b
+
+
+def test_full_refresh_min_max_over_string_column_falls_back():
+    """min/max over a STR column can't go through the vectorized pushdown
+    (no bytes ufunc); full refresh must fall back to the row path."""
+    sch = schema(("k", ColType.INT), ("s", ColType.STR))
+    base = LSMStore(sch)
+    mlog = MLog(base)
+    mv = MaterializedAggView(
+        "m2", base, mlog,
+        MAVDefinition(group_by=(),
+                      aggs=(AggSpec("min", "s", "mn"),
+                            AggSpec("max", "s", "mx"))),
+        refresh_mode="full")
+    for i, s in enumerate(["pear", "apple", "fig"]):
+        base.insert({"k": i, "s": s})
+    mv.refresh()
+    g = next(iter(mv.groups.values()))
+    assert g.mins["s"] in (b"apple", "apple")   # bytes once compacted
+    assert g.maxs["s"] in (b"pear", "pear")
+    base.major_compact()
+    mv.refresh()
+    g = next(iter(mv.groups.values()))
+    assert g.mins["s"] == b"apple" and g.maxs["s"] == b"pear"
 
 
 def test_mlog_ttl_purge_keeps_correctness():
