@@ -20,6 +20,7 @@ SUITES = [
     ("Fig8_encoding", "benchmarks.bench_encoding"),
     ("TableII_mv", "benchmarks.bench_mv"),
     ("Fig9_TableIII_vectorized", "benchmarks.bench_vectorized"),
+    ("distributed_scan_fanout", "benchmarks.bench_distributed"),
     ("Fig17_update_intensive", "benchmarks.bench_update_intensive"),
     ("serving_hybrid_kv", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.roofline"),

@@ -22,3 +22,5 @@ from .vec import (BatchAttrs, FixedBatch, VarContinuousBatch, VarDiscreteBatch,
                   discrete_to_continuous, discrete_to_fixed,
                   fixed_to_continuous, pack_rows)
 from .engine import QAgg, Query, ScalarEngine, VectorEngine, hash_join, pack_sort_keys
+from .partition import (BlockShard, GroupedPartial, ShardedScanExecutor,
+                        range_partition, tree_reduce)

@@ -150,7 +150,10 @@ class DeltaFOREncoded(EncodedColumn):
         if pred.op in (PredOp.IS_NULL, PredOp.NOT_NULL, PredOp.IN):
             return None
         d = self.deltas.astype(np.int64)
-        v = int(pred.value) - self.base
+        # Shift the constant into the offset domain without int() truncation:
+        # a float constant (e.g. d >= 100.5) must keep its fractional part so
+        # the comparison matches the decoded-domain evaluation exactly.
+        v = pred.value - self.base
         if pred.op == PredOp.EQ:
             return d == v
         if pred.op == PredOp.NE:
@@ -164,7 +167,7 @@ class DeltaFOREncoded(EncodedColumn):
         if pred.op == PredOp.GE:
             return d >= v
         if pred.op == PredOp.BETWEEN:
-            return (d >= v) & (d <= int(pred.value2) - self.base)
+            return (d >= v) & (d <= pred.value2 - self.base)
         return None
 
     def agg_min_max(self):

@@ -126,6 +126,9 @@ def pack_sort_keys(cols: Sequence[np.ndarray]) -> np.ndarray:
     """Sequence-preserving encoding: pack up to 4 integer key columns into one
     uint64 whose natural order equals the lexicographic column order."""
     assert 1 <= len(cols) <= 4
+    for c in cols:
+        if c.dtype.kind not in "iub":   # ValueError (not a ufunc TypeError)
+            raise ValueError(f"cannot pack non-integer sort key {c.dtype}")
     bits = 64 // len(cols)
     out = np.zeros(cols[0].shape[0], np.uint64)
     for c in cols:
@@ -351,11 +354,12 @@ def hash_join(left: Table, right: Table, lkey: str, rkey: str,
 
 
 def make_engine(kind: str, **kw):
-    """Planner entry point: 'scalar' | 'vectorized' | 'pushdown'.
+    """Planner entry point: 'scalar' | 'vectorized' | 'pushdown' | 'sharded'.
 
     'pushdown' returns the block-granular executor over an ``LSMStore``
-    (``core.pushdown.PushdownExecutor``); the other two operate on a
-    fully-decoded ``Table``."""
+    (``core.pushdown.PushdownExecutor``); 'sharded' the mesh-sharded scan
+    fan-out over the same store (``core.partition.ShardedScanExecutor``);
+    the other two operate on a fully-decoded ``Table``."""
     if kind == "scalar":
         return ScalarEngine()
     if kind == "vectorized":
@@ -363,6 +367,9 @@ def make_engine(kind: str, **kw):
     if kind == "pushdown":
         from .pushdown import PushdownExecutor
         return PushdownExecutor(**kw)
+    if kind == "sharded":
+        from .partition import ShardedScanExecutor
+        return ShardedScanExecutor(**kw)
     raise ValueError(f"unknown engine kind {kind!r}")
 
 

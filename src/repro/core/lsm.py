@@ -264,6 +264,16 @@ class ScanStats:
     blocks_scanned: int = 0
     rows_merged_incremental: int = 0
     used_pushdown: bool = False
+    used_device: bool = False          # fused Pallas kernel answered the scan
+    n_shards: int = 0                  # >0: mesh-sharded fan-out ran
+
+    def absorb(self, other: "ScanStats") -> None:
+        """Fold one shard's counters into the query-level stats (the
+        fan-out gives every shard its own ScanStats so parallel scans
+        never race on these integers)."""
+        self.blocks_skipped += other.blocks_skipped
+        self.blocks_sketch_only += other.blocks_sketch_only
+        self.blocks_scanned += other.blocks_scanned
 
 
 class LSMStore:
@@ -451,12 +461,21 @@ class LSMStore:
     def live_incremental_rows(self, inc: Dict[Any, Version],
                               preds: Sequence[Predicate] = ()
                               ) -> List[Dict[str, Any]]:
-        """Row-format predicate filter over live (non-DELETE) incremental
-        versions — the merge-on-read half shared by ``scan`` and the
-        pushdown executor."""
-        return [v.row for v in inc.values()
-                if v.op != DmlType.DELETE
-                and _row_matches(v.row, preds, self.schema)]
+        """Predicate filter over live (non-DELETE) incremental versions —
+        the merge-on-read half shared by ``scan``, the pushdown executor and
+        the sharded fan-out.  The live rows are batched into a row-format
+        block (one materialized ``Column`` per predicate column) and run
+        through the same vectorized ``Predicate.eval`` path as baseline
+        blocks, instead of row-at-a-time Python evaluation."""
+        live = [v.row for v in inc.values() if v.op != DmlType.DELETE]
+        if not live or not preds:
+            return live
+        mask = np.ones(len(live), bool)
+        for p in preds:
+            col = Column.from_values(self.schema.spec(p.column),
+                                     [r[p.column] for r in live])
+            mask &= p.eval(col)
+        return [r for r, keep in zip(live, mask) if keep]
 
     def _merged_rows(self, ts: int) -> Dict[Any, Dict[str, Any]]:
         rows: Dict[Any, Dict[str, Any]] = {}

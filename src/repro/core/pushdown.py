@@ -30,14 +30,18 @@ instead of a fully-decoded table.  The operator pipeline is:
 The terminal stages (group-by, sort, limit, projection emission) are shared
 with ``VectorEngine`` (``finalize``), so the two engines agree bit-for-bit;
 only the scan→filter→materialize front end differs.  An optional device path
-routes the supported query shape (BETWEEN over FOR blocks + single-column
-group-by + numeric aggregates) through the fused Pallas kernel
-``kernels/fused_scan_agg.py``.
+routes the supported query shape (an optional range predicate over FOR/plain
+int blocks + a 1–3-column group-by over int and/or dictionary string keys +
+numeric aggregates over up to four value columns) through the fused Pallas
+kernel ``kernels/fused_scan_agg.py``; the mesh-sharded fan-out in
+``core/partition.py`` reuses ``filter_blocks`` / ``stage_device`` here to
+run the same pipeline per shard and tree-reduce partials.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -101,6 +105,107 @@ class _SketchAgg:
         return True
 
 
+def scan_preamble(store: LSMStore, q: Query, ts: int, stats: ScanStats
+                  ) -> Tuple[List[str], np.ndarray, List[Dict[str, Any]],
+                             np.ndarray]:
+    """Stages 0–1, shared by the single-shard executor and the sharded
+    fan-out: merge-on-read bookkeeping (incremental versions, overridden
+    baseline rows, vectorized live-row filter) and the zone-map prune.
+    Returns (needed columns, overridden row ids, live incremental rows,
+    per-block verdicts)."""
+    base = store.baseline
+    needed = sorted(VectorEngine.columns_needed(q, store.schema.names))
+    inc = store._incremental_effective(ts)
+    stats.rows_merged_incremental = len(inc)
+    over = np.asarray(sorted(i for i in (base.locate(pk) for pk in inc)
+                             if i >= 0), np.int64)
+    inc_rows = store.live_incremental_rows(inc, q.preds)
+    stats.blocks_total = base.n_blocks
+    verdicts = np.full(base.n_blocks, Verdict.ALL.value, np.int8)
+    for p in q.preds:
+        verdicts = np.minimum(verdicts, base.cols[p.column].index.prune(p))
+    return needed, over, inc_rows, verdicts
+
+
+def assemble_columns(store: LSMStore, needed: Sequence[str],
+                     parts: Dict[str, List[np.ndarray]],
+                     inc_rows: Sequence[Dict[str, Any]]
+                     ) -> Dict[str, np.ndarray]:
+    """Concatenate per-column value chunks (block decodes or shard outputs),
+    append the merge-on-read incremental rows, and fall back to typed empty
+    arrays for columns with no surviving data."""
+    cols: Dict[str, np.ndarray] = {}
+    for name in needed:
+        chunks = list(parts.get(name, ()))
+        if inc_rows:
+            dt = chunks[0].dtype if chunks else None
+            chunks.append(np.asarray([r[name] for r in inc_rows], dtype=dt))
+        if chunks:
+            cols[name] = (np.concatenate(chunks) if len(chunks) > 1
+                          else chunks[0])
+        else:
+            spec = store.schema.spec(name)
+            cols[name] = np.empty(
+                (0,), dtype=spec.ctype.np_dtype
+                if spec.ctype != ColType.STR else "S1")
+    return cols
+
+
+def filter_blocks(store: LSMStore, q: Query, needed: Sequence[str],
+                  verdicts: np.ndarray, over: np.ndarray,
+                  block_ids: Iterable[int], stats: ScanStats,
+                  sketch: Optional[_SketchAgg] = None
+                  ) -> List["_FilteredBlock"]:
+    """Stage 2 of the pushdown pipeline over an arbitrary block subset:
+    zone-map verdict dispatch, encoded-domain predicate evaluation,
+    merge-on-read exclusion of overridden baseline rows.  Shared by the
+    single-shard executor (all blocks) and the sharded fan-out (one
+    contiguous block range per shard, each with its own ``stats``)."""
+    base = store.baseline
+    filtered: List[_FilteredBlock] = []
+    for b in block_ids:
+        if verdicts[b] == Verdict.NONE.value:
+            stats.blocks_skipped += 1
+            continue
+        lo, hi = base.block_bounds(b)
+        excl = over[(over >= lo) & (over < hi)] - lo if over.size else None
+        clean = verdicts[b] == Verdict.ALL.value and (
+            excl is None or excl.size == 0)
+        view = base.block_view(b, needed)
+        if clean:
+            if sketch is not None and sketch.absorb(view):
+                stats.blocks_sketch_only += 1
+                continue
+            stats.blocks_sketch_only += 1 if q.preds else 0
+            filtered.append(_FilteredBlock(view, None))
+            continue
+        stats.blocks_scanned += 1
+        mask: Optional[np.ndarray] = None
+        if verdicts[b] != Verdict.ALL.value:
+            for p in q.preds:
+                enc = view.encoded[p.column]
+                m = enc.eval_pred(p)
+                if m is None:           # encoding can't answer: decode + eval
+                    m = p.eval(Column(store.schema.spec(p.column),
+                                      enc.decode()))
+                mask = m if mask is None else (mask & m)
+        if excl is not None and excl.size:
+            if mask is None:
+                mask = np.ones(view.nrows, bool)
+            else:
+                mask = mask.copy()
+            mask[excl] = False
+        sel = None if mask is None else np.nonzero(mask)[0]
+        if sel is not None and sel.size == 0:
+            continue
+        if sel is not None:
+            view = dataclasses.replace(
+                view, attrs=dataclasses.replace(view.attrs,
+                                                all_active=False))
+        filtered.append(_FilteredBlock(view, sel))
+    return filtered
+
+
 class PushdownExecutor:
     """Drop-in engine over an ``LSMStore``: same results as ``VectorEngine``
     over ``store.scan()``, without ever fully decoding the baseline."""
@@ -108,10 +213,9 @@ class PushdownExecutor:
     name = "pushdown"
 
     def __init__(self, engine: Optional[VectorEngine] = None,
-                 device: bool = False, interpret: bool = False):
+                 device: bool = False):
         self.engine = engine or VectorEngine()
         self.device = device
-        self.interpret = interpret
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -125,22 +229,10 @@ class PushdownExecutor:
         ts = store.current_ts if ts is None else ts
         stats = ScanStats(used_pushdown=True)
         self.last_stats = stats
-        base = store.baseline
-        needed = sorted(VectorEngine.columns_needed(q, store.schema.names))
 
-        # -- merge-on-read bookkeeping ----------------------------------
-        inc = store._incremental_effective(ts)
-        stats.rows_merged_incremental = len(inc)
-        over = np.asarray(sorted(i for i in (base.locate(pk) for pk in inc)
-                                 if i >= 0), np.int64)
-        inc_rows = store.live_incremental_rows(inc, q.preds)
-
-        # -- stage 1: zone-map prune ------------------------------------
-        nb = base.n_blocks
-        stats.blocks_total = nb
-        verdicts = np.full(nb, Verdict.ALL.value, np.int8)
-        for p in q.preds:
-            verdicts = np.minimum(verdicts, base.cols[p.column].index.prune(p))
+        # -- stages 0–1: merge-on-read bookkeeping + zone-map prune ------
+        needed, over, inc_rows, verdicts = scan_preamble(store, q, ts, stats)
+        nb = store.baseline.n_blocks
 
         # -- optional fused device kernel for the supported shape --------
         if self.device and not inc_rows and not over.size:
@@ -152,47 +244,8 @@ class PushdownExecutor:
         sketch = _SketchAgg(q) if (q.aggs and not q.group_by) else None
 
         # -- stage 2: encoded-domain filter ------------------------------
-        filtered: List[_FilteredBlock] = []
-        for b in range(nb):
-            if verdicts[b] == Verdict.NONE.value:
-                stats.blocks_skipped += 1
-                continue
-            lo, hi = base.block_bounds(b)
-            excl = over[(over >= lo) & (over < hi)] - lo if over.size else None
-            clean = verdicts[b] == Verdict.ALL.value and (
-                excl is None or excl.size == 0)
-            view = base.block_view(b, needed)
-            if clean:
-                if sketch is not None and sketch.absorb(view):
-                    stats.blocks_sketch_only += 1
-                    continue
-                stats.blocks_sketch_only += 1 if q.preds else 0
-                filtered.append(_FilteredBlock(view, None))
-                continue
-            stats.blocks_scanned += 1
-            mask: Optional[np.ndarray] = None
-            if verdicts[b] != Verdict.ALL.value:
-                for p in q.preds:
-                    enc = view.encoded[p.column]
-                    m = enc.eval_pred(p)
-                    if m is None:       # encoding can't answer: decode + eval
-                        m = p.eval(Column(store.schema.spec(p.column),
-                                          enc.decode()))
-                    mask = m if mask is None else (mask & m)
-            if excl is not None and excl.size:
-                if mask is None:
-                    mask = np.ones(view.nrows, bool)
-                else:
-                    mask = mask.copy()
-                mask[excl] = False
-            sel = None if mask is None else np.nonzero(mask)[0]
-            if sel is not None and sel.size == 0:
-                continue
-            if sel is not None:
-                view = dataclasses.replace(
-                    view, attrs=dataclasses.replace(view.attrs,
-                                                    all_active=False))
-            filtered.append(_FilteredBlock(view, sel))
+        filtered = filter_blocks(store, q, needed, verdicts, over,
+                                 range(nb), stats, sketch)
 
         # -- stage 3+4: late materialization + terminal operators --------
         if sketch is not None:
@@ -210,25 +263,11 @@ class PushdownExecutor:
                      inc_rows: Sequence[Dict[str, Any]]
                      ) -> Dict[str, np.ndarray]:
         """Gather only surviving row slices of only the needed columns."""
-        cols: Dict[str, np.ndarray] = {}
-        for name in needed:
-            parts: List[np.ndarray] = []
-            for fb in filtered:
-                enc = fb.view.encoded[name]
-                parts.append(enc.decode() if fb.sel is None
-                             else enc.decode_idx(fb.sel))
-            if inc_rows:
-                dt = parts[0].dtype if parts else None
-                parts.append(np.asarray([r[name] for r in inc_rows], dtype=dt))
-            if parts:
-                cols[name] = (np.concatenate(parts) if len(parts) > 1
-                              else parts[0])
-            else:
-                spec = store.schema.spec(name)
-                cols[name] = np.empty(
-                    (0,), dtype=spec.ctype.np_dtype
-                    if spec.ctype != ColType.STR else "S1")
-        return cols
+        parts = {name: [fb.view.encoded[name].decode() if fb.sel is None
+                        else fb.view.encoded[name].decode_idx(fb.sel)
+                        for fb in filtered]
+                 for name in needed}
+        return assemble_columns(store, needed, parts, inc_rows)
 
     # -------------------------------------------------- flat agg combining
     def _finish_flat(self, q: Query, sketch: _SketchAgg,
@@ -278,112 +317,226 @@ class PushdownExecutor:
     def _try_device(self, store: LSMStore, q: Query, verdicts: np.ndarray,
                     stats: ScanStats) -> Optional[List[Dict[str, Any]]]:
         """Route the fused-kernel-supported shape to the Pallas device path:
-        one BETWEEN/range predicate over a FOR/plain int column, single int
-        group-by column, numeric aggregates over one value column."""
-        shape = _device_plan(store, q)
-        if shape is None:
+        an optional range predicate over a FOR/plain int column, 1–3 group-by
+        keys (int or dictionary string), numeric aggregates over up to four
+        value columns."""
+        plan = plan_device(store, q)
+        if plan is None:
             return None
-        pred_col, lo_hi, grp_col, val_col = shape
-        base = store.baseline
-        nb, bk = base.n_blocks, base.block_rows
-        if nb == 0:
+        if store.baseline.n_blocks == 0:
             return []
-        deltas = np.zeros((nb, bk), np.int32)
-        bases = np.zeros((nb,), np.int32)
-        counts = np.zeros((nb,), np.int32)
-        codes = np.zeros((nb, bk), np.int32)
-        values = np.zeros((nb, bk), np.float32)
-        # global group dictionary across blocks
-        gdict = np.unique(base.cols[grp_col].decode_all())
-        for b in range(nb):
-            blo, bhi = base.block_bounds(b)
-            counts[b] = bhi - blo
-            enc = base.cols[pred_col].blocks[b]
-            if isinstance(enc, DeltaFOREncoded):   # already in offset domain
-                deltas[b, :bhi - blo] = enc.deltas
-                bases[b] = enc.base
-            else:
-                deltas[b, :bhi - blo] = enc.decode()
-            genc = base.cols[grp_col].blocks[b]
-            if isinstance(genc, DictEncoded):      # map codes, never decode
-                remap = np.searchsorted(gdict, genc.dictionary)
-                codes[b, :bhi - blo] = remap[genc.codes]
-            else:
-                codes[b, :bhi - blo] = np.searchsorted(gdict, genc.decode())
-            values[b, :bhi - blo] = base.cols[val_col].decode_block(b)
+        stage = stage_device(store, plan)
+        if stage is None:
+            return None
         block_mask = verdicts != Verdict.NONE.value
         stats.blocks_skipped = int((~block_mask).sum())
         stats.blocks_scanned = int(block_mask.sum())
+        stats.used_device = True
         from ..kernels import ops
-        g_cnt, g_sum, g_min, g_max = ops.fused_scan_agg(
-            deltas, bases, counts, int(lo_hi[0]), int(lo_hi[1]), codes,
-            values, ndv=int(gdict.shape[0]), block_mask=block_mask)
-        g_cnt = np.asarray(g_cnt)
-        g_sum, g_min, g_max = (np.asarray(g_sum, np.float64),
-                               np.asarray(g_min), np.asarray(g_max))
-        out: List[Dict[str, Any]] = []
-        for g in range(gdict.shape[0]):
-            if g_cnt[g] == 0:
-                continue
-            r: Dict[str, Any] = {grp_col: _item(gdict[g])}
-            for a in q.aggs:
-                if a.op == "count":
-                    r[a.alias] = int(g_cnt[g])
-                elif a.op == "sum":
-                    r[a.alias] = float(g_sum[g])
-                elif a.op == "avg":
-                    r[a.alias] = float(g_sum[g]) / int(g_cnt[g])
-                elif a.op == "min":
-                    r[a.alias] = float(g_min[g])
-                elif a.op == "max":
-                    r[a.alias] = float(g_max[g])
-            out.append(r)
-        if q.sort_by:
-            out = VectorEngine._sort(out, q.sort_by)
-        if q.limit is not None:
-            out = out[: q.limit]
-        return out
+        g_cnt, g_sums, g_mins, g_maxs = ops.fused_scan_agg(
+            stage.deltas, stage.bases, stage.counts, plan.lo, plan.hi,
+            stage.codes, stage.values, ndv=stage.ndv, block_mask=block_mask)
+        return emit_device_groups(
+            q, plan, stage, np.asarray(g_cnt),
+            np.asarray(g_sums, np.float64), np.asarray(g_mins),
+            np.asarray(g_maxs))
 
 
-def _device_plan(store: LSMStore, q: Query
-                 ) -> Optional[Tuple[str, Tuple[int, int], str, str]]:
+# ---------------------------------------------------------------------------
+# Device planning / staging / emission — shared with the sharded fan-out
+# (core/partition.py stages once, slices per shard, tree-merges partials).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlan:
+    """The fused-kernel query shape: an optional int range predicate plus a
+    packed multi-key group-by over up to four value columns."""
+
+    pred_col: Optional[str]            # None == no predicate (q2 shape)
+    lo: int
+    hi: int
+    group_cols: Tuple[str, ...]
+    value_cols: Tuple[str, ...]        # () == pure count(*): zeros plane
+
+
+@dataclasses.dataclass
+class DeviceStage:
+    """Kernel-ready staging of every baseline block (sliceable per shard)."""
+
+    deltas: np.ndarray                 # [Nb, Bk] int32 FOR offsets
+    bases: np.ndarray                  # [Nb] int32
+    counts: np.ndarray                 # [Nb] int32
+    codes: np.ndarray                  # [Nb, K, Bk] int32 global group codes
+    values: np.ndarray                 # [Nb, V, Bk] f32
+    gdicts: List[np.ndarray]           # per-key sorted global dictionaries
+    ndv: Tuple[int, ...]
+
+
+_DEVICE_MAX_GROUPS = 1 << 20           # packed-domain cap: G·(1+3V) f32 VMEM
+_DEVICE_BIG = 1 << 30                  # int32-safe bound for staged ints
+
+
+def plan_device(store: LSMStore, q: Query) -> Optional[DevicePlan]:
     """Match the fused-kernel query shape; None if unsupported."""
-    if not q.group_by or len(q.group_by) != 1 or not q.aggs:
+    if not q.group_by or len(q.group_by) > 3 or not q.aggs:
         return None
-    grp_col = q.group_by[0]
-    if store.schema.spec(grp_col).ctype != ColType.INT:
+    sch = store.schema
+    base = store.baseline
+
+    def clean_col(name: str) -> bool:
+        idx = base.cols[name].index
+        s = idx.nodes[idx.root].sketch if idx.root >= 0 else None
+        return s is None or s.null_count == 0
+
+    for g in q.group_by:
+        if sch.spec(g).ctype not in (ColType.INT, ColType.STR):
+            return None
+        if not clean_col(g):
+            return None
+    val_cols = tuple(sorted({a.column for a in q.aggs
+                             if a.column is not None}))
+    if len(val_cols) > 4:
         return None
-    agg_cols = {a.column for a in q.aggs if a.column is not None}
-    if len(agg_cols) != 1:       # count(*) rides along with one value column
+    for c in val_cols:
+        if sch.spec(c).ctype not in (ColType.INT, ColType.FLOAT):
+            return None
+        if not clean_col(c):
+            return None
+    if len(q.preds) > 1:
         return None
-    val_col = next(iter(agg_cols))
-    if store.schema.spec(val_col).ctype not in (ColType.INT, ColType.FLOAT):
-        return None
-    if len(q.preds) != 1:
-        return None
+    if not q.preds:                    # q2 shape: group-by without predicate
+        return DevicePlan(None, 0, 0, tuple(q.group_by), val_cols)
     p = q.preds[0]
-    if store.schema.spec(p.column).ctype != ColType.INT:
+    if sch.spec(p.column).ctype != ColType.INT or not clean_col(p.column):
         return None
     # The kernel stages deltas/bases/bounds as int32 and shifts bounds by
     # -base; restrict column values and bounds to ±2^30 so no assignment
     # truncates and no base shift overflows.
-    big = 1 << 30
-    idx = store.baseline.cols[p.column].index
+    big = _DEVICE_BIG
+    idx = base.cols[p.column].index
     vmin, vmax = idx.try_aggregate("min"), idx.try_aggregate("max")
     if vmin is not None and (vmin <= -big or vmax >= big):
         return None
+    # The kernel's window [lo, hi] is inclusive over *integer* column values;
+    # float constants round inward (ceil on lower bounds, floor on upper) so
+    # e.g. d >= 100.5 becomes d >= 101 — never int() truncation.
     if p.op == PredOp.BETWEEN:
-        lo, hi = int(p.value), int(p.value2)
-    elif p.op in (PredOp.GE, PredOp.GT):
-        lo, hi = int(p.value) + (p.op == PredOp.GT), big
-    elif p.op in (PredOp.LE, PredOp.LT):
-        lo, hi = -big, int(p.value) - (p.op == PredOp.LT)
+        lo, hi = math.ceil(p.value), math.floor(p.value2)
+    elif p.op == PredOp.GE:
+        lo, hi = math.ceil(p.value), big
+    elif p.op == PredOp.GT:
+        lo, hi = math.floor(p.value) + 1, big
+    elif p.op == PredOp.LE:
+        lo, hi = -big, math.floor(p.value)
+    elif p.op == PredOp.LT:
+        lo, hi = -big, math.ceil(p.value) - 1
     elif p.op == PredOp.EQ:
+        if not float(p.value).is_integer():
+            return None                # no int row can match; host handles it
         lo = hi = int(p.value)
     else:
         return None
     lo, hi = max(lo, -big), min(hi, big)     # column values all inside ±2^30
-    for enc in store.baseline.cols[p.column].blocks:
+    for enc in base.cols[p.column].blocks:
         if not isinstance(enc, (DeltaFOREncoded, PlainEncoded, DictEncoded)):
             return None
-    return p.column, (lo, hi), grp_col, val_col
+    return DevicePlan(p.column, lo, hi, tuple(q.group_by), val_cols)
+
+
+def _global_dict(base, name: str) -> np.ndarray:
+    """Sorted global value dictionary of one group column, assembled from
+    per-block domains (block dictionaries where dict-encoded — strings never
+    decode row-wise on that path)."""
+    domains = []
+    for enc in base.cols[name].blocks:
+        domains.append(enc.dictionary if isinstance(enc, DictEncoded)
+                       else np.unique(enc.decode()))
+    return np.unique(np.concatenate(domains)) if domains else np.empty((0,))
+
+
+def stage_device(store: LSMStore, plan: DevicePlan) -> Optional[DeviceStage]:
+    """Build the [Nb, ...] kernel inputs: FOR offsets of the predicate
+    column (zeros when predicate-less), per-key global group codes, f32
+    value planes.  None when the packed group domain is too large."""
+    base = store.baseline
+    nb, bk = base.n_blocks, base.block_rows
+    gdicts = [_global_dict(base, g) for g in plan.group_cols]
+    ndv = tuple(max(int(d.shape[0]), 1) for d in gdicts)
+    packed_domain = 1
+    for d in ndv:
+        packed_domain *= d
+    if packed_domain > _DEVICE_MAX_GROUPS:
+        return None
+    n_vals = max(len(plan.value_cols), 1)
+    deltas = np.zeros((nb, bk), np.int32)
+    bases = np.zeros((nb,), np.int32)
+    counts = np.zeros((nb,), np.int32)
+    codes = np.zeros((nb, len(plan.group_cols), bk), np.int32)
+    values = np.zeros((nb, n_vals, bk), np.float32)
+    remaps = [{} for _ in plan.group_cols]     # block dict id -> global codes
+    for b in range(nb):
+        blo, bhi = base.block_bounds(b)
+        n = bhi - blo
+        counts[b] = n
+        if plan.pred_col is not None:
+            enc = base.cols[plan.pred_col].blocks[b]
+            if isinstance(enc, DeltaFOREncoded):   # already in offset domain
+                deltas[b, :n] = enc.deltas
+                bases[b] = enc.base
+            else:
+                deltas[b, :n] = enc.decode()
+        for k, g in enumerate(plan.group_cols):
+            genc = base.cols[g].blocks[b]
+            if isinstance(genc, DictEncoded):      # map codes, never decode
+                remap = remaps[k].get(id(genc))
+                if remap is None:
+                    remap = np.searchsorted(gdicts[k], genc.dictionary)
+                    remaps[k][id(genc)] = remap
+                codes[b, k, :n] = remap[genc.codes]
+            else:
+                codes[b, k, :n] = np.searchsorted(gdicts[k], genc.decode())
+        for v, c in enumerate(plan.value_cols):
+            values[b, v, :n] = base.cols[c].decode_block(b)
+    return DeviceStage(deltas, bases, counts, codes, values, gdicts, ndv)
+
+
+def emit_device_groups(q: Query, plan: DevicePlan, stage: DeviceStage,
+                       g_cnt: np.ndarray, g_sums: np.ndarray,
+                       g_mins: np.ndarray, g_maxs: np.ndarray
+                       ) -> List[Dict[str, Any]]:
+    """Unpack per-packed-group kernel partials into result rows (group order
+    = lexicographic over the sorted dictionaries, matching VectorEngine's
+    unique-key order), then the shared sort/limit tail."""
+    strides = []
+    acc = 1
+    for d in reversed(stage.ndv):
+        strides.append(acc)
+        acc *= d
+    strides = list(reversed(strides))
+    vidx = {c: v for v, c in enumerate(plan.value_cols)}
+    out: List[Dict[str, Any]] = []
+    for g in np.nonzero(g_cnt)[0]:
+        r: Dict[str, Any] = {}
+        for k, col in enumerate(plan.group_cols):
+            r[col] = _item(stage.gdicts[k][(g // strides[k]) % stage.ndv[k]])
+        n = int(g_cnt[g])
+        for a in q.aggs:
+            if a.op == "count":
+                r[a.alias] = n
+                continue
+            v = vidx[a.column]
+            if a.op == "sum":
+                r[a.alias] = float(g_sums[v, g])
+            elif a.op == "avg":
+                r[a.alias] = float(g_sums[v, g]) / n
+            elif a.op == "min":
+                r[a.alias] = float(g_mins[v, g])
+            elif a.op == "max":
+                r[a.alias] = float(g_maxs[v, g])
+        out.append(r)
+    if q.sort_by:
+        out = VectorEngine._sort(out, q.sort_by)
+    if q.limit is not None:
+        out = out[: q.limit]
+    return out

@@ -1,23 +1,34 @@
 """Fused filter + *grouped* aggregation over encoded blocks (Pallas TPU).
 
 Extends ``columnar_scan`` (flat count/sum/min/max) to grouped aggregation
-over dictionary codes, covering the ``bench_vectorized`` q1/q3 shapes
-end-to-end on device: a BETWEEN predicate evaluated in the FOR/delta encoded
-domain (bounds shifted into each block's offset domain — query without
-decompression), then per-group count/sum/min/max accumulated in one pass.
+over dictionary codes, covering the ``bench_vectorized`` q1/q2/q3 shapes
+end-to-end on device: an optional BETWEEN predicate evaluated in the
+FOR/delta encoded domain (bounds shifted into each block's offset domain —
+query without decompression), then per-group count/sum/min/max accumulated
+in one pass.
 
-Group sums/counts use the same one-hot MXU contraction as ``dict_groupby``;
+Group keys are **multi-key**: each block carries ``K`` int32 code planes
+(one per group-by column — int columns use their global value dictionary,
+string columns their global string dictionary), and the kernel packs them
+into a single radix code ``sum_k codes[k] * stride[k]`` on device — the
+sequence-preserving encoding of ``engine.pack_sort_keys``, executed on the
+VPU so multi-column group-bys cost one one-hot contraction, not K.
+
+Values are **multi-column**: ``V`` f32 value planes aggregate in the same
+pass; sums/counts use the one-hot MXU contraction of ``dict_groupby``,
 min/max ride the VPU on the masked one-hot.  The zone-map skip uses the
 scalar-prefetch visit-list trick: the wrapper prunes blocks with the
 skipping index and the kernel only ever DMAs the surviving blocks.
 
-Grid = (Nb,) sequential; [4, G] f32 accumulator (count/sum/min/max) lives in
-VMEM scratch.  G is padded to a 128-lane multiple by the wrapper.
+Grid = (Nb,) sequential; [1 + 3V, G] f32 accumulator (count, then per value
+column sum/min/max) lives in VMEM scratch.  G = prod(ndv) padded to a
+128-lane multiple by the wrapper.  A query with no predicate passes
+all-zero deltas/bases with lo = hi = 0, selecting every valid row.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,15 +40,19 @@ POS_INF = 1e30
 
 def _fused_kernel(bids_ref, cnt_ref,                     # scalar prefetch
                   deltas_ref, bases_ref, counts_ref, codes_ref, values_ref,
-                  bounds_ref, out_ref, acc_scr, *, block_k: int, g: int):
+                  bounds_ref, out_ref, acc_scr, *, block_k: int, g: int,
+                  n_vals: int, strides: Tuple[int, ...]):
     j = pl.program_id(0)
     nv = pl.num_programs(0)
+    rows_acc = 1 + 3 * n_vals
 
     @pl.when(j == 0)
     def _init():
-        row = jax.lax.broadcasted_iota(jnp.int32, (4, g), 0)
-        acc_scr[...] = jnp.where(row == 2, POS_INF,
-                                 jnp.where(row == 3, -POS_INF, 0.0))
+        row = jax.lax.broadcasted_iota(jnp.int32, (rows_acc, g), 0)
+        slot = (row - 1) % 3            # 0 = sum, 1 = min, 2 = max (row > 0)
+        acc_scr[...] = jnp.where((row > 0) & (slot == 1), POS_INF,
+                                 jnp.where((row > 0) & (slot == 2),
+                                           -POS_INF, 0.0))
 
     @pl.when(j < cnt_ref[0])
     def _body():
@@ -46,43 +61,79 @@ def _fused_kernel(bids_ref, cnt_ref,                     # scalar prefetch
         nvalid = counts_ref[0, 0]
         lo = bounds_ref[0, 0] - base                      # encoded-domain bound
         hi = bounds_ref[0, 1] - base
-        codes = codes_ref[0]                              # [Bk]
-        vals = values_ref[0].astype(jnp.float32)          # [Bk]
+        codes = codes_ref[0]                              # [K, Bk]
+        # device-side pack_sort_keys: radix-pack the K code planes
+        packed = codes[0] * strides[0]
+        for k in range(1, len(strides)):
+            packed = packed + codes[k] * strides[k]
         sel = (deltas >= lo) & (deltas <= hi)             # [Bk]
         lanes = jax.lax.broadcasted_iota(jnp.int32, (block_k, g), 1)
         rowid = jax.lax.broadcasted_iota(jnp.int32, (block_k, g), 0)
-        onehot = ((codes[:, None] == lanes) & sel[:, None]
+        onehot = ((packed[:, None] == lanes) & sel[:, None]
                   & (rowid < nvalid)).astype(jnp.float32)
-        cnts = onehot.sum(axis=0)[None, :]                               # [1,G]
-        sums = jax.lax.dot_general(vals[None, :], onehot,
-                                   (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.float32)   # [1,G]
-        picked = jnp.where(onehot > 0, vals[:, None], POS_INF)
-        mins = picked.min(axis=0)[None, :]                               # [1,G]
-        maxs = jnp.where(onehot > 0, vals[:, None], -POS_INF).max(axis=0)[None, :]
         a = acc_scr[...]
-        acc_scr[...] = jnp.concatenate(
-            [a[0:1] + cnts, a[1:2] + sums,
-             jnp.minimum(a[2:3], mins), jnp.maximum(a[3:4], maxs)], axis=0)
+        parts = [a[0:1] + onehot.sum(axis=0)[None, :]]                  # [1,G]
+        for v in range(n_vals):
+            vals = values_ref[0, v].astype(jnp.float32)                 # [Bk]
+            sums = jax.lax.dot_general(vals[None, :], onehot,
+                                       (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+            mins = jnp.where(onehot > 0, vals[:, None],
+                             POS_INF).min(axis=0)[None, :]
+            maxs = jnp.where(onehot > 0, vals[:, None],
+                             -POS_INF).max(axis=0)[None, :]
+            r = 1 + 3 * v
+            parts += [a[r:r + 1] + sums,
+                      jnp.minimum(a[r + 1:r + 2], mins),
+                      jnp.maximum(a[r + 2:r + 3], maxs)]
+        acc_scr[...] = jnp.concatenate(parts, axis=0)
 
     @pl.when(j == nv - 1)
     def _emit():
         out_ref[...] = acc_scr[...]
 
 
+def _normalize(codes: jax.Array, values: jax.Array,
+               ndv: Union[int, Sequence[int]]):
+    """Accept the legacy single-key/single-value layout ([Nb, Bk] + int ndv)
+    alongside the general [Nb, K, Bk] / [Nb, V, Bk] + tuple-ndv one."""
+    legacy = codes.ndim == 2 and values.ndim == 2 and not isinstance(
+        ndv, (tuple, list))
+    codes3 = codes[:, None, :] if codes.ndim == 2 else codes
+    values3 = values[:, None, :] if values.ndim == 2 else values
+    ndv_t = ((int(ndv),) if not isinstance(ndv, (tuple, list))
+             else tuple(int(x) for x in ndv))
+    if len(ndv_t) != codes3.shape[1]:
+        raise ValueError(f"ndv {ndv_t} does not match {codes3.shape[1]} "
+                         "group-key code planes")
+    strides = []
+    acc = 1
+    for d in reversed(ndv_t):
+        strides.append(acc)
+        acc *= d
+    return legacy, codes3, values3, ndv_t, tuple(reversed(strides)), acc
+
+
 def fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
-                   lo, hi, codes: jax.Array, values: jax.Array, ndv: int,
+                   lo, hi, codes: jax.Array, values: jax.Array,
+                   ndv: Union[int, Sequence[int]],
                    block_mask: Optional[jax.Array] = None,
                    *, interpret: bool = False
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """deltas: [Nb, Bk] int32 FOR offsets of the filter column; bases/counts:
-    [Nb]; lo/hi: scalars in the *decoded* domain; codes: [Nb, Bk] int32
-    global group codes in [0, ndv); values: [Nb, Bk] f32 aggregation target;
-    block_mask: [Nb] bool zone-map survivors.  Returns per-group
-    (count i32 [ndv], sum f32, min f32, max f32); empty groups report
-    count 0, sum 0, min +POS_INF, max -POS_INF."""
+    """deltas: [Nb, Bk] int32 FOR offsets of the filter column (all-zero with
+    lo = hi = 0 for predicate-less group-bys); bases/counts: [Nb]; lo/hi:
+    scalars in the *decoded* domain; codes: [Nb, Bk] or [Nb, K, Bk] int32
+    global group codes, plane k in [0, ndv[k]); values: [Nb, Bk] or
+    [Nb, V, Bk] f32 aggregation targets; block_mask: [Nb] bool zone-map
+    survivors.  Returns per-packed-group (count i32 [P], sum f32 [V, P],
+    min f32, max f32) with P = prod(ndv); with the legacy 2-D layout the
+    V axis is squeezed.  Empty groups report count 0, sum 0, min +POS_INF,
+    max -POS_INF."""
     Nb, Bk = deltas.shape
-    G = ((ndv + 127) // 128) * 128
+    legacy, codes3, values3, ndv_t, strides, P = _normalize(codes, values, ndv)
+    K, V = codes3.shape[1], values3.shape[1]
+    G = ((P + 127) // 128) * 128
+    R = 1 + 3 * V
     if block_mask is None:
         block_mask = jnp.ones((Nb,), bool)
     order = jnp.argsort(~block_mask, stable=True)
@@ -91,7 +142,8 @@ def fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
     bids = jnp.take_along_axis(order, idx, axis=0).astype(jnp.int32)
     bounds = jnp.asarray([[lo, hi]], jnp.int32)
 
-    kernel = functools.partial(_fused_kernel, block_k=Bk, g=G)
+    kernel = functools.partial(_fused_kernel, block_k=Bk, g=G, n_vals=V,
+                               strides=strides)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -101,18 +153,24 @@ def fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
                 pl.BlockSpec((1, Bk), lambda j, bids, cnt: (bids[j], 0)),
                 pl.BlockSpec((1, 1), lambda j, bids, cnt: (bids[j], 0)),
                 pl.BlockSpec((1, 1), lambda j, bids, cnt: (bids[j], 0)),
-                pl.BlockSpec((1, Bk), lambda j, bids, cnt: (bids[j], 0)),
-                pl.BlockSpec((1, Bk), lambda j, bids, cnt: (bids[j], 0)),
+                pl.BlockSpec((1, K, Bk),
+                             lambda j, bids, cnt: (bids[j], 0, 0)),
+                pl.BlockSpec((1, V, Bk),
+                             lambda j, bids, cnt: (bids[j], 0, 0)),
                 pl.BlockSpec((1, 2), lambda j, bids, cnt: (0, 0)),
             ],
-            out_specs=pl.BlockSpec((4, G), lambda j, bids, cnt: (0, 0)),
-            scratch_shapes=[pltpu.VMEM((4, G), jnp.float32)],
+            out_specs=pl.BlockSpec((R, G), lambda j, bids, cnt: (0, 0)),
+            scratch_shapes=[pltpu.VMEM((R, G), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((4, G), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((R, G), jnp.float32),
         interpret=interpret,
     )(bids, cnt[None], deltas,
       bases.reshape(Nb, 1).astype(jnp.int32),
       counts.reshape(Nb, 1).astype(jnp.int32),
-      codes.astype(jnp.int32), values.astype(jnp.float32), bounds)
-    return (out[0, :ndv].astype(jnp.int32), out[1, :ndv],
-            out[2, :ndv], out[3, :ndv])
+      codes3.astype(jnp.int32), values3.astype(jnp.float32), bounds)
+    g_cnt = out[0, :P].astype(jnp.int32)
+    per_v = out[1:].reshape(V, 3, G)
+    sums, mins, maxs = per_v[:, 0, :P], per_v[:, 1, :P], per_v[:, 2, :P]
+    if legacy:
+        return g_cnt, sums[0], mins[0], maxs[0]
+    return g_cnt, sums, mins, maxs

@@ -80,8 +80,10 @@ def columnar_scan(deltas, bases, counts, lo, hi, values=None, block_mask=None):
 
 
 @functools.partial(jax.jit, static_argnames=("ndv",))
-def fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, *, ndv: int,
+def fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, *, ndv,
                    block_mask=None):
+    """``ndv`` is an int (legacy single group key, 2-D codes/values) or a
+    per-key tuple (multi-key: codes [Nb, K, Bk], values [Nb, V, Bk])."""
     if _force_ref():
         return ref.ref_fused_scan_agg(deltas, bases, counts, lo, hi, codes,
                                       values, ndv, block_mask)

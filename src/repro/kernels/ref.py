@@ -372,24 +372,39 @@ def ref_dict_groupby(codes: jax.Array, values: jax.Array, ndv: int
 
 
 def ref_fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
-                       lo, hi, codes: jax.Array, values: jax.Array, ndv: int,
+                       lo, hi, codes: jax.Array, values: jax.Array, ndv,
                        block_mask: Optional[jax.Array] = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Grouped (count, sum, min, max) of ``values`` per group code, over rows
-    whose decoded filter column lies in [lo, hi].  Same layout/semantics as
-    ``fused_scan_agg.py``: deltas/codes/values are [Nb, Bk], bases/counts are
-    [Nb]; empty groups report count 0, sum 0, min +inf, max -inf."""
+    """Grouped (count, sum, min, max) of ``values`` per packed group code,
+    over rows whose decoded filter column lies in [lo, hi].  Same
+    layout/semantics as ``fused_scan_agg.py``: deltas are [Nb, Bk],
+    bases/counts are [Nb]; codes/values are [Nb, Bk] (legacy single-plane) or
+    [Nb, K, Bk] / [Nb, V, Bk] with ``ndv`` a per-key tuple — key planes are
+    radix-packed into one code (the pack_sort_keys ordering).  Empty groups
+    report count 0, sum 0, min +inf, max -inf."""
+    from .fused_scan_agg import _normalize
     Nb, Bk = deltas.shape
+    legacy, codes3, values3, ndv_t, strides, P = _normalize(codes, values, ndv)
+    V = values3.shape[1]
     decoded = deltas.astype(jnp.int32) + bases[:, None].astype(jnp.int32)
     valid = jnp.arange(Bk)[None, :] < counts[:, None]
     if block_mask is not None:
         valid = valid & block_mask[:, None]
     sel = valid & (decoded >= lo) & (decoded <= hi)
-    one_hot = jax.nn.one_hot(codes.reshape(-1), ndv, dtype=jnp.float32)
+    packed = (codes3.astype(jnp.int32)
+              * jnp.asarray(strides, jnp.int32)[None, :, None]).sum(axis=1)
+    one_hot = jax.nn.one_hot(packed.reshape(-1), P, dtype=jnp.float32)
     one_hot = one_hot * sel.reshape(-1, 1)
-    vals = values.astype(jnp.float32).reshape(-1)
     cnts = one_hot.sum(axis=0)
-    sums = one_hot.T @ vals
-    mins = jnp.where(one_hot > 0, vals[:, None], jnp.inf).min(axis=0)
-    maxs = jnp.where(one_hot > 0, vals[:, None], -jnp.inf).max(axis=0)
+    sums, mins, maxs = [], [], []
+    for v in range(V):
+        vals = values3[:, v, :].astype(jnp.float32).reshape(-1)
+        sums.append(one_hot.T @ vals)
+        mins.append(jnp.where(one_hot > 0, vals[:, None],
+                              jnp.inf).min(axis=0))
+        maxs.append(jnp.where(one_hot > 0, vals[:, None],
+                              -jnp.inf).max(axis=0))
+    sums, mins, maxs = (jnp.stack(sums), jnp.stack(mins), jnp.stack(maxs))
+    if legacy:
+        return cnts.astype(jnp.int32), sums[0], mins[0], maxs[0]
     return cnts.astype(jnp.int32), sums, mins, maxs

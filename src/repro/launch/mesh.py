@@ -51,6 +51,25 @@ def make_smoke_mesh(shape: Tuple[int, ...] = (2, 2),
     return make_mesh_compat(shape, axes)
 
 
+def make_scan_mesh(n_shards: Optional[int] = None) -> jax.sharding.Mesh:
+    """1-D ``'scan'`` mesh for the sharded scan fan-out
+    (core/partition.py): one axis over the available devices, clamped to
+    the logical shard count — on a single-device host this degenerates to
+    a (1,) mesh and the fan-out runs its shards sequentially."""
+    ndev = len(jax.devices())
+    size = max(1, min(n_shards or ndev, ndev))
+    return make_mesh_compat((size,), ("scan",))
+
+
+def scan_shard_devices(n_shards: int,
+                       mesh: Optional[jax.sharding.Mesh] = None) -> list:
+    """Round-robin assignment of logical scan shards onto the scan mesh's
+    devices (shard i -> device i mod mesh size)."""
+    mesh = mesh if mesh is not None else make_scan_mesh(n_shards)
+    devs = list(mesh.devices.reshape(-1))
+    return [devs[i % len(devs)] for i in range(n_shards)]
+
+
 def make_rules(cfg: ModelConfig, shape: Optional[ShapeConfig],
                mesh: Optional[jax.sharding.Mesh]) -> MeshRules:
     """The per-cell sharding policy (single source of truth for the dry-run).

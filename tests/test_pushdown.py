@@ -168,6 +168,70 @@ def test_make_engine_factory():
         make_engine("volcano")
 
 
+def test_pushdown_sorted_range_prune_binary_search():
+    """Range predicate on the sorted pk column rides the sorted-run aware
+    binary-search pruner: same verdicts, O(log B + candidates) visits."""
+    rng = np.random.default_rng(21)
+    store = make_store(rng, n=2048, block_rows=32, dml=False)
+    idx = store.baseline.cols["k"].index
+    assert idx._sorted_meta()[2]              # pk column is fully sorted
+    p = Predicate("k", PredOp.BETWEEN, 500, 540)
+    verdicts = idx.prune(p)
+    assert idx.blocks_visited <= 12           # ~2 candidates + log2(64)
+    # equality with the generic tree descent
+    meta = idx._sorted_meta()
+    idx._sorted_meta_cache = (meta[0], meta[1], False)   # force generic
+    np.testing.assert_array_equal(verdicts, idx.prune(p))
+    idx._sorted_meta_cache = meta
+    # and the executor still answers correctly through it
+    q = Query(preds=(p,), aggs=(QAgg("count", None, "n"),))
+    rows, stats = PushdownExecutor().execute_stats(store, q)
+    assert rows[0]["n"] == 41
+    assert stats.blocks_skipped >= stats.blocks_total - 3
+
+
+def test_float_predicate_bounds_on_int_column():
+    """Float-valued range constants over int columns must not truncate:
+    d >= 100.5 excludes d == 100 in every engine, host and device."""
+    rng = np.random.default_rng(41)
+    store = make_store(rng, n=512, block_rows=64, dml=False)
+    table, _ = store.scan()
+    for p in (Predicate("d", PredOp.GE, 100.5),
+              Predicate("d", PredOp.LE, 99.5),
+              Predicate("d", PredOp.BETWEEN, 9.5, 200.5),
+              Predicate("d", PredOp.LT, 50.5),
+              Predicate("d", PredOp.GT, 300.5),
+              Predicate("d", PredOp.EQ, 100.5)):
+        q = Query(preds=(p,), group_by=("g",),
+                  aggs=(QAgg("count", None, "n"),))
+        want = norm(VectorEngine().execute(table, q))
+        assert norm(PushdownExecutor().execute(store, q)) == want, p
+        from repro.core.partition import ShardedScanExecutor
+        assert norm(ShardedScanExecutor(n_shards=3).execute(store, q)) \
+            == want, p
+        dev, stats = PushdownExecutor(device=True).execute_stats(store, q)
+        assert norm(dev) == want, p
+
+
+def test_incremental_rows_vectorized_filter_parity():
+    """live_incremental_rows batches live versions into a row-format block
+    and runs the vectorized predicate path — same survivors as the old
+    row-at-a-time filter."""
+    from repro.core.lsm import _row_matches
+    rng = np.random.default_rng(22)
+    store = make_store(rng, dml=True)         # unmerged incremental rows
+    preds = (Predicate("d", PredOp.BETWEEN, 50, 300),
+             Predicate("s", PredOp.EQ, "beta"))
+    inc = store._incremental_effective(store.current_ts)
+    assert inc
+    got = store.live_incremental_rows(inc, preds)
+    from repro.core.lsm import DmlType
+    want = [v.row for v in inc.values() if v.op != DmlType.DELETE
+            and _row_matches(v.row, preds, store.schema)]
+    assert got == want
+
+
+@pytest.mark.device
 def test_pushdown_device_path_matches_host():
     """Fused Pallas kernel route (interpret mode on CPU) ≡ host pushdown on
     the q1 shape: BETWEEN over FOR blocks + single-key group-by."""
@@ -187,4 +251,55 @@ def test_pushdown_device_path_matches_host():
         np.testing.assert_allclose(devm[g]["sv"], hostm[g]["sv"],
                                    atol=1e-3, rtol=1e-4)
         np.testing.assert_allclose(devm[g]["av"], hostm[g]["av"],
+                                   atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.device
+def test_pushdown_device_two_key_string_dict_two_values():
+    """Fused-kernel route for a two-key group-by — one int key, one STRING
+    dictionary key — with TWO value columns in one pass, no predicate
+    (the q2 shape): oracle parity with the host pushdown in interpret
+    mode."""
+    rng = np.random.default_rng(31)
+    store = make_store(rng, n=256, block_rows=64, dml=False)
+    q = Query(group_by=("g", "s"),
+              aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"),
+                    QAgg("avg", "d", "ad"), QAgg("max", "v", "mx")))
+    host = PushdownExecutor().execute(store, q)
+    dev, stats = PushdownExecutor(device=True).execute_stats(store, q)
+    assert stats.used_device            # the kernel actually answered it
+    hostm = {(r["g"], r["s"]): r for r in host}
+    devm = {(r["g"], r["s"]): r for r in dev}
+    assert hostm.keys() == devm.keys()
+    for k in hostm:
+        assert hostm[k]["n"] == devm[k]["n"]
+        for f in ("sv", "ad", "mx"):
+            np.testing.assert_allclose(devm[k][f], hostm[k][f],
+                                       atol=1e-3, rtol=1e-4)
+    # merge-on-read data must force the host fallback
+    rng2 = np.random.default_rng(32)
+    store2 = make_store(rng2, n=256, block_rows=64, dml=True)
+    dev2, stats2 = PushdownExecutor(device=True).execute_stats(store2, q)
+    assert not stats2.used_device
+    assert norm(dev2) == norm(PushdownExecutor().execute(store2, q))
+
+
+@pytest.mark.device
+def test_pushdown_device_no_predicate_q2_shape():
+    """q2-style no-predicate single-key group-by goes through the kernel
+    with all-zero deltas and lo = hi = 0 (select-everything window)."""
+    rng = np.random.default_rng(33)
+    store = make_store(rng, n=256, block_rows=64, dml=False)
+    q = Query(group_by=("d",), aggs=(QAgg("sum", "v", "sv"),
+                                     QAgg("max", "v", "mx")))
+    host = PushdownExecutor().execute(store, q)
+    dev, stats = PushdownExecutor(device=True).execute_stats(store, q)
+    assert stats.used_device
+    hostm = {r["d"]: r for r in host}
+    devm = {r["d"]: r for r in dev}
+    assert hostm.keys() == devm.keys()
+    for d in hostm:
+        np.testing.assert_allclose(devm[d]["sv"], hostm[d]["sv"],
+                                   atol=1e-3, rtol=1e-4)
+        np.testing.assert_allclose(devm[d]["mx"], hostm[d]["mx"],
                                    atol=1e-3, rtol=1e-4)
