@@ -5,6 +5,7 @@ C2: materialized views       -> mview.py
 C3: vectorized engine        -> vec.py / engine.py
 S1: column encodings         -> encoding.py
 S2: data-skipping index      -> skipping.py
+S3: granularity cost model   -> cost.py      (selectivity-adaptive plans)
 """
 from .relation import (And, Column, ColumnSpec, ColType, PredOp, Predicate,
                        Schema, Table, schema)
@@ -14,6 +15,8 @@ from .encoding import (ConstEncoded, DeltaFOREncoded, DictEncoded,
                        PlainEncoded, choose_encoding, encode_column,
                        general_compress_nbytes)
 from .skipping import Sketch, SkippingIndex, Verdict
+from .cost import (ScanEstimate, choose_batch_rows, choose_coalesce,
+                   choose_device_tile, choose_shards, estimate_scan)
 from .lsm import DmlType, LSMStore, MemTable, MinorSSTable, ScanStats, VirtualSSTable
 from .mview import (AggSpec, MAVDefinition, MJVDefinition, MLog,
                     MaterializedAggView, MaterializedJoinView)

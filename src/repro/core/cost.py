@@ -1,0 +1,152 @@
+"""Selectivity-adaptive granularity planner (paper §III / §V-B cost model).
+
+The paper's polymorphic vectorization engine "intelligently modulates"
+vectorization granularity per workload; this module is that cost model for
+the scan stack.  Before any block is touched, the per-query selectivity is
+estimated from the ``SkippingIndex`` sketches (``estimate_fraction``
+interpolation, combined with the zone-map verdicts the executor already
+computed), and three granularity knobs are derived from the estimate:
+
+* ``choose_coalesce``   — how many candidate blocks the pushdown executor
+  fuses into one vector batch.  Full / low-selectivity scans coalesce into
+  large batches (one predicate eval + one selection per ~``TARGET_BATCH_ROWS``
+  rows, amortizing per-block dispatch); highly selective scans keep
+  single-block batches so late materialization gathers stay tiny.
+* ``choose_shards``     — fan-out width for ``ShardedScanExecutor``, sized
+  to the estimated *surviving* rows (not the raw table): a selective probe
+  runs single-shard (thread fan-out would cost more than it saves), a full
+  scan fans out to the available cores.
+* ``choose_device_tile`` — blocks per fused-kernel tile, so the Pallas
+  launch uses selectivity-matched tile shapes: big tiles amortize grid steps
+  when nothing is pruned, single-block tiles keep the scalar-prefetch
+  visit-list prune effective when the zone maps are doing the work.
+
+All estimates are sketch-only (no data access): the same per-leaf
+(count, null_count, vmin, vmax) arrays that drive pruning drive the plan,
+so planning costs O(blocks) numpy arithmetic per predicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .relation import Predicate
+from .skipping import Verdict
+
+TARGET_BATCH_ROWS = 1 << 15    # coalesce candidate blocks up to ~32K-row batches
+MIN_ADAPTIVE_ROWS = 1 << 12    # below this, batching cannot amortize anything
+ROWS_PER_SHARD = 1 << 17       # ~128K surviving rows per fan-out shard
+DEVICE_TILE_ROWS = 1 << 14     # target fused-kernel tile height (rows)
+MAX_COALESCE = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanEstimate:
+    """Pre-scan cardinality estimate for one query over one baseline."""
+
+    n_rows: int                # baseline rows
+    n_blocks: int
+    candidate_blocks: int      # blocks with verdict != NONE
+    est_rows: float            # estimated rows surviving every predicate
+
+    @property
+    def selectivity(self) -> float:
+        return self.est_rows / self.n_rows if self.n_rows else 0.0
+
+    @property
+    def candidate_density(self) -> float:
+        """Estimated surviving fraction *within* the candidate window."""
+        if not self.candidate_blocks or not self.n_rows:
+            return 0.0
+        cand_rows = self.n_rows * self.candidate_blocks / self.n_blocks
+        return min(self.est_rows / cand_rows, 1.0)
+
+
+def estimate_scan(store, preds: Sequence[Predicate],
+                  verdicts: Optional[np.ndarray] = None) -> ScanEstimate:
+    """Estimate surviving rows for a conjunction of predicates from leaf
+    sketches: per-block matching fractions multiply across predicates
+    (independence assumption), NONE-verdict blocks contribute zero.  Columns
+    without numeric bounds fall back to verdict-coarse fractions
+    (ALL → 1, SOME → ½, NONE → 0)."""
+    base = store.baseline
+    nb = base.n_blocks
+    if nb == 0:
+        return ScanEstimate(0, 0, 0, 0.0)
+    counts = base.cols[base.schema.pk].index.leaf_counts().astype(np.float64)
+    if verdicts is not None:
+        cand_mask = verdicts != Verdict.NONE.value
+        candidates = int(cand_mask.sum())
+        if candidates <= 1:
+            # zone maps already decided the plan (one candidate block forces
+            # coalesce/shards/tile to 1) — skip per-predicate interpolation
+            est = float(counts[cand_mask].sum()) * (0.5 if preds else 1.0)
+            return ScanEstimate(base.nrows, nb, candidates, est)
+    frac = np.ones(nb, np.float64)
+    for p in preds:
+        f = base.cols[p.column].index.estimate_fraction(p)
+        if f is None:
+            if verdicts is None:
+                f = np.full(nb, 0.5)
+            else:
+                f = np.where(verdicts == Verdict.ALL.value, 1.0,
+                             np.where(verdicts == Verdict.NONE.value,
+                                      0.0, 0.5))
+        frac *= f
+    if verdicts is not None:
+        frac = np.where(verdicts == Verdict.NONE.value, 0.0, frac)
+        candidates = int((verdicts != Verdict.NONE.value).sum())
+    else:
+        candidates = nb
+    return ScanEstimate(base.nrows, nb, candidates,
+                        float((counts * frac).sum()))
+
+
+def choose_coalesce(est: ScanEstimate, block_rows: int,
+                    target_rows: int = TARGET_BATCH_ROWS) -> int:
+    """Blocks per vector batch for the pushdown executor.  Coalescing pays
+    when batches are dense (most candidate rows survive, so one whole-batch
+    selection replaces per-block work); selective or mid-density scans keep
+    single-block batches where per-block late materialization is already
+    O(|selected|)."""
+    if (est.candidate_blocks <= 1 or est.est_rows < MIN_ADAPTIVE_ROWS
+            or block_rows >= target_rows or est.candidate_density < 0.5):
+        return 1
+    return int(max(1, min(est.candidate_blocks,
+                          target_rows // max(block_rows, 1),
+                          MAX_COALESCE)))
+
+
+def choose_shards(est: ScanEstimate,
+                  max_workers: Optional[int] = None) -> int:
+    """Fan-out width from the estimated surviving-row count: one shard per
+    ``ROWS_PER_SHARD`` surviving rows, capped by worker slots and by the
+    candidate block count (an empty shard is pure overhead)."""
+    cores = max_workers or os.cpu_count() or 1
+    by_rows = math.ceil(est.est_rows / ROWS_PER_SHARD)
+    return int(max(1, min(max(cores, 1), by_rows,
+                          max(est.candidate_blocks, 1))))
+
+
+def choose_device_tile(est: ScanEstimate, block_rows: int,
+                       target_rows: int = DEVICE_TILE_ROWS) -> int:
+    """Blocks per fused-kernel tile.  Coalescing merges zone-map verdicts
+    (a tile survives if any member does), so tiles only grow when pruning
+    is not doing any work — full scans — and stay single-block otherwise."""
+    if (est.candidate_blocks < est.n_blocks or est.n_blocks <= 1
+            or block_rows >= target_rows
+            or est.est_rows < MIN_ADAPTIVE_ROWS):
+        return 1
+    return int(max(1, min(est.n_blocks, target_rows // max(block_rows, 1),
+                          MAX_COALESCE)))
+
+
+def choose_batch_rows(n_rows: int, max_batch: int = 1 << 16) -> int:
+    """Adaptive vectorization granularity for the in-memory engine: one
+    batch when the input fits, cache-sized chunks (~512 KiB per int64
+    column) for large inputs — the knob the paper's cost model modulates."""
+    return max(min(n_rows, max_batch), 1)

@@ -20,6 +20,7 @@ int8 dequantization (an encoding) into attention.
 from __future__ import annotations
 
 import dataclasses
+import math
 import zlib
 from typing import Any, List, Optional, Tuple
 
@@ -61,6 +62,14 @@ class EncodedColumn:
         Returns a bool mask, or None when this encoding cannot answer the
         predicate without decoding (caller then decodes and evaluates).
         """
+        return None
+
+    def pred_window(self, pred: Predicate) -> Optional[Tuple[int, int]]:
+        """Row window [lo, hi) containing exactly the matches of a *range*
+        predicate, for encodings that know the block is internally sorted —
+        sub-block scan granularity: two binary searches replace a full-block
+        compare, and the caller materializes only the window.  None when the
+        encoding cannot answer (unsorted block, unsupported op)."""
         return None
 
     def agg_min_max(self) -> Optional[Tuple[Any, Any]]:
@@ -130,6 +139,18 @@ class DeltaFOREncoded(EncodedColumn):
     def __len__(self):
         return int(self.deltas.shape[0])
 
+    @property
+    def is_sorted(self) -> bool:
+        """Whether this block's rows are non-decreasing (cached O(n) check):
+        sorted FOR blocks answer range predicates with a binary-searched row
+        window instead of a full-lane compare (``pred_window``)."""
+        s = getattr(self, "_is_sorted", None)
+        if s is None:
+            d = self.deltas
+            s = bool(d.shape[0] < 2 or np.all(d[1:] >= d[:-1]))
+            object.__setattr__(self, "_is_sorted", s)
+        return s
+
     @staticmethod
     def encode(values: np.ndarray) -> "DeltaFOREncoded":
         assert np.issubdtype(values.dtype, np.integer)
@@ -169,6 +190,45 @@ class DeltaFOREncoded(EncodedColumn):
         if pred.op == PredOp.BETWEEN:
             return (d >= v) & (d <= pred.value2 - self.base)
         return None
+
+    def _search(self, v, side: str) -> int:
+        """Binary search in the offset domain without dtype promotion: a
+        float or out-of-range needle would silently upcast (and copy) the
+        whole delta array, turning the O(log n) probe into O(n).  Fractional
+        constants round to the equivalent integer bound ('left' of v ==
+        'left' of ceil(v); 'right' of v == 'right' of floor(v)), so the
+        window still equals ``eval_pred`` exactly."""
+        if isinstance(v, float):
+            v = int(v) if v.is_integer() else (
+                math.ceil(v) if side == "left" else math.floor(v))
+        d = self.deltas
+        if v < 0:
+            return 0
+        if v > np.iinfo(d.dtype).max:
+            return int(d.shape[0])
+        return int(np.searchsorted(d, d.dtype.type(v), side))
+
+    def pred_window(self, pred):
+        """Sub-block granularity on sorted FOR blocks: the match set of a
+        range predicate is one contiguous row run, found with two binary
+        searches in the offset domain."""
+        if pred.op not in (PredOp.EQ, PredOp.LT, PredOp.LE, PredOp.GT,
+                           PredOp.GE, PredOp.BETWEEN) or not self.is_sorted:
+            return None
+        n = len(self)
+        v = pred.value - self.base
+        if pred.op == PredOp.EQ:
+            return (self._search(v, "left"), self._search(v, "right"))
+        if pred.op == PredOp.LT:
+            return (0, self._search(v, "left"))
+        if pred.op == PredOp.LE:
+            return (0, self._search(v, "right"))
+        if pred.op == PredOp.GT:
+            return (self._search(v, "right"), n)
+        if pred.op == PredOp.GE:
+            return (self._search(v, "left"), n)
+        return (self._search(v, "left"),
+                self._search(pred.value2 - self.base, "right"))
 
     def agg_min_max(self):
         if len(self) == 0:

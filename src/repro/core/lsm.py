@@ -26,7 +26,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .encoding import EncodedColumn, choose_encoding
-from .relation import And, Column, ColType, Predicate, Schema, Table
+from .relation import And, Column, ColType, PredOp, Predicate, Schema, Table
 from .skipping import Sketch, SkippingIndex, Verdict, DEFAULT_BLOCK_ROWS
 from .vec import BatchAttrs
 
@@ -129,19 +129,30 @@ class MinorSSTable:
 class ColumnSSTable:
     """One column's SSTable: encoded blocks + embedded skipping index
     (paper: 'each column data is stored as an independent SSTable' with the
-    data-skipping index integrated directly into the SSTable structure)."""
+    data-skipping index integrated directly into the SSTable structure).
+    ``null_blocks`` is the per-block NULL bitmap (None for null-free
+    columns): encodings store fill values in NULL slots, so the bitmap is
+    what keeps decode consistent with the sketches' null counts."""
 
     name: str
     blocks: List[EncodedColumn]
     index: SkippingIndex
     block_rows: int
     nrows: int
+    null_blocks: Optional[List[np.ndarray]] = None
 
     def nbytes(self) -> int:
         return sum(b.nbytes() for b in self.blocks) + self.index.nbytes()
 
     def decode_block(self, b: int) -> np.ndarray:
         return self.blocks[b].decode()
+
+    def block_nulls(self, b: int) -> Optional[np.ndarray]:
+        """Bool NULL mask of block ``b`` (None when the block is null-free)."""
+        if self.null_blocks is None:
+            return None
+        m = self.null_blocks[b]
+        return m if m is not None and m.any() else None
 
     def decode_all(self) -> np.ndarray:
         if not self.blocks:
@@ -162,6 +173,7 @@ class BlockView:
     hi: int                               # one past last row
     encoded: Dict[str, EncodedColumn]
     sketches: Dict[str, Sketch]
+    nulls: Dict[str, Optional[np.ndarray]]  # per-column NULL masks (or None)
     attrs: BatchAttrs
 
     @property
@@ -201,8 +213,9 @@ class VirtualSSTable:
         lo, hi = self.block_bounds(b)
         encoded = {c: self.cols[c].blocks[b] for c in columns}
         sketches = {c: self.cols[c].index.leaf_sketch(b) for c in columns}
+        nulls = {c: self.cols[c].block_nulls(b) for c in columns}
         null_count = max((s.null_count for s in sketches.values()), default=0)
-        return BlockView(b, lo, hi, encoded, sketches,
+        return BlockView(b, lo, hi, encoded, sketches, nulls,
                          BatchAttrs.for_block(null_count))
 
     def iter_blocks(self, columns: Sequence[str]) -> Iterable[BlockView]:
@@ -222,6 +235,10 @@ class VirtualSSTable:
         b, off = divmod(i, self.block_rows)
         out = {}
         for name, cst in self.cols.items():
+            bn = cst.block_nulls(b)
+            if bn is not None and bn[off]:
+                out[name] = None
+                continue
             v = cst.decode_block(b)[off]
             out[name] = v.item() if hasattr(v, "item") else v
         return out
@@ -245,7 +262,12 @@ class VirtualSSTable:
                 peers = {k: v[s:s + block_rows] for k, v in decoded_peers.items()}
                 blocks.append(choose_encoding(vals[s:s + block_rows], peers=peers))
             index = SkippingIndex.build(vals, nulls, block_rows=block_rows)
-            cols[spec.name] = ColumnSSTable(spec.name, blocks, index, block_rows, n)
+            null_blocks = None
+            if nulls is not None and n and nulls.any():
+                null_blocks = [np.ascontiguousarray(nulls[s:s + block_rows])
+                               for s in range(0, n, block_rows)]
+            cols[spec.name] = ColumnSSTable(spec.name, blocks, index,
+                                            block_rows, n, null_blocks)
             decoded_peers[spec.name] = vals
         return VirtualSSTable(schema, version, sorted_tbl.col(pk_name).values,
                               cols, block_rows)
@@ -266,6 +288,9 @@ class ScanStats:
     used_pushdown: bool = False
     used_device: bool = False          # fused Pallas kernel answered the scan
     n_shards: int = 0                  # >0: mesh-sharded fan-out ran
+    est_rows: float = 0.0              # planner estimate of surviving rows
+    batch_blocks: int = 1              # blocks fused per vector batch
+    device_tile_blocks: int = 1        # blocks fused per kernel tile
 
     def absorb(self, other: "ScanStats") -> None:
         """Fold one shard's counters into the query-level stats (the
@@ -528,11 +553,10 @@ class LSMStore:
                 else:
                     mask = np.ones(hi - lo, bool)
                     for p in preds:
-                        enc = base.cols[p.column].blocks[b]
-                        m = enc.eval_pred(p)
-                        if m is None:
-                            m = p.eval(Column(self.schema.spec(p.column), enc.decode()))
-                        mask &= m
+                        cst = base.cols[p.column]
+                        mask &= eval_block_pred(self.schema.spec(p.column),
+                                                cst.blocks[b], p,
+                                                cst.block_nulls(b))
                     stats.blocks_scanned += 1
                 idx = np.nonzero(mask)[0] + lo
                 keep_rows.append(idx)
@@ -548,42 +572,63 @@ class LSMStore:
         # vectorization'): decode each surviving block once, gather by
         # column — never materializes per-row dicts.
         base_cols: Dict[str, np.ndarray] = {}
+        base_nulls: Dict[str, Optional[np.ndarray]] = {}
         if base_idx.size:
             blk_ids = np.unique(base_idx // self.block_rows)
             for name in columns:
                 parts = []
+                nparts = []
+                cst = base.cols[name]
                 for b in blk_ids:
                     lo = int(b) * self.block_rows
-                    dec = base.cols[name].decode_block(int(b))
+                    dec = cst.decode_block(int(b))
                     sel = base_idx[(base_idx >= lo)
                                    & (base_idx < lo + self.block_rows)] - lo
                     parts.append(dec[sel])
+                    bn = cst.block_nulls(int(b))
+                    nparts.append(np.zeros(sel.shape[0], bool)
+                                  if bn is None else bn[sel])
                 base_cols[name] = np.concatenate(parts)
+                nmask = np.concatenate(nparts)
+                base_nulls[name] = nmask if nmask.any() else None
         else:
             base_cols = {name: None for name in columns}
+            base_nulls = {name: None for name in columns}
 
-        # -- incremental rows: row-at-a-time predicate eval (row format) ----
+        # -- incremental rows: vectorized predicate eval (row format) -------
         inc_rows = self.live_incremental_rows(inc, preds)
         sub_schema = Schema(tuple(self.schema.spec(c) for c in columns))
         out_cols: Dict[str, Column] = {}
         for name in columns:
             spec = self.schema.spec(name)
             parts = []
+            nparts = []
             if base_cols.get(name) is not None:
                 parts.append(base_cols[name])
+                nparts.append(base_nulls[name]
+                              if base_nulls[name] is not None
+                              else np.zeros(base_cols[name].shape[0], bool))
             if inc_rows:
-                parts.append(np.asarray(
-                    [r[name] for r in inc_rows],
-                    dtype=base_cols[name].dtype
-                    if base_cols.get(name) is not None else None))
+                inc_col = Column.from_values(spec,
+                                             [r[name] for r in inc_rows])
+                vals = inc_col.values
+                if parts and vals.dtype != parts[0].dtype:
+                    vals = vals.astype(parts[0].dtype)
+                parts.append(vals)
+                nparts.append(inc_col.nulls if inc_col.nulls is not None
+                              else np.zeros(len(inc_rows), bool))
             if parts:
                 merged = (np.concatenate(parts) if len(parts) > 1
                           else parts[0])
+                nmask = (np.concatenate(nparts) if len(nparts) > 1
+                         else nparts[0])
             else:
                 merged = np.empty(
                     (0,), dtype=spec.ctype.np_dtype
                     if spec.ctype != ColType.STR else "S1")
-            out_cols[name] = Column(spec, merged)
+                nmask = np.zeros(0, bool)
+            out_cols[name] = Column(spec, merged,
+                                    nmask if nmask.any() else None)
         tbl = Table(sub_schema, out_cols)
         return tbl, stats
 
@@ -647,13 +692,15 @@ class LSMStore:
             stats.blocks_scanned += 1
             mask = np.ones(hi - lo, bool)
             for p in preds:
-                enc = base.cols[p.column].blocks[b]
-                m = enc.eval_pred(p)
-                if m is None:
-                    m = p.eval(Column(self.schema.spec(p.column), enc.decode()))
-                mask &= m
-            vals = base.cols[col].decode_block(b)[mask]
-            total_count += int(mask.sum())
+                cst = base.cols[p.column]
+                mask &= eval_block_pred(self.schema.spec(p.column),
+                                        cst.blocks[b], p, cst.block_nulls(b))
+            # count(*) counts every matching row; count/sum/min/max over a
+            # column skip its NULL slots (fill values in the decode).
+            bn = base.cols[col].block_nulls(b)
+            vmask = mask if bn is None else (mask & ~bn)
+            vals = base.cols[col].decode_block(b)[vmask]
+            total_count += int(mask.sum() if column is None else vmask.sum())
             if vals.size and vals.dtype.kind in "iuf":
                 total_sum += float(vals.sum())
             if vals.size:
@@ -665,11 +712,13 @@ class LSMStore:
             if i >= 0:  # subtract old baseline contribution
                 old = base.row(i)
                 if _row_matches(old, preds, self.schema):
-                    total_count -= 1
+                    if column is None or old[col] is not None:
+                        total_count -= 1
                     if isinstance(old[col], (int, float)):
                         total_sum -= old[col]
             if v.op != DmlType.DELETE and _row_matches(v.row, preds, self.schema):
-                total_count += 1
+                if column is None or v.row[col] is not None:
+                    total_count += 1
                 if isinstance(v.row[col], (int, float)):
                     total_sum += v.row[col]
         stats.rows_merged_incremental = len(inc)
@@ -697,6 +746,25 @@ class LSMStore:
             "baseline": self.baseline.nbytes(),
             "incremental_rows": len(self.memtable) + sum(len(m) for m in self.minors),
         }
+
+
+def eval_block_pred(spec, enc: EncodedColumn, pred: Predicate,
+                    nulls: Optional[np.ndarray]) -> np.ndarray:
+    """Null-aware predicate mask over one encoded baseline block.
+
+    Encodings store fill values in NULL slots and know nothing about the
+    bitmap, so the encoded-domain fast path (``eval_pred``) must be masked
+    with the block's NULL bitmap afterwards (a NULL never satisfies a value
+    predicate), and IS_NULL / NOT_NULL are answered from the bitmap alone.
+    Shared by ``LSMStore.scan``/``aggregate`` and the pushdown executors.
+    """
+    if pred.op in (PredOp.IS_NULL, PredOp.NOT_NULL):
+        m = nulls if nulls is not None else np.zeros(len(enc), bool)
+        return m.copy() if pred.op == PredOp.IS_NULL else ~m
+    m = enc.eval_pred(pred)
+    if m is None:
+        return pred.eval(Column(spec, enc.decode(), nulls))
+    return m & ~nulls if nulls is not None else m
 
 
 def _row_matches(row: Dict[str, Any], preds: Sequence[Predicate], sch: Schema) -> bool:

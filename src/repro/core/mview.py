@@ -58,6 +58,21 @@ class MLogEntry:
     row: Dict[str, Any]
 
 
+class MLogPurged(RuntimeError):
+    """The requested delta window reaches below the mlog's purge horizon:
+    entries in (ts_exclusive, purged_below] are gone, so any delta computed
+    from the surviving tail would be silently incomplete.  Consumers must
+    fall back to a full refresh (which re-reads the base table and purges
+    up to its own snapshot)."""
+
+    def __init__(self, ts_exclusive: int, purged_below: int):
+        super().__init__(
+            f"mlog delta since ts={ts_exclusive} unavailable: entries at or "
+            f"below ts={purged_below} were purged — full refresh required")
+        self.ts_exclusive = ts_exclusive
+        self.purged_below = purged_below
+
+
 class MLog:
     """Materialized view log over one base table (internally 'an ordinary
     table': we expose it as one via :meth:`as_table`)."""
@@ -79,6 +94,12 @@ class MLog:
             self.entries.append(MLogEntry(ts, "U", "N", pk, dict(new)))
 
     def since(self, ts_exclusive: int, ts_inclusive: Optional[int] = None) -> List[MLogEntry]:
+        """Entries with ts in (ts_exclusive, ts_inclusive].  Raises
+        :class:`MLogPurged` when ``purge_upto`` already trimmed entries
+        above ``ts_exclusive`` — the surviving tail would be an incomplete
+        delta, which previously was returned silently."""
+        if ts_exclusive < self.purged_below:
+            raise MLogPurged(ts_exclusive, self.purged_below)
         hi = math.inf if ts_inclusive is None else ts_inclusive
         return [e for e in self.entries if ts_exclusive < e.ts <= hi]
 
@@ -159,7 +180,7 @@ class MaterializedAggView:
         self._col_container: Optional[Dict[str, np.ndarray]] = None
         self.stats = {"full_refreshes": 0, "incr_refreshes": 0,
                       "rows_processed": 0, "groups_recomputed": 0,
-                      "mlog_purged": 0}
+                      "mlog_purged": 0, "purge_full_refreshes": 0}
         self.full_refresh()
 
     # ---- helpers ----------------------------------------------------------
@@ -260,6 +281,14 @@ class MaterializedAggView:
         for v in self.base._incremental_effective(ts).values():
             if v.row is not None and any(v.row.get(c) is None for c in needed):
                 return None
+        # Grouped pushdown counts keep the engine-wide fill-value convention
+        # (count(col) == rows per group), while _apply_row skips NULLs — so
+        # a baseline holding NULLs in any needed column must take the
+        # row-at-a-time path for the two containers to agree.
+        for c in needed:
+            idx = self.base.baseline.cols[c].index
+            if idx.root >= 0 and idx.nodes[idx.root].sketch.null_count:
+                return None
         for col, track in self._agg_columns().items():
             if track and self.base.schema.spec(col).ctype == ColType.STR:
                 return None
@@ -299,7 +328,13 @@ class MaterializedAggView:
         if self.refresh_mode == "full" or self.mlog is None:
             return self.full_refresh(ts)
         ts = self.base.current_ts if ts is None else ts
-        entries = self.mlog.since(self.last_refresh_ts, ts)
+        try:
+            entries = self.mlog.since(self.last_refresh_ts, ts)
+        except MLogPurged:
+            # TTL purge overtook our refresh horizon: the algebraic delta is
+            # unrecoverable, rebuild the container from the base table.
+            self.stats["purge_full_refreshes"] += 1
+            return self.full_refresh(ts)
         self._apply_entries(self.groups, entries, count_stats=True)
         # Non-distributive fallback: recompute dirty groups from base.
         dirty = [k for k, g in self.groups.items() if g.dirty_minmax]
@@ -387,7 +422,16 @@ class MaterializedAggView:
     def query(self, realtime: bool = True) -> Table:
         groups = self.groups
         if realtime and self.mlog is not None:
-            pending = self.mlog.since(self.last_refresh_ts)
+            try:
+                pending = self.mlog.since(self.last_refresh_ts)
+            except MLogPurged:
+                # The not-yet-applied tail was purged out from under us:
+                # the container + tail merge cannot be trusted, so rebuild
+                # at the current snapshot (freshness preserved, cost paid).
+                self.stats["purge_full_refreshes"] += 1
+                self.full_refresh()
+                groups = self.groups
+                pending = []
             if pending:
                 groups = {k: dataclasses.replace(
                     g, counts=dict(g.counts), sums=dict(g.sums),
@@ -477,8 +521,12 @@ class MaterializedJoinView:
 
     def incremental_refresh(self):
         lts, rts = self.left.current_ts, self.right.current_ts
-        dl = self.llog.since(self.last_ts[0], lts)
-        dr = self.rlog.since(self.last_ts[1], rts)
+        try:
+            dl = self.llog.since(self.last_ts[0], lts)
+            dr = self.rlog.since(self.last_ts[1], rts)
+        except MLogPurged:
+            # either log's TTL purge passed our snapshot: delta incomplete
+            return self.full_refresh()
         # ΔL ⋈ R (right as of its *previous* snapshot to avoid double count,
         # then L(new) ⋈ ΔR covers the rest)
         rtab, _ = self.right.scan(ts=self.last_ts[1])

@@ -16,6 +16,14 @@ with a ``Sketch.merge``-style union (counts/sums add, mins/maxs fold), and
 finalized with ``VectorEngine`` result conventions, so the fan-out answer
 matches the single-shard engines for any shard count.
 
+The fan-out width is **cost-chosen** by default: ``ShardedScanExecutor()``
+asks the granularity planner (``core/cost.py``) for a shard count sized to
+the *estimated surviving* rows of the query — a selective probe runs
+single-shard (fan-out overhead would dominate), a full scan fans out to the
+cores — while an explicit ``n_shards`` pins the width for parity sweeps and
+scaling benchmarks.  The same estimate picks the per-shard scan coalescing
+and, on the device path, the fused-kernel tile height.
+
 Shards execute concurrently on a thread pool sized to the host cores (the
 per-shard work is numpy decode/filter/bincount, which releases the GIL).
 With ``device=True`` the supported query shape is staged once through
@@ -33,10 +41,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import cost
 from . import pushdown as _pd
 from .engine import Query, VectorEngine, _item, pack_sort_keys
 from .lsm import LSMStore, ScanStats, VirtualSSTable
-from .relation import ColType
+from .relation import ColType, Column
 from .skipping import Verdict
 
 
@@ -73,9 +82,7 @@ def range_partition(base: VirtualSSTable, n_shards: int) -> List[BlockShard]:
     nb = base.n_blocks
     if nb == 0:
         return [BlockShard(s, 0, 0, 0) for s in range(n_shards)]
-    idx = base.cols[base.schema.pk].index
-    weights = np.asarray([idx.leaf_sketch(b).count for b in range(nb)],
-                         np.int64)
+    weights = base.cols[base.schema.pk].index.leaf_counts()
     cum = np.concatenate([[0], np.cumsum(weights)])
     total = int(cum[-1])
     cuts = [int(np.searchsorted(cum, total * s / n_shards, side="left"))
@@ -121,15 +128,22 @@ class GroupedPartial:
     sums: Dict[str, np.ndarray]                 # per agg column [G]
     mins: Dict[str, np.ndarray]
     maxs: Dict[str, np.ndarray]
+    # flat (group-less) shards track SQL non-null counts per aggregated
+    # column so count(col)/avg skip NULL slots; grouped partials keep the
+    # engine-wide fill-value convention (cnts empty).
+    cnts: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------- build
     @classmethod
     def from_columns(cls, q: Query, cols: Dict[str, np.ndarray],
-                     n_rows: int) -> "GroupedPartial":
+                     n_rows: int,
+                     nulls: Optional[Dict[str, Optional[np.ndarray]]] = None
+                     ) -> "GroupedPartial":
         """Aggregate one shard's late-materialized columns, mirroring
         ``VectorEngine._groupby`` key discovery (packed sort keys when the
         ranges allow, record arrays otherwise) and array-indexed
-        accumulation."""
+        accumulation.  ``nulls`` (flat shards only) strips NULL slots from
+        each aggregated column before accumulation."""
         gb = tuple(q.group_by)
         agg_cols = sorted({a.column for a in q.aggs if a.column})
         if gb:
@@ -165,22 +179,38 @@ class GroupedPartial:
         sums: Dict[str, np.ndarray] = {}
         mins: Dict[str, np.ndarray] = {}
         maxs: Dict[str, np.ndarray] = {}
+        cnts: Dict[str, np.ndarray] = {}
         for c in agg_cols:
             v = np.asarray(cols[c])
+            ccodes = codes
+            if not gb:
+                m = nulls.get(c) if nulls else None
+                if m is not None:
+                    v = v[~m]
+                    ccodes = codes[: v.shape[0]]    # flat: codes all zero
+                cnts[c] = np.asarray([v.shape[0]], np.int64)
             if c in need_sum:
-                if v.dtype.kind in "iub":      # exact, associative int sums
+                if not gb and v.dtype.kind in "iub":
+                    # flat int sums: overflow-exact Python ints (object
+                    # array) — int64 accumulation wraps near 2^63 and the
+                    # sketch partials these merge with are already exact
+                    from .skipping import _exact_int_sum
+                    s = np.asarray(
+                        [_exact_int_sum(v.astype(np.int64, copy=False))],
+                        dtype=object)
+                elif v.dtype.kind in "iub":    # exact, associative int sums
                     s = np.zeros(G, np.int64)
-                    np.add.at(s, codes, v.astype(np.int64))
+                    np.add.at(s, ccodes, v.astype(np.int64))
                 else:
-                    s = np.bincount(codes, weights=v.astype(np.float64),
+                    s = np.bincount(ccodes, weights=v.astype(np.float64),
                                     minlength=G)
                 sums[c] = s
             if c in need_min or c in need_max:
                 if v.size:
                     mn = np.full(G, v.max(), v.dtype)
-                    np.minimum.at(mn, codes, v)
+                    np.minimum.at(mn, ccodes, v)
                     mx = np.full(G, v.min(), v.dtype)
-                    np.maximum.at(mx, codes, v)
+                    np.maximum.at(mx, ccodes, v)
                 else:                    # unread: rows_per_group is all zero
                     mn = np.zeros(G, v.dtype)
                     mx = np.zeros(G, v.dtype)
@@ -188,7 +218,7 @@ class GroupedPartial:
                     mins[c] = mn
                 if c in need_max:
                     maxs[c] = mx
-        return cls(gb, keys, rows_per_group, sums, mins, maxs)
+        return cls(gb, keys, rows_per_group, sums, mins, maxs, cnts)
 
     # ------------------------------------------------------------- merge
     @staticmethod
@@ -213,12 +243,28 @@ class GroupedPartial:
             s[ia] += a.sums[c]
             s[ib] += b.sums[c]
             sums[c] = s
-        pa, pb = a.rows_per_group > 0, b.rows_per_group > 0
-        mins = {c: _fold(G, ia, a.mins[c], pa, ib, b.mins[c], pb, np.minimum)
+        cnts: Dict[str, np.ndarray] = {}
+        for c in a.cnts:
+            n = np.zeros(G, np.int64)
+            n[ia] += a.cnts[c]
+            n[ib] += b.cnts[c]
+            cnts[c] = n
+
+        def present(p: "GroupedPartial", c: str, idx_rows: np.ndarray):
+            # per-column presence: a flat shard whose rows are all NULL in
+            # ``c`` contributes no min/max even though it has rows
+            return p.cnts[c] > 0 if c in p.cnts else idx_rows > 0
+
+        mins = {c: _fold(G, ia, a.mins[c], present(a, c, a.rows_per_group),
+                         ib, b.mins[c], present(b, c, b.rows_per_group),
+                         np.minimum)
                 for c in a.mins}
-        maxs = {c: _fold(G, ia, a.maxs[c], pa, ib, b.maxs[c], pb, np.maximum)
+        maxs = {c: _fold(G, ia, a.maxs[c], present(a, c, a.rows_per_group),
+                         ib, b.maxs[c], present(b, c, b.rows_per_group),
+                         np.maximum)
                 for c in a.maxs}
-        return GroupedPartial(a.group_cols, keys, rows, sums, mins, maxs)
+        return GroupedPartial(a.group_cols, keys, rows, sums, mins, maxs,
+                              cnts)
 
     # ---------------------------------------------------------- finalize
     def finalize(self, q: Query) -> List[Dict[str, Any]]:
@@ -232,16 +278,23 @@ class GroupedPartial:
             for a in q.aggs:
                 if a.column is None:
                     r[a.alias] = n
-                elif a.op == "count":
-                    r[a.alias] = n
-                elif n == 0:
+                    continue
+                # SQL null-skipping: per-column non-null count when tracked
+                cn = (int(self.cnts[a.column][0])
+                      if a.column in self.cnts and self.keys else n)
+                if a.op == "count":
+                    r[a.alias] = cn
+                elif cn == 0:
                     r[a.alias] = 0 if a.op == "sum" else None
                 elif a.op in ("sum", "avg"):
+                    # object-dtype partials hold exact Python ints, so type
+                    # by the value, not by a (possibly absent) array dtype
                     s = self.sums[a.column][0]
                     if a.op == "avg":
-                        r[a.alias] = float(s) / n
+                        r[a.alias] = float(s) / cn
                     else:
-                        r[a.alias] = (int(s) if s.dtype.kind in "iu"
+                        r[a.alias] = (int(s)
+                                      if isinstance(s, (int, np.integer))
                                       else float(s))
                 else:
                     src = self.mins if a.op == "min" else self.maxs
@@ -299,9 +352,13 @@ class ShardedScanExecutor:
 
     name = "sharded"
 
-    def __init__(self, n_shards: int = 2, device: bool = False,
+    def __init__(self, n_shards: Optional[int] = None, device: bool = False,
                  engine: Optional[VectorEngine] = None,
                  max_workers: Optional[int] = None):
+        # n_shards None == cost-based: the planner picks the fan-out width
+        # per query from the estimated surviving-row count (a selective
+        # probe stays single-shard, a full scan fans out to the cores).
+        # An explicit int pins the width (parity sweeps, scaling benches).
         self.n_shards = n_shards
         self.device = device
         self.engine = engine or VectorEngine()
@@ -318,17 +375,27 @@ class ShardedScanExecutor:
                       ts: Optional[int] = None
                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         ts = store.current_ts if ts is None else ts
-        stats = ScanStats(used_pushdown=True, n_shards=self.n_shards)
+        stats = ScanStats(used_pushdown=True)
         self.last_stats = stats
 
         # -- stages 0–1 shared with PushdownExecutor: merge-on-read
         # bookkeeping + global zone-map prune (verdicts sliced per shard)
         needed, over, inc_rows, verdicts = _pd.scan_preamble(store, q, ts,
                                                              stats)
-        shards = range_partition(store.baseline, self.n_shards)
+
+        # -- cost model: estimate surviving rows from the sketches, pick
+        # the fan-out width and the per-shard scan granularity
+        est = cost.estimate_scan(store, q.preds, verdicts)
+        stats.est_rows = est.est_rows
+        n_shards = (self.n_shards if self.n_shards is not None
+                    else cost.choose_shards(est, self.max_workers))
+        stats.n_shards = n_shards
+        coalesce = cost.choose_coalesce(est, store.baseline.block_rows)
+        stats.batch_blocks = coalesce
+        shards = range_partition(store.baseline, n_shards)
 
         if self.device and not inc_rows and not over.size:
-            out = self._try_device(store, q, shards, verdicts, stats)
+            out = self._try_device(store, q, shards, verdicts, stats, est)
             if out is not None:
                 return out, stats
 
@@ -336,10 +403,10 @@ class ShardedScanExecutor:
                        for a in q.aggs if a.column)
         if q.aggs and not str_aggs:
             rows = self._execute_partials(store, q, needed, shards, verdicts,
-                                          over, inc_rows, stats)
+                                          over, inc_rows, stats, coalesce)
         else:
             rows = self._execute_gather(store, q, needed, shards, verdicts,
-                                        over, inc_rows, stats)
+                                        over, inc_rows, stats, coalesce)
         return rows, stats
 
     # -------------------------------------------------- shard scheduling
@@ -354,7 +421,8 @@ class ShardedScanExecutor:
 
     # ------------------------------------------------- partial-agg path
     def _execute_partials(self, store, q, needed, shards, verdicts, over,
-                          inc_rows, stats) -> List[Dict[str, Any]]:
+                          inc_rows, stats, coalesce=1
+                          ) -> List[Dict[str, Any]]:
         mat_cols = sorted(set(q.group_by)
                           | {a.column for a in q.aggs if a.column})
         flat = not q.group_by            # group-less: sketches can answer
@@ -364,11 +432,13 @@ class ShardedScanExecutor:
             sstats = ScanStats()
             sketch = _pd._SketchAgg(q) if flat else None
             filtered = _pd.filter_blocks(store, q, needed, verdicts, over,
-                                         shard.block_ids(), sstats, sketch)
-            cols = _pd.PushdownExecutor._materialize(store, mat_cols,
-                                                     filtered, ())
+                                         shard.block_ids(), sstats, sketch,
+                                         coalesce)
+            cols, masks = _pd.PushdownExecutor._materialize(
+                store, mat_cols, filtered, (), with_nulls=True)
             n = sum(fb.n_selected for fb in filtered)
-            partial = GroupedPartial.from_columns(q, cols, n)
+            partial = GroupedPartial.from_columns(q, cols, n,
+                                                  masks if flat else None)
             if sketch is not None and sketch.n_rows:
                 partial = GroupedPartial.merge(
                     partial, _sketch_to_partial(q, sketch))
@@ -379,44 +449,52 @@ class ShardedScanExecutor:
         for _, sstats in results:
             stats.absorb(sstats)
         if inc_rows:
+            cols, masks = _rows_to_columns(store, mat_cols, inc_rows)
             partials.append(GroupedPartial.from_columns(
-                q, _rows_to_columns(store, mat_cols, inc_rows),
-                len(inc_rows)))
+                q, cols, len(inc_rows), masks if flat else None))
         if not partials:                 # empty baseline, no increments
-            partials = [GroupedPartial.from_columns(
-                q, _rows_to_columns(store, mat_cols, []), 0)]
+            cols, masks = _rows_to_columns(store, mat_cols, [])
+            partials = [GroupedPartial.from_columns(q, cols, 0)]
         merged = tree_reduce(partials, GroupedPartial.merge)
         return merged.finalize(q)
 
     # ---------------------------------------------- gather (projection)
     def _execute_gather(self, store, q, needed, shards, verdicts, over,
-                        inc_rows, stats) -> List[Dict[str, Any]]:
+                        inc_rows, stats, coalesce=1) -> List[Dict[str, Any]]:
         def scan_shard(shard: BlockShard):
             sstats = ScanStats()
             filtered = _pd.filter_blocks(store, q, needed, verdicts, over,
-                                         shard.block_ids(), sstats)
-            cols = _pd.PushdownExecutor._materialize(store, needed,
-                                                     filtered, ())
+                                         shard.block_ids(), sstats, None,
+                                         coalesce)
+            cols, masks = _pd.PushdownExecutor._materialize(
+                store, needed, filtered, (), with_nulls=True)
             n = sum(fb.n_selected for fb in filtered)
-            return cols, n, sstats
+            return cols, masks, n, sstats
 
         results = self._map_shards(scan_shard, shards)
-        for _, _, sstats in results:
+        for _, _, _, sstats in results:
             stats.absorb(sstats)
-        parts = {name: [c[name] for c, n, _ in results if n]
+        parts = {name: [c[name] for c, _, n, _ in results if n]
                  for name in needed}
-        cols = _pd.assemble_columns(store, needed, parts, inc_rows)
-        n_rows = sum(n for _, n, _ in results) + len(inc_rows)
+        nparts = {name: [m[name] for _, m, n, _ in results if n]
+                  for name in needed}
+        cols, masks = _pd.assemble_columns(store, needed, parts, inc_rows,
+                                           nparts)
+        n_rows = sum(n for _, _, n, _ in results) + len(inc_rows)
         return self.engine.finalize(q, lambda nm: cols[nm], n_rows,
-                                    store.schema.names)
+                                    store.schema.names,
+                                    nulls=lambda nm: masks[nm])
 
     # ------------------------------------------------------- device path
-    def _try_device(self, store, q, shards, verdicts, stats
+    def _try_device(self, store, q, shards, verdicts, stats, est=None
                     ) -> Optional[List[Dict[str, Any]]]:
         """Stage the fused-kernel inputs once, fan the kernel out over the
         per-shard block slices (one mesh device per shard, round-robin),
         then tree-merge the device partials: counts/sums add, mins/maxs
-        fold — the same combination rule as ``GroupedPartial.merge``."""
+        fold — the same combination rule as ``GroupedPartial.merge``.
+        Each shard's kernel launches with the cost-model tile height
+        (blocks fused per grid step) chosen from the selectivity
+        estimate."""
         plan = _pd.plan_device(store, q)
         if plan is None:
             return None
@@ -429,6 +507,9 @@ class ShardedScanExecutor:
         stats.blocks_skipped = int((~block_mask).sum())
         stats.blocks_scanned = int(block_mask.sum())
         stats.used_device = True
+        tile = (cost.choose_device_tile(est, store.baseline.block_rows)
+                if est is not None else 1)
+        stats.device_tile_blocks = tile
         import jax
         from ..kernels import ops
         from ..launch.mesh import scan_shard_devices
@@ -442,7 +523,7 @@ class ShardedScanExecutor:
                 ins = [jax.device_put(x, dev) for x in ins]
             return ops.fused_scan_agg(ins[0], ins[1], ins[2], plan.lo,
                                       plan.hi, ins[3], ins[4], ndv=stage.ndv,
-                                      block_mask=ins[5])
+                                      block_mask=ins[5], coalesce=tile)
 
         # launch every shard's kernel before blocking on any result — jax
         # dispatch is async, so on a multi-device mesh the shards overlap
@@ -462,28 +543,44 @@ class ShardedScanExecutor:
 
 def _sketch_to_partial(q: Query, sk: "_pd._SketchAgg") -> GroupedPartial:
     """Lift the flat partials a shard absorbed from clean-block sketches
-    (verdict-ALL, null-free — never decoded) into a ``GroupedPartial`` so
-    they merge with the shard's scanned rows.  ``_SketchAgg.absorb`` only
-    accepts blocks whose sketches answer every aggregate the query needs,
-    so each requested stat is present whenever rows were absorbed."""
+    (verdict-ALL, never decoded) into a ``GroupedPartial`` so they merge
+    with the shard's scanned rows.  ``_SketchAgg.absorb`` only accepts
+    blocks whose sketches answer every aggregate the query needs, so each
+    requested stat is present whenever non-null rows were absorbed; the
+    sketch counts are already null-excluded (SQL count(col))."""
     need_sum = {a.column for a in q.aggs if a.op in ("sum", "avg")}
     need_min = {a.column for a in q.aggs if a.op == "min"}
     need_max = {a.column for a in q.aggs if a.op == "max"}
-    sums = {c: np.asarray([sk.vsum.get(c, 0)])
+    agg_cols = sorted({a.column for a in q.aggs if a.column})
+    # object dtype keeps integer sketch sums as exact Python ints through
+    # the merge tree (int64 coercion would wrap the very sums Sketch.of
+    # computes exactly); float sketch sums ride along unchanged
+    sums = {c: np.asarray([sk.vsum.get(c, 0)], dtype=object)
             for c in sorted(need_sum) if c is not None}
-    mins = {c: np.asarray([sk.vmin[c]]) for c in sorted(need_min) if c}
-    maxs = {c: np.asarray([sk.vmax[c]]) for c in sorted(need_max) if c}
+    mins = {c: np.asarray([sk.vmin.get(c, 0)])
+            for c in sorted(need_min) if c}
+    maxs = {c: np.asarray([sk.vmax.get(c, 0)])
+            for c in sorted(need_max) if c}
+    cnts = {c: np.asarray([sk.cnt.get(c, 0)], np.int64) for c in agg_cols}
     return GroupedPartial((), [()], np.asarray([sk.n_rows], np.int64),
-                          sums, mins, maxs)
+                          sums, mins, maxs, cnts)
 
 
 def _rows_to_columns(store: LSMStore, names: Sequence[str],
-                     rows: Sequence[Dict[str, Any]]) -> Dict[str, np.ndarray]:
+                     rows: Sequence[Dict[str, Any]]
+                     ) -> Tuple[Dict[str, np.ndarray],
+                                Dict[str, Optional[np.ndarray]]]:
     """Batch merge-on-read incremental rows into schema-typed column arrays
-    (the row-format block the partial aggregator consumes)."""
-    out: Dict[str, np.ndarray] = {}
+    plus NULL masks (the row-format block the partial aggregator
+    consumes)."""
+    cols: Dict[str, np.ndarray] = {}
+    masks: Dict[str, Optional[np.ndarray]] = {}
     for name in names:
         spec = store.schema.spec(name)
-        dt = spec.ctype.np_dtype if spec.ctype != ColType.STR else np.bytes_
-        out[name] = np.asarray([r[name] for r in rows], dtype=dt)
-    return out
+        col = Column.from_values(spec, [r[name] for r in rows])
+        vals = col.values
+        if spec.ctype == ColType.STR and vals.dtype.kind != "S":
+            vals = vals.astype(np.bytes_)
+        cols[name] = vals
+        masks[name] = col.nulls
+    return cols, masks

@@ -27,13 +27,27 @@ instead of a fully-decoded table.  The operator pipeline is:
   versions are excluded from their blocks, so results are identical to
   ``VectorEngine`` over a full ``store.scan()``.
 
+* **adaptive granularity** — before any block is touched, the cost model
+  (``core/cost.py``) estimates per-query selectivity from the skipping-index
+  sketches and chooses the scan granularity: full/dense scans fuse adjacent
+  candidate blocks into large vector batches (one selection per
+  ``TARGET_BATCH_ROWS``-sized batch), selective scans keep single-block
+  batches, and a lone range predicate over a sorted block drops to
+  *sub-block* granularity (a binary-searched row window instead of a
+  full-lane compare).  ``PushdownExecutor(granularity=k)`` pins the legacy
+  fixed behaviour (k = 1 == block-at-a-time) for sweeps and benchmarks.
+
 The terminal stages (group-by, sort, limit, projection emission) are shared
 with ``VectorEngine`` (``finalize``), so the two engines agree bit-for-bit;
-only the scan→filter→materialize front end differs.  An optional device path
-routes the supported query shape (an optional range predicate over FOR/plain
-int blocks + a 1–3-column group-by over int and/or dictionary string keys +
-numeric aggregates over up to four value columns) through the fused Pallas
-kernel ``kernels/fused_scan_agg.py``; the mesh-sharded fan-out in
+only the scan→filter→materialize front end differs.  NULL bitmaps ride
+along from the baseline (``BlockView.nulls``) so predicates and flat
+aggregates follow SQL NULL semantics (count(col)/sum/min/max skip NULLs,
+count(*) does not) — identical to the sketches' null-excluded stats.  An
+optional device path routes the supported query shape (an optional range
+predicate over FOR/plain int blocks + a 1–3-column group-by over int and/or
+dictionary string keys + numeric aggregates over up to four value columns)
+through the fused Pallas kernel ``kernels/fused_scan_agg.py``, launched
+with cost-chosen tile shapes; the mesh-sharded fan-out in
 ``core/partition.py`` reuses ``filter_blocks`` / ``stage_device`` here to
 run the same pipeline per shard and tree-reduce partials.
 """
@@ -45,23 +59,30 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import cost
 from .encoding import DeltaFOREncoded, DictEncoded, PlainEncoded
 from .engine import Query, VectorEngine, _item
-from .lsm import BlockView, LSMStore, ScanStats
+from .lsm import BlockView, LSMStore, ScanStats, eval_block_pred
 from .relation import ColType, Column, PredOp
 from .skipping import Sketch, Verdict
 
 
 @dataclasses.dataclass
 class _FilteredBlock:
-    """A block that survived pruning, with its selection vector."""
+    """One vector batch that survived pruning: one or more candidate blocks
+    fused by the granularity planner (``cost.choose_coalesce``), with a
+    batch-level selection vector over the concatenated rows."""
 
-    view: BlockView
-    sel: Optional[np.ndarray]     # local row positions kept; None == all rows
+    views: List[BlockView]
+    sel: Optional[np.ndarray]     # batch row positions kept; None == all rows
+
+    @property
+    def nrows(self) -> int:
+        return sum(v.nrows for v in self.views)
 
     @property
     def n_selected(self) -> int:
-        return self.view.nrows if self.sel is None else int(self.sel.shape[0])
+        return self.nrows if self.sel is None else int(self.sel.shape[0])
 
 
 class _SketchAgg:
@@ -79,21 +100,23 @@ class _SketchAgg:
     def absorb(self, view: BlockView) -> bool:
         """Fold one clean (verdict-ALL, no exclusions) block's sketches into
         the partials.  Returns False — absorbing nothing — when any needed
-        sketch cannot answer (nulls present, or no sum for a sum/avg)."""
+        sketch cannot answer (no sum for a sum/avg, no bounds despite
+        non-null rows).  Sketch stats already exclude NULL slots, so
+        count(col) absorbs ``count - null_count`` while count(*) keeps every
+        row — the same SQL convention the scan side now follows."""
         sketches: Dict[str, Sketch] = {}
         for a in self.q.aggs:
             if a.column is None:
                 continue
             s = view.sketches[a.column]
-            if s.null_count:       # fill values make decode ≠ sketch: scan it
+            nn = s.count - s.null_count
+            if a.op in ("sum", "avg") and nn and s.vsum is None:
                 return False
-            if a.op in ("sum", "avg") and s.vsum is None:
-                return False
-            if s.count and s.vmin is None:
+            if nn and s.vmin is None:
                 return False
             sketches[a.column] = s
         for col, s in sketches.items():
-            self.cnt[col] = self.cnt.get(col, 0) + s.count
+            self.cnt[col] = self.cnt.get(col, 0) + (s.count - s.null_count)
             if s.vsum is not None:
                 self.vsum[col] = self.vsum.get(col, 0) + s.vsum
             if s.vmin is not None:
@@ -129,44 +152,113 @@ def scan_preamble(store: LSMStore, q: Query, ts: int, stats: ScanStats
 
 def assemble_columns(store: LSMStore, needed: Sequence[str],
                      parts: Dict[str, List[np.ndarray]],
-                     inc_rows: Sequence[Dict[str, Any]]
-                     ) -> Dict[str, np.ndarray]:
+                     inc_rows: Sequence[Dict[str, Any]],
+                     nparts: Optional[Dict[str, List[Optional[np.ndarray]]]]
+                     = None
+                     ) -> Tuple[Dict[str, np.ndarray],
+                                Dict[str, Optional[np.ndarray]]]:
     """Concatenate per-column value chunks (block decodes or shard outputs),
     append the merge-on-read incremental rows, and fall back to typed empty
-    arrays for columns with no surviving data."""
+    arrays for columns with no surviving data.  Returns (values, NULL masks);
+    a column's mask is None when no chunk carries NULLs.  ``nparts`` aligns
+    with ``parts`` chunk-for-chunk (None entries == null-free chunks)."""
     cols: Dict[str, np.ndarray] = {}
+    masks: Dict[str, Optional[np.ndarray]] = {}
     for name in needed:
         chunks = list(parts.get(name, ()))
+        nchunks = (list(nparts.get(name, ())) if nparts is not None
+                   else [None] * len(chunks))
         if inc_rows:
-            dt = chunks[0].dtype if chunks else None
-            chunks.append(np.asarray([r[name] for r in inc_rows], dtype=dt))
+            spec = store.schema.spec(name)
+            inc_col = Column.from_values(spec, [r[name] for r in inc_rows])
+            vals = inc_col.values
+            if chunks and vals.dtype != chunks[0].dtype \
+                    and spec.ctype != ColType.STR:
+                vals = vals.astype(chunks[0].dtype)
+            chunks.append(vals)
+            nchunks.append(inc_col.nulls)
         if chunks:
             cols[name] = (np.concatenate(chunks) if len(chunks) > 1
                           else chunks[0])
+            if any(m is not None and m.any() for m in nchunks):
+                masks[name] = np.concatenate(
+                    [np.zeros(c.shape[0], bool) if m is None else m
+                     for c, m in zip(chunks, nchunks)])
+            else:
+                masks[name] = None
         else:
             spec = store.schema.spec(name)
             cols[name] = np.empty(
                 (0,), dtype=spec.ctype.np_dtype
                 if spec.ctype != ColType.STR else "S1")
-    return cols
+            masks[name] = None
+    return cols, masks
 
 
 def filter_blocks(store: LSMStore, q: Query, needed: Sequence[str],
                   verdicts: np.ndarray, over: np.ndarray,
                   block_ids: Iterable[int], stats: ScanStats,
-                  sketch: Optional[_SketchAgg] = None
-                  ) -> List["_FilteredBlock"]:
+                  sketch: Optional[_SketchAgg] = None,
+                  coalesce: int = 1,
+                  sub_block: bool = True) -> List["_FilteredBlock"]:
     """Stage 2 of the pushdown pipeline over an arbitrary block subset:
-    zone-map verdict dispatch, encoded-domain predicate evaluation,
-    merge-on-read exclusion of overridden baseline rows.  Shared by the
-    single-shard executor (all blocks) and the sharded fan-out (one
-    contiguous block range per shard, each with its own ``stats``)."""
+    zone-map verdict dispatch, null-aware encoded-domain predicate
+    evaluation, merge-on-read exclusion of overridden baseline rows.
+    ``coalesce`` is the planner-chosen scan granularity: up to that many
+    surviving blocks fuse into one ``_FilteredBlock`` vector batch, sharing
+    a single selection vector (one ``nonzero`` + one gather per batch
+    instead of per block).  Shared by the single-shard executor (all
+    blocks) and the sharded fan-out (one contiguous block range per shard,
+    each with its own ``stats``)."""
     base = store.baseline
     filtered: List[_FilteredBlock] = []
-    for b in block_ids:
-        if verdicts[b] == Verdict.NONE.value:
-            stats.blocks_skipped += 1
-            continue
+    pend_views: List[BlockView] = []
+    # pend entries: None (all rows), a bool mask, or an (lo, hi) row window
+    # from the sub-block sorted fast path
+    pend_masks: List[Any] = []
+
+    def flush():
+        if not pend_views:
+            return
+        views, masks = list(pend_views), list(pend_masks)
+        pend_views.clear()
+        pend_masks.clear()
+        if all(m is None for m in masks):
+            filtered.append(_FilteredBlock(views, None))
+            return
+        if any(isinstance(m, tuple) for m in masks):
+            parts, off = [], 0
+            for v, m in zip(views, masks):
+                if m is None:
+                    parts.append(np.arange(off, off + v.nrows))
+                elif isinstance(m, tuple):
+                    parts.append(np.arange(off + m[0], off + m[1]))
+                else:
+                    parts.append(np.nonzero(m)[0] + off)
+                off += v.nrows
+            sel = (np.concatenate(parts) if len(parts) > 1 else parts[0])
+        else:
+            full = [np.ones(v.nrows, bool) if m is None else m
+                    for v, m in zip(views, masks)]
+            sel = np.nonzero(np.concatenate(full) if len(full) > 1
+                             else full[0])[0]
+        if sel.size:
+            filtered.append(_FilteredBlock(views, sel))
+
+    # iterate candidate blocks only: pruned blocks are counted wholesale,
+    # never visited (a selective scan over many small blocks must not pay
+    # a Python iteration per skipped block)
+    ids = np.asarray(block_ids if not isinstance(block_ids, range)
+                     else np.arange(block_ids.start, block_ids.stop),
+                     dtype=np.int64)
+    live = ids[verdicts[ids] != Verdict.NONE.value] if ids.size else ids
+    stats.blocks_skipped += int(ids.size - live.size)
+    # sub-block granularity: a lone range predicate over a sorted block is
+    # answered by a binary-searched row window (adaptive mode only — pinned
+    # granularity stays block-at-a-time, the sweep baseline)
+    single_pred = (q.preds[0] if sub_block and len(q.preds) == 1 else None)
+    for b in live:
+        b = int(b)
         lo, hi = base.block_bounds(b)
         excl = over[(over >= lo) & (over < hi)] - lo if over.size else None
         clean = verdicts[b] == Verdict.ALL.value and (
@@ -177,32 +269,43 @@ def filter_blocks(store: LSMStore, q: Query, needed: Sequence[str],
                 stats.blocks_sketch_only += 1
                 continue
             stats.blocks_sketch_only += 1 if q.preds else 0
-            filtered.append(_FilteredBlock(view, None))
-            continue
-        stats.blocks_scanned += 1
-        mask: Optional[np.ndarray] = None
-        if verdicts[b] != Verdict.ALL.value:
-            for p in q.preds:
-                enc = view.encoded[p.column]
-                m = enc.eval_pred(p)
-                if m is None:           # encoding can't answer: decode + eval
-                    m = p.eval(Column(store.schema.spec(p.column),
-                                      enc.decode()))
-                mask = m if mask is None else (mask & m)
-        if excl is not None and excl.size:
-            if mask is None:
-                mask = np.ones(view.nrows, bool)
-            else:
-                mask = mask.copy()
-            mask[excl] = False
-        sel = None if mask is None else np.nonzero(mask)[0]
-        if sel is not None and sel.size == 0:
-            continue
-        if sel is not None:
-            view = dataclasses.replace(
-                view, attrs=dataclasses.replace(view.attrs,
-                                                all_active=False))
-        filtered.append(_FilteredBlock(view, sel))
+            pend_views.append(view)
+            pend_masks.append(None)
+        else:
+            stats.blocks_scanned += 1
+            mask: Any = None
+            if verdicts[b] != Verdict.ALL.value:
+                window = None
+                if single_pred is not None \
+                        and view.nulls.get(single_pred.column) is None \
+                        and (excl is None or excl.size == 0):
+                    window = view.encoded[single_pred.column].pred_window(
+                        single_pred)
+                if window is not None:
+                    wlo, whi = window
+                    if whi <= wlo:
+                        continue
+                    mask = None if (wlo == 0 and whi == view.nrows) \
+                        else window
+                else:
+                    for p in q.preds:
+                        m = eval_block_pred(store.schema.spec(p.column),
+                                            view.encoded[p.column], p,
+                                            view.nulls.get(p.column))
+                        mask = m if mask is None else (mask & m)
+            if excl is not None and excl.size:
+                if mask is None:
+                    mask = np.ones(view.nrows, bool)
+                else:
+                    mask = mask.copy()
+                mask[excl] = False
+            if isinstance(mask, np.ndarray) and not mask.any():
+                continue
+            pend_views.append(view)
+            pend_masks.append(mask)
+        if len(pend_views) >= max(coalesce, 1):
+            flush()
+    flush()
     return filtered
 
 
@@ -213,9 +316,15 @@ class PushdownExecutor:
     name = "pushdown"
 
     def __init__(self, engine: Optional[VectorEngine] = None,
-                 device: bool = False):
+                 device: bool = False,
+                 granularity: Optional[int] = None):
         self.engine = engine or VectorEngine()
         self.device = device
+        # granularity None == selectivity-adaptive (cost model chooses the
+        # blocks-per-batch coalescing and the device tile shape per query);
+        # an explicit int pins the coalescing factor (1 == legacy
+        # block-at-a-time, used by the granularity-sweep benchmarks).
+        self.granularity = granularity
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -234,9 +343,21 @@ class PushdownExecutor:
         needed, over, inc_rows, verdicts = scan_preamble(store, q, ts, stats)
         nb = store.baseline.n_blocks
 
+        # -- pre-scan cost model: estimate selectivity from the sketches,
+        # choose the scan granularity (blocks fused per vector batch);
+        # pinned-granularity executors skip planning entirely
+        adaptive = self.granularity is None
+        est = None
+        if adaptive or self.device:
+            est = cost.estimate_scan(store, q.preds, verdicts)
+            stats.est_rows = est.est_rows
+        coalesce = (cost.choose_coalesce(est, store.baseline.block_rows)
+                    if adaptive else self.granularity)
+        stats.batch_blocks = coalesce
+
         # -- optional fused device kernel for the supported shape --------
         if self.device and not inc_rows and not over.size:
-            out = self._try_device(store, q, verdicts, stats)
+            out = self._try_device(store, q, verdicts, stats, est)
             if out is not None:
                 return out, stats
 
@@ -245,29 +366,84 @@ class PushdownExecutor:
 
         # -- stage 2: encoded-domain filter ------------------------------
         filtered = filter_blocks(store, q, needed, verdicts, over,
-                                 range(nb), stats, sketch)
+                                 range(nb), stats, sketch, coalesce,
+                                 sub_block=adaptive)
 
         # -- stage 3+4: late materialization + terminal operators --------
         if sketch is not None:
             return self._finish_flat(q, sketch, filtered, inc_rows, store), stats
-        cols = self._materialize(store, needed, filtered, inc_rows)
+        cols, masks = self._materialize(store, needed, filtered, inc_rows,
+                                        with_nulls=True)
         n_rows = sum(fb.n_selected for fb in filtered) + len(inc_rows)
         out = self.engine.finalize(q, lambda nm: cols[nm], n_rows,
-                                   store.schema.names)
+                                   store.schema.names,
+                                   nulls=lambda nm: masks[nm])
         return out, stats
 
     # ------------------------------------------------- late materialization
     @staticmethod
     def _materialize(store: LSMStore, needed: Sequence[str],
                      filtered: Sequence[_FilteredBlock],
-                     inc_rows: Sequence[Dict[str, Any]]
-                     ) -> Dict[str, np.ndarray]:
-        """Gather only surviving row slices of only the needed columns."""
-        parts = {name: [fb.view.encoded[name].decode() if fb.sel is None
-                        else fb.view.encoded[name].decode_idx(fb.sel)
-                        for fb in filtered]
-                 for name in needed}
-        return assemble_columns(store, needed, parts, inc_rows)
+                     inc_rows: Sequence[Dict[str, Any]],
+                     with_nulls: bool = False):
+        """Gather only surviving row slices of only the needed columns,
+        batch-at-a-time: a coalesced batch pays one gather across its
+        concatenated blocks when the selection is dense, and falls back to
+        per-block ``decode_idx`` when it is sparse (late materialization
+        stays O(|selected|)).  Returns the column dict, plus the per-column
+        NULL masks when ``with_nulls``."""
+        parts: Dict[str, List[np.ndarray]] = {n: [] for n in needed}
+        nparts: Dict[str, List[Optional[np.ndarray]]] = \
+            {n: [] for n in needed}
+        for fb in filtered:
+            views, sel = fb.views, fb.sel
+            segs = offs = None
+            dense = False
+            if sel is not None and len(views) > 1:
+                offs = [0]
+                for v in views:
+                    offs.append(offs[-1] + v.nrows)
+                # Coalesced batches pay one whole-batch gather when most
+                # rows survive; sparse selections keep per-block decode_idx
+                # so late materialization stays O(|selected|).
+                dense = sel.size * 2 >= fb.nrows
+                if not dense:
+                    segs = np.split(sel, np.searchsorted(sel, offs[1:-1]))
+            for name in needed:
+                nb_chunks: List[Optional[np.ndarray]]
+                if sel is None:
+                    chunks = [v.encoded[name].decode() for v in views]
+                    nb_chunks = [v.nulls.get(name) for v in views]
+                elif len(views) == 1:
+                    chunks = [views[0].encoded[name].decode_idx(sel)]
+                    bn = views[0].nulls.get(name)
+                    nb_chunks = [None if bn is None else bn[sel]]
+                elif dense:
+                    dec = np.concatenate([v.encoded[name].decode()
+                                          for v in views])
+                    chunks = [dec[sel]]
+                    if any(v.nulls.get(name) is not None for v in views):
+                        bn = np.concatenate(
+                            [np.zeros(v.nrows, bool)
+                             if v.nulls.get(name) is None
+                             else v.nulls[name] for v in views])
+                        nb_chunks = [bn[sel]]
+                    else:
+                        nb_chunks = [None]
+                else:
+                    chunks, nb_chunks = [], []
+                    for v, seg, off in zip(views, segs, offs[:-1]):
+                        if not seg.size:
+                            continue
+                        local = seg - off
+                        chunks.append(v.encoded[name].decode_idx(local))
+                        bn = v.nulls.get(name)
+                        nb_chunks.append(None if bn is None else bn[local])
+                parts[name].extend(chunks)
+                nparts[name].extend(nb_chunks)
+        cols, masks = assemble_columns(store, needed, parts, inc_rows,
+                                       nparts)
+        return (cols, masks) if with_nulls else cols
 
     # -------------------------------------------------- flat agg combining
     def _finish_flat(self, q: Query, sketch: _SketchAgg,
@@ -275,9 +451,13 @@ class PushdownExecutor:
                      inc_rows: Sequence[Dict[str, Any]],
                      store: LSMStore) -> List[Dict[str, Any]]:
         """Combine sketch partials (verdict-ALL blocks) with materialized
-        partials (scanned blocks + incremental rows)."""
+        partials (scanned blocks + incremental rows).  Materialized NULL
+        slots are dropped before aggregation, matching the sketches'
+        null-excluded stats: count(col)/sum/min/max are SQL null-skipping
+        while count(*) keeps every surviving row."""
         agg_cols = sorted({a.column for a in q.aggs if a.column})
-        cols = self._materialize(store, agg_cols, filtered, inc_rows)
+        cols, masks = self._materialize(store, agg_cols, filtered, inc_rows,
+                                        with_nulls=True)
         n_scan = (sum(fb.n_selected for fb in filtered) + len(inc_rows))
         r: Dict[str, Any] = {}
         for a in q.aggs:
@@ -285,6 +465,9 @@ class PushdownExecutor:
                 r[a.alias] = sketch.n_rows + n_scan
                 continue
             v = cols[a.column]
+            m = masks.get(a.column)
+            if m is not None:
+                v = v[~m]
             cnt = sketch.cnt.get(a.column, 0) + int(v.shape[0])
             if cnt == 0:
                 r[a.alias] = 0 if a.op in ("count", "sum") else None
@@ -315,11 +498,14 @@ class PushdownExecutor:
 
     # ------------------------------------------------------- device path
     def _try_device(self, store: LSMStore, q: Query, verdicts: np.ndarray,
-                    stats: ScanStats) -> Optional[List[Dict[str, Any]]]:
+                    stats: ScanStats,
+                    est: Optional["cost.ScanEstimate"] = None
+                    ) -> Optional[List[Dict[str, Any]]]:
         """Route the fused-kernel-supported shape to the Pallas device path:
         an optional range predicate over a FOR/plain int column, 1–3 group-by
         keys (int or dictionary string), numeric aggregates over up to four
-        value columns."""
+        value columns.  The cost model picks the kernel tile height
+        (blocks fused per grid step) from the selectivity estimate."""
         plan = plan_device(store, q)
         if plan is None:
             return None
@@ -332,10 +518,15 @@ class PushdownExecutor:
         stats.blocks_skipped = int((~block_mask).sum())
         stats.blocks_scanned = int(block_mask.sum())
         stats.used_device = True
+        tile = 1
+        if est is not None and self.granularity is None:
+            tile = cost.choose_device_tile(est, store.baseline.block_rows)
+        stats.device_tile_blocks = tile
         from ..kernels import ops
         g_cnt, g_sums, g_mins, g_maxs = ops.fused_scan_agg(
             stage.deltas, stage.bases, stage.counts, plan.lo, plan.hi,
-            stage.codes, stage.values, ndv=stage.ndv, block_mask=block_mask)
+            stage.codes, stage.values, ndv=stage.ndv, block_mask=block_mask,
+            coalesce=tile)
         return emit_device_groups(
             q, plan, stage, np.asarray(g_cnt),
             np.asarray(g_sums, np.float64), np.asarray(g_mins),

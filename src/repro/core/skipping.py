@@ -38,10 +38,32 @@ DEFAULT_BLOCK_ROWS = 1024
 DEFAULT_FANOUT = 8
 
 
+def _exact_int_sum(valid: np.ndarray) -> int:
+    """Exact integer block sum as a Python int.
+
+    ``valid.sum(dtype=np.int64)`` wraps silently once per-block sums pass
+    2^63 (values near 2^62 need only two rows).  Splitting each value into
+    32-bit halves keeps both partial sums far inside the int64 range for any
+    block under 2^30 rows, and the Python-int recombination is arbitrary
+    precision — so sketch sums stay exact at any value magnitude.
+    """
+    if valid.dtype.itemsize <= 4:
+        return int(valid.sum(dtype=np.int64))
+    hi = int((valid >> 32).astype(np.int64).sum(dtype=np.int64))
+    lo = int((valid & np.asarray(0xFFFFFFFF, dtype=valid.dtype))
+             .astype(np.int64).sum(dtype=np.int64))
+    return (hi << 32) + lo
+
+
 class Verdict(enum.Enum):
     NONE = 0   # no row in the block can match — skip entirely
     SOME = 1   # must scan the block
-    ALL = 2    # every (non-null) row matches — can answer from sketch
+    ALL = 2    # every row matches — for value predicates the sketch only
+    #            reports ALL on null-free blocks (a NULL never satisfies a
+    #            value predicate, and block encodings store fill values for
+    #            NULL slots), so consumers may treat all ``count`` rows of
+    #            an ALL block as matching.  IS_NULL/NOT_NULL get ALL
+    #            whenever their null-count condition holds exactly.
 
 
 @dataclasses.dataclass
@@ -66,9 +88,10 @@ class Sketch:
         if valid.shape[0] == 0:
             return Sketch(n, nc, None, None, None)
         vsum = None
-        if valid.dtype.kind in "iuf":
-            vsum = valid.sum(dtype=np.float64 if valid.dtype.kind == "f" else np.int64)
-            vsum = vsum.item()
+        if valid.dtype.kind == "f":
+            vsum = valid.sum(dtype=np.float64).item()
+        elif valid.dtype.kind in "iu":
+            vsum = _exact_int_sum(valid)
         if valid.dtype.kind == "S":  # bytes: no min/max ufunc — sort instead
             srt = np.sort(valid)
             return Sketch(n, nc, bytes(srt[0]), bytes(srt[-1]), None)
@@ -191,6 +214,15 @@ class SkippingIndex:
         """Sketch of data block ``b`` (leaves are the first ``n_blocks`` nodes,
         appended in block order by ``__init__``)."""
         return self.nodes[b].sketch
+
+    def leaf_counts(self) -> np.ndarray:
+        """Cached per-leaf row counts (int64 [n_blocks]) — read constantly by
+        the cost model and the range partitioner."""
+        if not hasattr(self, "_leaf_counts_cache"):
+            self._leaf_counts_cache = np.asarray(
+                [self.nodes[b].sketch.count for b in range(self.n_blocks)],
+                np.int64)
+        return self._leaf_counts_cache
 
     @staticmethod
     def build(values: np.ndarray, nulls: Optional[np.ndarray] = None,
@@ -344,6 +376,82 @@ class SkippingIndex:
         return merged, leftover
 
     # --- optimizer statistics -----------------------------------------------
+    def _leaf_arrays(self) -> Optional[Tuple[np.ndarray, ...]]:
+        """Cached per-leaf (count, null_count, vmin, vmax) float64 arrays for
+        vectorized selectivity estimation; None for non-numeric columns.
+        All-null leaves carry NaN bounds (they match no value predicate)."""
+        if not hasattr(self, "_leaf_arrays_cache"):
+            leaves = self.nodes[:self.n_blocks]
+            mins = [n.sketch.vmin for n in leaves]
+            if any(isinstance(m, (bytes, str)) for m in mins):
+                self._leaf_arrays_cache = None
+            else:
+                cnt = np.asarray([n.sketch.count for n in leaves], np.float64)
+                nc = np.asarray([n.sketch.null_count for n in leaves],
+                                np.float64)
+                lo = np.asarray([np.nan if m is None else m for m in mins],
+                                np.float64)
+                hi = np.asarray([np.nan if n.sketch.vmax is None
+                                 else n.sketch.vmax for n in leaves],
+                                np.float64)
+                self._leaf_arrays_cache = (cnt, nc, lo, hi)
+        return self._leaf_arrays_cache
+
+    def estimate_fraction(self, pred: Predicate) -> Optional[np.ndarray]:
+        """Estimated matching-row fraction per leaf block, in [0, 1], from
+        the sketches alone — the pre-scan selectivity input of the
+        granularity planner (``core.cost``).  Uniform-distribution
+        interpolation of the predicate window against each leaf's
+        [vmin, vmax]; NULL slots never match a value predicate, so value-op
+        fractions scale by the non-null share.  Returns None when the
+        column's bounds are non-numeric (bytes) — callers fall back to
+        verdict-based coarse estimates."""
+        arrs = self._leaf_arrays()
+        if arrs is None:
+            return None
+        cnt, nc, lo, hi = arrs
+        nn_frac = np.divide(cnt - nc, cnt, out=np.zeros_like(cnt),
+                            where=cnt > 0)
+        if pred.op == PredOp.IS_NULL:
+            return 1.0 - nn_frac
+        if pred.op == PredOp.NOT_NULL:
+            return nn_frac
+        width = np.maximum(hi - lo, 0.0)
+        intish = np.all(np.floor(lo[~np.isnan(lo)]) == lo[~np.isnan(lo)])
+        span = width + 1.0 if intish else np.maximum(width, 1e-12)
+
+        def _point(v) -> np.ndarray:
+            inside = (v >= lo) & (v <= hi)
+            return np.where(inside, np.minimum(1.0 / span, 1.0), 0.0)
+
+        def _below(v, inclusive) -> np.ndarray:     # fraction with x <= / < v
+            edge = v + (1.0 if inclusive and intish else 0.0)
+            return np.clip((edge - lo) / span, 0.0, 1.0)
+
+        if pred.op == PredOp.EQ:
+            frac = _point(pred.value)
+        elif pred.op == PredOp.NE:
+            frac = 1.0 - _point(pred.value)
+        elif pred.op == PredOp.LT:
+            frac = _below(pred.value, inclusive=False)
+        elif pred.op == PredOp.LE:
+            frac = _below(pred.value, inclusive=True)
+        elif pred.op == PredOp.GT:
+            frac = 1.0 - _below(pred.value, inclusive=True)
+        elif pred.op == PredOp.GE:
+            frac = 1.0 - _below(pred.value, inclusive=False)
+        elif pred.op == PredOp.BETWEEN:
+            frac = np.clip(_below(pred.value2, inclusive=True)
+                           - _below(pred.value, inclusive=False), 0.0, 1.0)
+        elif pred.op == PredOp.IN:
+            vals = [v for v in pred.value if isinstance(v, (int, float))]
+            if len(vals) != len(list(pred.value)):
+                return None
+            frac = np.clip(sum(_point(v) for v in vals), 0.0, 1.0)
+        else:
+            return None
+        return np.nan_to_num(frac, nan=0.0) * nn_frac
+
     def sortedness(self) -> float:
         """Fraction of adjacent leaf pairs with non-overlapping ranges —
         a cheap sortedness estimate the optimizer can read off the index."""

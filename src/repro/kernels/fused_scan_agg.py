@@ -38,6 +38,55 @@ from jax.experimental.pallas import tpu as pltpu
 POS_INF = 1e30
 
 
+def coalesce_blocks(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
+                    codes: jax.Array, values: jax.Array,
+                    block_mask: jax.Array, factor: int):
+    """Fuse ``factor`` adjacent staged blocks into one kernel tile, so the
+    grid launches with selectivity-matched tile shapes (the cost model picks
+    ``factor``: large tiles for full scans amortize grid steps, factor 1
+    keeps the visit-list prune block-granular for selective scans).
+
+    FOR deltas are rebased onto the tile-wide minimum base (exact: the
+    executor stages only columns within ±2^30, so the rebased offsets stay
+    inside int32), code/value planes are re-laid out member-major, counts
+    add, and a tile survives the zone-map prune if any member does (pruned
+    members inside a surviving tile are re-filtered exactly by the kernel's
+    predicate window, costing only wasted lanes, never wrong rows).
+
+    Precondition: within a tile, every member after a partially-filled
+    member must be empty — the baseline layout (only the globally-last
+    block is partial) and trailing zero-count padding both satisfy it, so
+    valid rows stay a prefix and the kernel's ``rowid < nvalid`` check
+    carries over.
+
+    Expects the general layout (codes [Nb, K, Bk], values [Nb, V, Bk]).
+    """
+    nb, bk = deltas.shape
+    f = max(int(factor), 1)
+    nb2 = -(-nb // f)
+    pad = nb2 * f - nb
+    if pad:
+        deltas = jnp.pad(deltas, ((0, pad), (0, 0)))
+        bases = jnp.pad(bases, (0, pad))
+        counts = jnp.pad(counts, (0, pad))
+        codes = jnp.pad(codes, ((0, pad), (0, 0), (0, 0)))
+        values = jnp.pad(values, ((0, pad), (0, 0), (0, 0)))
+        block_mask = jnp.pad(block_mask, (0, pad))
+    k, v = codes.shape[1], values.shape[1]
+    b2 = bases.reshape(nb2, f).astype(jnp.int32)
+    base2 = b2.min(axis=1)
+    shift = b2 - base2[:, None]
+    deltas2 = (deltas.astype(jnp.int32).reshape(nb2, f, bk)
+               + shift[:, :, None]).reshape(nb2, f * bk)
+    counts2 = counts.reshape(nb2, f).sum(axis=1).astype(jnp.int32)
+    codes2 = (codes.reshape(nb2, f, k, bk).transpose(0, 2, 1, 3)
+              .reshape(nb2, k, f * bk))
+    values2 = (values.reshape(nb2, f, v, bk).transpose(0, 2, 1, 3)
+               .reshape(nb2, v, f * bk))
+    mask2 = block_mask.reshape(nb2, f).any(axis=1)
+    return deltas2, base2, counts2, codes2, values2, mask2
+
+
 def _fused_kernel(bids_ref, cnt_ref,                     # scalar prefetch
                   deltas_ref, bases_ref, counts_ref, codes_ref, values_ref,
                   bounds_ref, out_ref, acc_scr, *, block_k: int, g: int,

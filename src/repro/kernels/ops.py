@@ -23,6 +23,7 @@ from .hybrid_decode import hybrid_decode as _hybrid_decode
 from .ssd_scan import ssd_scan as _ssd
 from .columnar_scan import columnar_scan as _columnar_scan
 from .dict_groupby import dict_groupby as _dict_groupby
+from .fused_scan_agg import coalesce_blocks as _coalesce_blocks
 from .fused_scan_agg import fused_scan_agg as _fused_scan_agg
 
 
@@ -79,14 +80,35 @@ def columnar_scan(deltas, bases, counts, lo, hi, values=None, block_mask=None):
                           interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("ndv",))
+@functools.partial(jax.jit, static_argnames=("ndv", "coalesce"))
 def fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, *, ndv,
-                   block_mask=None):
+                   block_mask=None, coalesce=1):
     """``ndv`` is an int (legacy single group key, 2-D codes/values) or a
-    per-key tuple (multi-key: codes [Nb, K, Bk], values [Nb, V, Bk])."""
+    per-key tuple (multi-key: codes [Nb, K, Bk], values [Nb, V, Bk]).
+    ``coalesce`` > 1 fuses that many adjacent blocks into one kernel tile
+    before launch (selectivity-matched tile shapes, see
+    ``fused_scan_agg.coalesce_blocks``); the grouped results are identical
+    for any factor."""
     if _force_ref():
         return ref.ref_fused_scan_agg(deltas, bases, counts, lo, hi, codes,
                                       values, ndv, block_mask)
+    if coalesce and int(coalesce) > 1:
+        legacy = (codes.ndim == 2 and values.ndim == 2
+                  and not isinstance(ndv, (tuple, list)))
+        codes3 = codes[:, None, :] if codes.ndim == 2 else codes
+        values3 = values[:, None, :] if values.ndim == 2 else values
+        ndv_t = ((int(ndv),) if not isinstance(ndv, (tuple, list))
+                 else tuple(int(x) for x in ndv))
+        mask = (jnp.ones(deltas.shape[0], bool) if block_mask is None
+                else block_mask)
+        d2, b2, c2, k2, v2, m2 = _coalesce_blocks(
+            deltas, bases, counts, codes3, values3, mask, int(coalesce))
+        out = _fused_scan_agg(d2, b2, c2, lo, hi, k2, v2, ndv_t, m2,
+                              interpret=not _on_tpu())
+        if legacy:
+            cnt, sums, mins, maxs = out
+            return cnt, sums[0], mins[0], maxs[0]
+        return out
     return _fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, ndv,
                            block_mask, interpret=not _on_tpu())
 

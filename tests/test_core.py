@@ -159,6 +159,53 @@ def test_sketch_aggregates_match_exact(rng):
         assert leaf.count == len(blk) and leaf.vsum == blk.sum()
 
 
+def test_sketch_int_sum_never_wraps():
+    """Values near 2^62: np.int64 accumulation wraps after two rows; sketch
+    sums must stay exact Python ints through build, merge, and the
+    store-level aggregate pushdown (regression: silent int64 overflow)."""
+    from repro.core.skipping import Sketch
+    big = 2 ** 62
+    vals = np.asarray([big, big, big, -17, big], np.int64)
+    assert int(vals.sum()) != 4 * big - 17          # numpy wraps...
+    s = Sketch.of(vals)
+    assert s.vsum == 4 * big - 17                   # ...the sketch does not
+    assert isinstance(s.vsum, int)
+    merged = Sketch.merge([Sketch.of(vals[:2]), Sketch.of(vals[2:])])
+    assert merged.vsum == s.vsum
+    idx = SkippingIndex.build(np.full(64, big, np.int64), block_rows=8)
+    assert idx.try_aggregate("sum") == 64 * big
+    assert idx.try_aggregate("avg") == float(big)
+    store = LSMStore(schema(("k", ColType.INT), ("x", ColType.INT)),
+                     block_rows=8)
+    store.bulk_insert({"k": np.arange(24),
+                       "x": np.full(24, big, np.int64)})
+    got, stats = store.aggregate("sum", "x")
+    assert got == 24 * big
+    assert stats.blocks_sketch_only == stats.blocks_total
+    # the flat executors stay exact too — including the sharded fan-out,
+    # whose sketch partials carry Python-int sums through the merge tree
+    # (object dtype) and whose scanned partials use the same 32-bit-split
+    # accumulation (regression: AttributeError / silent wrap in finalize)
+    from repro.core.engine import QAgg, Query
+    from repro.core.partition import ShardedScanExecutor
+    from repro.core.pushdown import PushdownExecutor
+    from repro.core.relation import Predicate, PredOp
+    q = Query(aggs=(QAgg("sum", "x", "sx"), QAgg("count", None, "n")))
+    assert PushdownExecutor().execute(store, q) == [{"sx": 24 * big,
+                                                     "n": 24}]
+    for shards in (1, 2, 4):
+        assert ShardedScanExecutor(n_shards=shards).execute(store, q) \
+            == [{"sx": 24 * big, "n": 24}], shards
+    # predicate forces real block scans through the partial path as well
+    qp = Query(preds=(Predicate("k", PredOp.GE, 4),),
+               aggs=(QAgg("sum", "x", "sx"),))
+    assert ShardedScanExecutor(n_shards=2).execute(store, qp) \
+        == [{"sx": 20 * big}]
+    # unsigned top-bit values take the same split-accumulation path
+    u = np.full(6, 2 ** 63 + 11, np.uint64)
+    assert Sketch.of(u).vsum == 6 * (2 ** 63 + 11)
+
+
 # ---------------------------------------------------------------------------
 # vectorized engine == scalar engine
 # ---------------------------------------------------------------------------

@@ -1,0 +1,231 @@
+"""Selectivity-adaptive granularity planner (core/cost.py) + the sketch
+estimation API (SkippingIndex.estimate_fraction) + sub-block sorted windows
+(EncodedColumn.pred_window): the cost model's estimates must be sane, its
+granularity/shard/tile choices bounded and monotone, and — the contract that
+matters — every adaptive execution bit-identical to the pinned-granularity
+executor."""
+import numpy as np
+import pytest
+
+from repro.core import cost
+from repro.core.encoding import DeltaFOREncoded
+from repro.core.engine import QAgg, Query, VectorEngine
+from repro.core.lsm import LSMStore
+from repro.core.partition import ShardedScanExecutor
+from repro.core.pushdown import PushdownExecutor
+from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.skipping import SkippingIndex, Verdict
+
+from tests.test_pushdown import QUERIES, make_store, norm
+
+
+# ---------------------------------------------------------------------------
+# selectivity estimation from sketches
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_fraction_range_interpolation(rng):
+    arr = rng.integers(0, 1000, 4096).astype(np.int64)
+    idx = SkippingIndex.build(arr, block_rows=256)
+    for p, true_frac in [
+        (Predicate("x", PredOp.BETWEEN, 100, 299), 0.2),
+        (Predicate("x", PredOp.LT, 500), 0.5),
+        (Predicate("x", PredOp.GE, 900), 0.1),
+        (Predicate("x", PredOp.NOT_NULL, None), 1.0),
+        (Predicate("x", PredOp.IS_NULL, None), 0.0),
+    ]:
+        f = idx.estimate_fraction(p)
+        assert f is not None and f.shape == (idx.n_blocks,)
+        assert np.all((f >= 0) & (f <= 1))
+        est = float(f.mean())
+        assert abs(est - true_frac) < 0.1, (p.op, est, true_frac)
+
+
+def test_estimate_fraction_bytes_column_falls_back():
+    arr = np.asarray([b"aa", b"bb", b"cc"] * 32)
+    idx = SkippingIndex.build(arr, block_rows=16)
+    assert idx.estimate_fraction(Predicate("s", PredOp.EQ, "bb")) is None
+
+
+def test_estimate_scan_combines_verdicts(rng):
+    sch = schema(("k", ColType.INT), ("v", ColType.FLOAT))
+    store = LSMStore(sch, block_rows=64)
+    store.bulk_insert({"k": np.arange(4096), "v": rng.normal(size=4096)})
+    p = Predicate("k", PredOp.BETWEEN, 1000, 1499)   # sorted pk: hard prune
+    verdicts = store.baseline.cols["k"].index.prune(p)
+    est = cost.estimate_scan(store, (p,), verdicts)
+    assert est.n_rows == 4096 and est.n_blocks == 64
+    assert est.candidate_blocks == int((verdicts != Verdict.NONE.value).sum())
+    assert 250 <= est.est_rows <= 1000      # true 500, coarse path allowed
+    # no verdicts: pure interpolation, still close
+    est2 = cost.estimate_scan(store, (p,))
+    assert abs(est2.est_rows - 500) < 100
+
+
+# ---------------------------------------------------------------------------
+# planner choices
+# ---------------------------------------------------------------------------
+
+
+def _est(n_rows, n_blocks, candidates, est_rows):
+    return cost.ScanEstimate(n_rows, n_blocks, candidates, est_rows)
+
+
+def test_choose_coalesce_bounds():
+    # dense full scan over small blocks: coalesce toward the target batch
+    e = _est(1 << 20, 256, 256, float(1 << 20))
+    c = cost.choose_coalesce(e, 4096)
+    assert c == cost.TARGET_BATCH_ROWS // 4096 > 1
+    # selective scan: single-block batches
+    assert cost.choose_coalesce(_est(1 << 20, 256, 1, 1000.0), 4096) == 1
+    # tiny estimated result: nothing to amortize
+    assert cost.choose_coalesce(_est(1 << 20, 256, 256, 100.0), 4096) == 1
+    # mid-density scan: per-block late materialization stays
+    assert cost.choose_coalesce(_est(1 << 20, 256, 256, 2 << 17), 4096) == 1
+    # blocks already at/over the target: no fusing
+    assert cost.choose_coalesce(e, 1 << 16) == 1
+    assert cost.choose_coalesce(e, 4096) <= cost.MAX_COALESCE
+
+
+def test_choose_shards_scales_with_surviving_rows():
+    full = _est(1 << 22, 256, 256, float(1 << 22))
+    sel = _est(1 << 22, 256, 2, 1000.0)
+    assert cost.choose_shards(sel, max_workers=8) == 1
+    assert cost.choose_shards(full, max_workers=8) == 8    # capped by workers
+    mid = _est(1 << 22, 256, 256, float(cost.ROWS_PER_SHARD * 3))
+    assert cost.choose_shards(mid, max_workers=8) == 3     # rows-driven
+    assert cost.choose_shards(full, max_workers=1) == 1
+
+
+def test_choose_device_tile_only_when_unpruned():
+    full = _est(1 << 20, 128, 128, float(1 << 20))
+    assert cost.choose_device_tile(full, 1024) == \
+        cost.DEVICE_TILE_ROWS // 1024
+    pruned = _est(1 << 20, 128, 64, float(1 << 19))
+    assert cost.choose_device_tile(pruned, 1024) == 1      # keep prune power
+    assert cost.choose_device_tile(full, 1 << 15) == 1     # tile already big
+
+
+def test_choose_batch_rows_adaptive_engine():
+    assert cost.choose_batch_rows(100) == 100
+    assert cost.choose_batch_rows(1 << 24) == 1 << 16
+    assert cost.choose_batch_rows(0) == 1
+    ve = VectorEngine()                       # None == adaptive
+    assert ve.effective_batch(100) == 100
+    assert VectorEngine(batch_size=512).effective_batch(1 << 20) == 512
+
+
+def test_vector_engine_batched_filter_parity(rng):
+    """Chunked predicate evaluation (explicit small batch) must equal the
+    one-shot mask for any batch size."""
+    from repro.core.relation import Table
+    t = Table.from_columns(
+        schema(("id", ColType.INT), ("g", ColType.INT), ("v", ColType.FLOAT)),
+        {"id": np.arange(1000), "g": rng.integers(0, 7, 1000),
+         "v": rng.normal(size=1000)})
+    q = Query(preds=(Predicate("g", PredOp.IN, (1, 3)),
+                     Predicate("v", PredOp.GT, 0.0)),
+              group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                     QAgg("sum", "v", "sv")))
+    want = norm(VectorEngine(batch_size=10**9).execute(t, q))
+    for bs in (1, 7, 128, 1000, None):
+        assert norm(VectorEngine(batch_size=bs).execute(t, q)) == want
+
+
+# ---------------------------------------------------------------------------
+# sub-block sorted windows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op,args", [
+    (PredOp.EQ, (37,)), (PredOp.EQ, (36.5,)),
+    (PredOp.LT, (40,)), (PredOp.LE, (40,)), (PredOp.LT, (39.5,)),
+    (PredOp.GT, (40,)), (PredOp.GE, (40,)), (PredOp.GE, (40.5,)),
+    (PredOp.BETWEEN, (10, 60)), (PredOp.BETWEEN, (9.5, 60.5)),
+    (PredOp.BETWEEN, (-5, 3)), (PredOp.BETWEEN, (900, 999)),
+])
+def test_pred_window_equals_eval_pred(rng, op, args):
+    vals = np.sort(rng.integers(0, 100, 256)).astype(np.int64)
+    enc = DeltaFOREncoded.encode(vals)
+    assert enc.is_sorted
+    p = Predicate("x", op, *args)
+    w = enc.pred_window(p)
+    assert w is not None
+    lo, hi = w
+    mask = enc.eval_pred(p)
+    idx = np.nonzero(mask)[0]
+    if idx.size == 0:
+        assert hi <= lo
+    else:
+        assert (lo, hi) == (int(idx[0]), int(idx[-1]) + 1)
+        assert hi - lo == idx.size            # matches are one contiguous run
+
+
+def test_pred_window_refuses_unsorted_and_unsupported(rng):
+    enc = DeltaFOREncoded.encode(rng.permutation(256).astype(np.int64))
+    assert not enc.is_sorted
+    assert enc.pred_window(Predicate("x", PredOp.BETWEEN, 1, 5)) is None
+    srt = DeltaFOREncoded.encode(np.arange(64))
+    assert srt.pred_window(Predicate("x", PredOp.NE, 3)) is None
+    assert srt.pred_window(Predicate("x", PredOp.IN, (1, 2))) is None
+
+
+# ---------------------------------------------------------------------------
+# adaptive executors == pinned executors, with the plan recorded in stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+@pytest.mark.parametrize("dml", [False, True])
+def test_adaptive_granularity_parity(qi, dml):
+    rng = np.random.default_rng(23 * (qi + 1) + dml)
+    store = make_store(rng, dml=dml)
+    q = QUERIES[qi]
+    want = norm(PushdownExecutor(granularity=1).execute(store, q))
+    for g in (None, 2, 4, 100):
+        assert norm(PushdownExecutor(granularity=g).execute(store, q)) \
+            == want, (qi, dml, g)
+
+
+def test_adaptive_plan_lands_in_stats():
+    rng = np.random.default_rng(5)
+    sch = schema(("k", ColType.INT), ("g", ColType.INT),
+                 ("v", ColType.FLOAT))
+    store = LSMStore(sch, block_rows=512)
+    n = 1 << 15
+    store.bulk_insert({"k": np.arange(n), "g": rng.integers(0, 4, n),
+                      "v": rng.normal(size=n)})
+    # dense scan over small blocks: batches coalesce
+    q_dense = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    _, st = PushdownExecutor().execute_stats(store, q_dense)
+    assert st.batch_blocks == cost.TARGET_BATCH_ROWS // 512
+    assert st.est_rows == n
+    # selective probe: single-block batches, sub-block window
+    q_sel = Query(preds=(Predicate("k", PredOp.BETWEEN, 1000, 1099),),
+                  aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+    rows, st = PushdownExecutor().execute_stats(store, q_sel)
+    assert st.batch_blocks == 1 and rows[0]["n"] == 100
+    # pinned executor skips planning
+    _, st = PushdownExecutor(granularity=3).execute_stats(store, q_dense)
+    assert st.batch_blocks == 3 and st.est_rows == 0.0
+
+
+def test_auto_shard_count_from_cost_model():
+    rng = np.random.default_rng(9)
+    sch = schema(("k", ColType.INT), ("g", ColType.INT),
+                 ("v", ColType.FLOAT))
+    store = LSMStore(sch, block_rows=2048)
+    n = cost.ROWS_PER_SHARD * 3
+    store.bulk_insert({"k": np.arange(n), "g": rng.integers(0, 4, n),
+                      "v": rng.normal(size=n)})
+    q_full = Query(group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                          QAgg("sum", "v", "sv")))
+    auto = ShardedScanExecutor(max_workers=4)
+    rows, st = auto.execute_stats(store, q_full)
+    assert st.n_shards == 3                   # rows-driven, no caller constant
+    assert norm(rows) == norm(ShardedScanExecutor(n_shards=2)
+                              .execute(store, q_full))
+    q_sel = Query(preds=(Predicate("k", PredOp.BETWEEN, 10, 500),),
+                  aggs=(QAgg("count", None, "n"),))
+    rows, st = auto.execute_stats(store, q_sel)
+    assert st.n_shards == 1 and rows[0]["n"] == 491

@@ -75,6 +75,7 @@ def test_budget_monotonicity():
     assert errs[0] >= errs[-1]
 
 
+@pytest.mark.slow
 def test_compaction_preserves_attention():
     """Minor compaction (tail → encoded block) must not change the merged
     read beyond int8 quantization noise — the LSM invariant."""
@@ -99,6 +100,7 @@ def test_compaction_preserves_attention():
     assert float(jnp.abs(a - b).max()) < 5e-2
 
 
+@pytest.mark.slow
 def test_hybrid_decode_matches_dense_decode():
     """End-to-end: hybrid-store decode ≈ dense-cache decode (int8 tol)."""
     cfg = get_config("qwen3_4b").reduced()

@@ -343,6 +343,88 @@ def test_fused_scan_agg_block_mask_prunes():
                                atol=1e-4, rtol=1e-5)
 
 
+@pytest.mark.parametrize("factor", [2, 3, 4, 8])
+def test_fused_scan_agg_coalesced_tiles_identical(factor):
+    """Selectivity-matched tile shapes: fusing adjacent blocks into one
+    kernel tile (rebased FOR deltas, member-major code/value planes, padded
+    tail, partial last block) returns bit-equal counts and tolerance-equal
+    sums/extrema for any factor, including a zone-map-consistently pruned
+    member merged into a surviving tile."""
+    rng = np.random.default_rng(0)
+    nb, bk, ndv = 7, 64, (5, 3)
+    deltas = rng.integers(0, 500, (nb, bk)).astype(np.int32)
+    bases = rng.integers(-100, 100, nb).astype(np.int32)
+    counts = np.full(nb, bk, np.int32)
+    counts[-1] = 17                      # partial globally-last block
+    codes = np.stack([rng.integers(0, d, (nb, bk)) for d in ndv],
+                     1).astype(np.int32)
+    values = rng.normal(size=(nb, 2, bk)).astype(np.float32)
+    deltas[2] += 10_000                  # block 2 entirely above the window
+    mask = np.ones(nb, bool)
+    mask[2] = False                      # ...so pruning it is zone-map-exact
+    lo, hi = np.int32(40), np.int32(400)
+    want = [np.asarray(x) for x in ref.ref_fused_scan_agg(
+        deltas, bases, counts, lo, hi, jnp.asarray(codes),
+        jnp.asarray(values), ndv, jnp.asarray(mask))]
+    got = [np.asarray(x) for x in ops.fused_scan_agg(
+        deltas, bases, counts, lo, hi, codes, values, ndv=ndv,
+        block_mask=mask, coalesce=factor)]
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_allclose(got[1], want[1], atol=1e-4, rtol=1e-5)
+    sel = want[0] > 0
+    for a, b in zip(got[2:], want[2:]):
+        np.testing.assert_allclose(a[:, sel], b[:, sel], atol=1e-4,
+                                   rtol=1e-5)
+
+
+def test_fused_scan_agg_coalesce_legacy_layout():
+    """coalesce composes with the legacy 2-D single-key layout (the V axis
+    squeeze is preserved)."""
+    rng = np.random.default_rng(1)
+    nb, bk = 4, 32
+    deltas = rng.integers(0, 300, (nb, bk)).astype(np.int32)
+    bases = np.zeros(nb, np.int32)
+    counts = np.full(nb, bk, np.int32)
+    codes = rng.integers(0, 6, (nb, bk)).astype(np.int32)
+    vals = rng.normal(size=(nb, bk)).astype(np.float32)
+    want = [np.asarray(x) for x in ops.fused_scan_agg(
+        deltas, bases, counts, np.int32(0), np.int32(200), codes, vals,
+        ndv=6)]
+    got = [np.asarray(x) for x in ops.fused_scan_agg(
+        deltas, bases, counts, np.int32(0), np.int32(200), codes, vals,
+        ndv=6, coalesce=2)]
+    assert got[1].ndim == 1
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_allclose(got[1], want[1], atol=1e-4, rtol=1e-5)
+
+
+def test_device_executor_launches_coalesced_tiles():
+    """An unpruned full scan through PushdownExecutor(device=True) picks a
+    >1-block kernel tile from the cost model and still matches the host."""
+    from repro.core.engine import QAgg, Query
+    from repro.core.lsm import LSMStore
+    from repro.core.pushdown import PushdownExecutor
+    from repro.core.relation import ColType, schema
+    rng = np.random.default_rng(3)
+    n, br = 1 << 14, 512
+    store = LSMStore(schema(("k", ColType.INT), ("g", ColType.INT),
+                            ("v", ColType.FLOAT)), block_rows=br)
+    store.bulk_insert({"k": np.arange(n), "g": rng.integers(0, 5, n),
+                       "v": rng.normal(size=n)})
+    q = Query(group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                     QAgg("sum", "v", "sv")))
+    host = {r["g"]: r for r in PushdownExecutor().execute(store, q)}
+    dev, stats = PushdownExecutor(device=True).execute_stats(store, q)
+    assert stats.used_device
+    assert stats.device_tile_blocks > 1
+    devm = {r["g"]: r for r in dev}
+    assert host.keys() == devm.keys()
+    for g in host:
+        assert host[g]["n"] == devm[g]["n"]
+        np.testing.assert_allclose(devm[g]["sv"], host[g]["sv"],
+                                   atol=1e-3, rtol=1e-4)
+
+
 @pytest.mark.parametrize("N,ndv", [(512, 8), (2048, 16), (1024, 128)])
 def test_dict_groupby_kernel(N, ndv):
     ks = keys(2)

@@ -54,6 +54,7 @@ def test_arch_train_step_reduces_loss(arch):
     assert losses[-1] < losses[0]            # memorizing one batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3_2_3b", "qwen3_4b", "mamba2_780m",
                                   "hymba_1_5b", "kimi_k2_1t"])
 def test_decode_matches_forward_teacher_forced(arch):
@@ -84,6 +85,7 @@ def test_decode_matches_forward_teacher_forced(arch):
                                atol=2e-2, rtol=2e-2)
 
 
+@pytest.mark.slow
 def test_encdec_decode_consistency():
     cfg = get_config("seamless_m4t_medium").reduced()
     params = T.init_params(cfg, KEY)

@@ -140,6 +140,69 @@ def test_mlog_ttl_purge_keeps_correctness():
         e.ts > mv.last_refresh_ts for e in mlog.entries)
 
 
+def test_mlog_since_raises_below_purge_horizon():
+    """since(ts) below the purge horizon must raise MLogPurged instead of
+    silently returning an incomplete delta (regression: the surviving tail
+    looked like a full delta)."""
+    from repro.core.mview import MLogPurged
+    st_, mlog = make_store()
+    for i in range(10):
+        st_.insert({"k": i, "g": 0, "v": 1})
+    mlog.purge_upto(6)
+    with pytest.raises(MLogPurged):
+        mlog.since(3)
+    with pytest.raises(MLogPurged):
+        mlog.since(5, 9)
+    assert [e.ts for e in mlog.since(6)] == [7, 8, 9, 10]   # horizon itself ok
+    assert mlog.since(8, 9)[0].ts == 9
+
+
+def test_purge_interleaved_with_refresh_falls_back_to_full():
+    """A TTL purge that overtakes the view's refresh horizon forces the next
+    incremental refresh (and realtime query) through the full-refresh path,
+    keeping answers equal to the oracle."""
+    st_, mlog = make_store()
+    mv = make_mav(st_, mlog)
+    for i in range(12):
+        st_.insert({"k": i, "g": i % 2, "v": 2})
+    mv.refresh()
+    for i in range(12, 24):
+        st_.insert({"k": i, "g": i % 2, "v": 2})
+    mlog.purge_upto(st_.current_ts)        # external TTL daemon ran early
+    mv.incremental_refresh()
+    assert mv.stats["purge_full_refreshes"] == 1
+    assert mv.stats["full_refreshes"] == 2          # initial + fallback
+    assert oracle_agg(st_) == {int(r["g"]): (r["n"], r["sv"], r["av"])
+                               for r in mv.query().rows()}
+    # now interleave again and hit the *query* path before any refresh
+    for i in range(24, 30):
+        st_.insert({"k": i, "g": i % 2, "v": 2})
+    mlog.purge_upto(st_.current_ts)
+    rows = {int(r["g"]): (r["n"], r["sv"], r["av"])
+            for r in mv.query().rows()}
+    assert rows == oracle_agg(st_)
+    assert mv.stats["purge_full_refreshes"] == 2
+
+
+def test_join_view_purge_falls_back_to_full():
+    lsch = schema(("lk", ColType.INT), ("x", ColType.INT))
+    rsch = schema(("rk", ColType.INT), ("y", ColType.INT))
+    left, right = LSMStore(lsch), LSMStore(rsch)
+    llog, rlog = MLog(left), MLog(right)
+    for i in range(4):
+        left.insert({"lk": i, "x": i % 2})
+        right.insert({"rk": i, "y": i % 2})
+    mjv = MaterializedJoinView("j", left, right, llog, rlog,
+                               MJVDefinition("x", "y", ("y",)))
+    n0 = len(mjv.rows())
+    left.insert({"lk": 10, "x": 0})
+    llog.purge_upto(left.current_ts)       # purge past the view's snapshot
+    mjv.incremental_refresh()              # silently incomplete before fix
+    want = sum(1 for lr in left.scan()[0].rows()
+               for rr in right.scan()[0].rows() if lr["x"] == rr["y"])
+    assert len(mjv.rows()) == want > n0
+
+
 def test_refresh_cost_scales_with_delta_not_base():
     """Table I / §IV-C: incremental refresh work ~ O(D·log M), not O(M)."""
     st_, mlog = make_store()

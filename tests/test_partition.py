@@ -69,6 +69,65 @@ def test_sharded_empty_store():
     assert rows == [{"n": 0, "sv": 0, "mn": None}]
 
 
+# ---------------------------------------------------------------------------
+# degenerate shard shapes: all-empty shards, shards > blocks, everything
+# pruned in every shard (flat and grouped)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_over_all_empty_partials():
+    q = Query(group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                     QAgg("sum", "v", "sv"),
+                                     QAgg("min", "v", "mn")))
+    empties = [GroupedPartial.from_columns(
+        q, {"g": np.empty(0, np.int64), "v": np.empty(0)}, 0)
+        for _ in range(5)]
+    merged = tree_reduce(empties, GroupedPartial.merge)
+    assert merged.keys == [] and merged.finalize(q) == []
+    # flat shape: empty partials still emit the typed empty-aggregate row
+    qf = Query(aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"),
+                     QAgg("min", "v", "mn"), QAgg("avg", "v", "av")))
+    flat = [GroupedPartial.from_columns(q=qf, cols={"v": np.empty(0)},
+                                        n_rows=0) for _ in range(4)]
+    assert tree_reduce(flat, GroupedPartial.merge).finalize(qf) == \
+        [{"n": 0, "sv": 0, "mn": None, "av": None}]
+
+
+@pytest.mark.parametrize("grouped", [False, True])
+@pytest.mark.parametrize("shards", [1, 3, 16])
+def test_predicate_prunes_every_block_in_every_shard(grouped, shards):
+    """A predicate outside every zone map: every shard's block range prunes
+    to nothing; flat and grouped fan-outs must still emit VectorEngine's
+    empty-result convention."""
+    rng = np.random.default_rng(4)
+    store = make_store(rng, n=256, block_rows=32, dml=False)
+    preds = (Predicate("d", PredOp.GT, 10_000),)
+    q = (Query(preds=preds, group_by=("g",),
+               aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+         if grouped else
+         Query(preds=preds, aggs=(QAgg("count", None, "n"),
+                                  QAgg("sum", "v", "sv"),
+                                  QAgg("min", "v", "mn"))))
+    ex = ShardedScanExecutor(n_shards=shards)
+    rows, stats = ex.execute_stats(store, q)
+    table, _ = store.scan()
+    assert norm(rows) == norm(VectorEngine().execute(table, q))
+    assert stats.blocks_skipped == store.baseline.n_blocks
+    assert stats.blocks_scanned == 0
+
+
+def test_more_shards_than_blocks_grouped_and_flat():
+    rng = np.random.default_rng(6)
+    store = make_store(rng, n=96, block_rows=32, dml=True)
+    table, _ = store.scan()
+    for q in (Query(group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                           QAgg("max", "v", "mx"))),
+              Query(aggs=(QAgg("count", None, "n"),
+                          QAgg("sum", "v", "sv")))):
+        got = ShardedScanExecutor(n_shards=12).execute(store, q)
+        assert norm(got) == norm(VectorEngine().execute(table, q))
+
+
 def test_make_engine_sharded():
     eng = make_engine("sharded", n_shards=3)
     assert eng.name == "sharded" and eng.n_shards == 3

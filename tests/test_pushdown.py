@@ -12,6 +12,7 @@ import pytest
 from repro.core.engine import (QAgg, Query, ScalarEngine, VectorEngine,
                                make_engine)
 from repro.core.lsm import LSMStore
+from repro.core.partition import ShardedScanExecutor
 from repro.core.pushdown import PushdownExecutor
 from repro.core.relation import (ColType, Predicate, PredOp, Table, schema)
 
@@ -99,6 +100,110 @@ def test_three_engine_parity_over_lsm(qi, dml):
     if not q.sort_by or not q.limit:      # scalar ties in sort+limit differ
         want_s = ScalarEngine().execute(table, q)
         assert norm(got) == norm(want_s)
+
+
+def make_null_store(rng, n=300, block_rows=32, null_frac=0.3, inc=True):
+    """Store whose baseline blocks carry NULLs (insert → major_compact keeps
+    the bitmap in ColumnSSTable.null_blocks), plus optional NULL-bearing
+    incremental rows."""
+    sch = schema(("k", ColType.INT), ("g", ColType.INT), ("d", ColType.INT),
+                 ("v", ColType.FLOAT))
+    store = LSMStore(sch, block_rows=block_rows, memtable_limit=10**6)
+    for i in range(n):
+        store.insert({"k": i, "g": int(rng.integers(0, 4)),
+                      "d": int(rng.integers(0, 100)),
+                      "v": None if rng.random() < null_frac
+                      else float(rng.normal())})
+    store.major_compact()
+    assert store.baseline.cols["v"].null_blocks is not None
+    if inc:
+        for j in range(n, n + 30):
+            store.insert({"k": j, "g": int(rng.integers(0, 4)),
+                          "d": int(rng.integers(0, 100)),
+                          "v": None if j % 3 == 0 else float(j)})
+    return store
+
+
+NULL_PREDS = [(), (Predicate("d", PredOp.BETWEEN, 20, 70),),
+              (Predicate("v", PredOp.NOT_NULL),),
+              (Predicate("v", PredOp.IS_NULL),),
+              (Predicate("v", PredOp.GT, 0.0),)]
+
+
+@pytest.mark.parametrize("pi", range(len(NULL_PREDS)))
+@pytest.mark.parametrize("inc", [False, True])
+def test_null_heavy_flat_aggregate_parity(pi, inc):
+    """count(*) vs count(col) over NULL-bearing blocks: every engine —
+    Scalar, Vector over the (null-preserving) scan, pushdown (sketch path
+    included), sharded fan-out, and the store aggregate API — returns the
+    SQL answer: count(col)/sum/min/max/avg skip NULLs, count(*) does not."""
+    rng = np.random.default_rng(71 + pi)
+    store = make_null_store(rng, inc=inc)
+    q = Query(preds=NULL_PREDS[pi],
+              aggs=(QAgg("count", None, "n"), QAgg("count", "v", "cv"),
+                    QAgg("sum", "v", "sv"), QAgg("min", "v", "mn"),
+                    QAgg("max", "v", "mx"), QAgg("avg", "v", "av")))
+    table, _ = store.scan()
+    want = norm(ScalarEngine().execute(table, q))
+    assert norm(VectorEngine().execute(table, q)) == want
+    assert norm(PushdownExecutor().execute(store, q)) == want
+    assert norm(ShardedScanExecutor(n_shards=3).execute(store, q)) == want
+    want_row = ScalarEngine().execute(table, q)[0]
+    for agg, key in (("count", "cv"), ("sum", "sv"), ("min", "mn"),
+                     ("max", "mx"), ("avg", "av")):
+        got, _ = store.aggregate(agg, "v", q.preds)
+        w = want_row[key]
+        if isinstance(w, float):
+            assert got is not None and abs(got - w) < 1e-9, (agg, got, w)
+        else:
+            assert got == w or (not got and not w), (agg, got, w)
+
+
+def test_null_blocks_absorbed_from_sketches():
+    """A no-predicate flat aggregate over NULL-bearing blocks is still
+    answered entirely from sketches (count - null_count per block), never
+    decoding — and agrees with the scalar oracle."""
+    rng = np.random.default_rng(81)
+    store = make_null_store(rng, inc=False)
+    q = Query(aggs=(QAgg("count", None, "n"), QAgg("count", "v", "cv"),
+                    QAgg("sum", "v", "sv"), QAgg("min", "v", "mn")))
+    rows, stats = PushdownExecutor().execute_stats(store, q)
+    assert stats.blocks_sketch_only == stats.blocks_total
+    assert stats.blocks_scanned == 0
+    table, _ = store.scan()
+    assert norm(rows) == norm(ScalarEngine().execute(table, q))
+    assert rows[0]["n"] > rows[0]["cv"]       # NULLs excluded from count(v)
+
+
+def test_null_heavy_grouped_and_projection_parity():
+    """Grouped queries and projections over NULL-bearing stores: pushdown ≡
+    VectorEngine over the scan (group keys keep the engine-wide fill
+    convention; projections emit None)."""
+    rng = np.random.default_rng(91)
+    store = make_null_store(rng)
+    table, _ = store.scan()
+    for q in (Query(preds=(Predicate("v", PredOp.NOT_NULL),),
+                    group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                           QAgg("sum", "v", "sv"))),
+              Query(preds=(Predicate("d", PredOp.LT, 30),),
+                    project=("k", "v"), sort_by=("k",))):
+        want = norm(VectorEngine().execute(table, q))
+        assert norm(PushdownExecutor().execute(store, q)) == want
+        assert norm(ShardedScanExecutor(n_shards=2).execute(store, q)) \
+            == want
+
+
+def test_scan_preserves_baseline_null_bitmap():
+    rng = np.random.default_rng(13)
+    store = make_null_store(rng, inc=False)
+    table, _ = store.scan()
+    col = table.col("v")
+    assert col.nulls is not None and col.nulls.any()
+    root = store.baseline.cols["v"].index
+    assert int(col.nulls.sum()) == root.nodes[root.root].sketch.null_count
+    # row() reconstructs None from the bitmap (merge-on-read correction path)
+    i = int(np.nonzero(col.nulls)[0][0])
+    assert store.baseline.row(i)["v"] is None
 
 
 def test_parity_engines_with_nulls_table(rng):

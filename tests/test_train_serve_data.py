@@ -177,6 +177,7 @@ def isolated_generate(cfg, params, prompt, max_new):
     return out
 
 
+@pytest.mark.slow
 def test_continuous_batching_matches_isolated(served):
     cfg, params = served
     sch = Scheduler(cfg, RULES, params,
