@@ -19,13 +19,42 @@ the large-block layout win both shapes: no slower than the best fixed
 setting on the full scan, >= 1.3x faster than the worst fixed setting on the
 selective shape.
 
+The **collective vs host-merge** section measures the two sharded *device*
+routes over identically staged kernel inputs: the legacy per-shard fused
+kernel launches with a host-side tree-merge of partials, against the
+single-launch ``shard_map`` route (``ops.sharded_scan_agg``) whose partials
+tree-reduce on device via psum/pmin/pmax over the 'scan' mesh.  The module
+forces a multi-device host platform (when it gets to the jax import first)
+so the 'scan' axis is a real multi-device axis; the mesh size is recorded
+next to the ratios.  The **top-k** section measures limit pushdown on the
+sharded host path: per-shard k-group partial heaps merged as heaps, vs the
+pinned full-merge-then-sort baseline.
+
 Smoke mode (``benchmarks/run.py --suite distributed --json
 BENCH_distributed.json``) records shard scaling, the adaptive-vs-fixed
-granularity ratios, and the cost-chosen shard counts, and asserts the
-4-shard fan-out beats single-shard by >= 1.5x plus the two granularity
-guarantees above.
+granularity ratios, the cost-chosen shard counts, the collective-vs-host
+ratios and the top-k ratio, and asserts the 4-shard fan-out beats
+single-shard by >= 1.5x, the two granularity guarantees above, the
+collective route >= the per-shard route at >= 2 shards on a multi-device
+mesh, and top-k pushdown >= 1.3x over full-merge-then-sort.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# The collective route only shows its tree-reduce on a real multi-device
+# 'scan' axis; XLA's host-device override must land before the first jax
+# import, so claim it here when this module gets there first (bounded by
+# the core count — each forced device is a real thread pool).
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    _ndev = max(min(os.cpu_count() or 1, 4), 1)
+    if _ndev > 1:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + f" --xla_force_host_platform_device_"
+                                     f"count={_ndev}").strip()
 
 import numpy as np
 
@@ -56,9 +85,12 @@ def _norm(rows):
 
 
 def shard_scaling(n: int = N, block_rows: int = BLOCK_ROWS,
-                  repeat: int = 3) -> dict:
-    rng = np.random.default_rng(7)
-    store = make_store(rng, n, block_rows)
+                  repeat: int = 3, store=None) -> dict:
+    # ``store`` reuse: smoke's best-of-attempts loop passes one staged
+    # store through every attempt instead of re-encoding 1.2M rows per
+    # attempt (encode noise out of the ratios, minutes off the wall-clock)
+    if store is None:
+        store = make_store(np.random.default_rng(7), n, block_rows)
     q = _query()
     push = PushdownExecutor()
     want = _norm(push.execute(store, q))
@@ -167,6 +199,104 @@ def auto_shard_choice(stores, n: int = N) -> dict:
             "auto_est_rows_full": round(st_f.est_rows, 1)}
 
 
+COLL_N = 300_000
+COLL_BLOCK_ROWS = 4_096
+
+
+def collective_vs_host(n: int = COLL_N, block_rows: int = COLL_BLOCK_ROWS,
+                       shard_counts=(2, 4), repeat: int = 5,
+                       store=None, verify: bool = True) -> dict:
+    """Single-launch shard_map + on-device psum/pmin/pmax tree-reduce vs
+    per-shard kernel launches + host merge, over identical pre-staged
+    kernel inputs (interpret mode on CPU; the recorded ``n_devices`` says
+    how wide the 'scan' mesh really was).  With ``verify`` (first smoke
+    attempt only — parity over a reused store cannot change between
+    attempts) both routes are asserted against the host sharded executor
+    before timing.  The staging and merge machinery is the executor's own
+    (``stack_device_stage`` / ``device_partial_combine``), so the bench
+    cannot drift from the route the engine actually runs."""
+    import jax
+    from repro.core import pushdown as _pd
+    from repro.core.partition import (ShardedScanExecutor,
+                                      device_partial_combine,
+                                      launch_shard_kernels, range_partition,
+                                      stack_device_stage, tree_reduce)
+    from repro.kernels import ops
+    from repro.launch.mesh import make_scan_mesh, scan_shard_devices
+    if store is None:
+        store = make_store(np.random.default_rng(7), n, block_rows)
+    q = _query()
+    plan = _pd.plan_device(store, q)
+    stage = _pd.stage_device(store, plan)
+    assert plan is not None and stage is not None
+    mask = np.ones(store.baseline.n_blocks, bool)
+    out = {"n_rows": n, "block_rows": block_rows,
+           "n_blocks": store.baseline.n_blocks,
+           "n_devices": len(jax.devices())}
+    for S in shard_counts:
+        shards = [s for s in range_partition(store.baseline, S) if s.n_blocks]
+        devs = scan_shard_devices(len(shards))
+
+        def host_route():
+            outs = launch_shard_kernels(plan, stage, shards, mask, devs)
+            parts = [tuple(np.asarray(x) for x in o) for o in outs]
+            return tree_reduce(parts, device_partial_combine)
+
+        mesh = make_scan_mesh(len(shards))
+        ins, _ = stack_device_stage(stage, shards, mask, mesh)
+
+        def coll_route():
+            o = ops.sharded_scan_agg(ins[0], ins[1], ins[2], plan.lo, plan.hi,
+                                     ins[3], ins[4], ndv=stage.ndv,
+                                     block_mask=ins[5], mesh=mesh)
+            return tuple(np.asarray(x) for x in o)
+
+        a, b = host_route(), coll_route()        # warm both jit caches
+        if verify:
+            np.testing.assert_array_equal(a[0], b[0])
+            np.testing.assert_allclose(a[1], b[1], rtol=1e-4, atol=1e-2)
+            want = {r["status"]: r
+                    for r in ShardedScanExecutor(n_shards=2).execute(store,
+                                                                     q)}
+            got = {r["status"]: r for r in _pd.emit_device_groups(
+                q, plan, stage, b[0], np.asarray(b[1], np.float64),
+                b[2], b[3])}
+            assert got.keys() == want.keys(), "collective route lost groups"
+            for g, w in want.items():     # device sums are f32: tolerance,
+                assert got[g]["n"] == w["n"]    # counts exact
+                np.testing.assert_allclose(got[g]["rev"], w["rev"],
+                                           rtol=1e-4)
+                np.testing.assert_allclose(got[g]["avg_rev"], w["avg_rev"],
+                                           rtol=1e-4)
+        t_h = timeit(host_route, repeat=repeat)
+        t_c = timeit(coll_route, repeat=repeat)
+        out[f"host_route{S}_ms"] = t_h * 1e3
+        out[f"collective{S}_ms"] = t_c * 1e3
+        out[f"collective_vs_host_{S}x"] = t_h / t_c
+    return out
+
+
+def topk_limit_pushdown(store, repeat: int = 3) -> dict:
+    """Limit-aware top-k over a high-NDV group-by (one group per ~24 rows):
+    per-shard k-group partial heaps + heap merges vs the pinned
+    full-merge-then-sort baseline, identical answers asserted first."""
+    from repro.core.partition import ShardedScanExecutor
+    q = Query(group_by=("cust",),
+              aggs=(QAgg("sum", "total", "rev"), QAgg("count", None, "n")),
+              sort_by=("cust",), limit=10)
+    full = ShardedScanExecutor(n_shards=4, limit_pushdown=False)
+    push = ShardedScanExecutor(n_shards=4)
+    want = full.execute(store, q)
+    got, stats = push.execute_stats(store, q)
+    assert stats.topk_pushdown, "pushable shape must take the heap path"
+    assert _norm(got) == _norm(want), "top-k pushdown diverged"
+    t_full = timeit(lambda: full.execute(store, q), repeat=repeat)
+    t_push = timeit(lambda: push.execute(store, q), repeat=repeat)
+    return {"limit": 10, "n_groups_approx": store.baseline.nrows // 24,
+            "full_merge_ms": t_full * 1e3, "topk_pushdown_ms": t_push * 1e3,
+            "topk_speedup": t_full / t_push}
+
+
 def parallel_headroom(units: int = 2) -> float:
     """Measured ``units``-thread scaling of a bandwidth-bound decode+gather
     probe shaped like the per-shard scan work (stream + random gather over
@@ -193,20 +323,26 @@ def parallel_headroom(units: int = 2) -> float:
 
 
 def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
-    """CI mode: record shard-scaling + granularity numbers to
-    BENCH_distributed.json and assert (a) the 4-shard fan-out either clears
-    1.5x over single-shard pushdown (a host with thread headroom) or, when
-    the host can't parallelize a memory-bound scan at all, that the fan-out
-    *machinery* is near-free (sequential 4-shard within 25% of
-    single-shard — the measured ``parallel_headroom`` is recorded purely
-    for diagnosis), (b) adaptive granularity is no slower than the best
-    fixed block_rows on the full-scan shape, (c) adaptive is >= 1.3x
-    faster than the worst fixed setting on the selective shape.
+    """CI mode: record shard-scaling + granularity + device-route + top-k
+    numbers to BENCH_distributed.json and assert (a) the 4-shard fan-out
+    either clears 1.5x over single-shard pushdown (a host with thread
+    headroom) or, when the host can't parallelize a memory-bound scan at
+    all, that the fan-out *machinery* is near-free (sequential 4-shard
+    within 25% of single-shard — the measured ``parallel_headroom`` is
+    recorded purely for diagnosis), (b) adaptive granularity is no slower
+    than the best fixed block_rows on the full-scan shape, (c) adaptive is
+    >= 1.3x faster than the worst fixed setting on the selective shape,
+    (d) on a multi-device scan mesh the single-launch collective route is
+    no slower than the per-shard launch route at >= 2 shards, (e) top-k
+    limit pushdown is >= 1.3x over full-merge-then-sort.
     Wall-clock ratios on a shared 2-core CI host are noisy, so each guard
-    takes the best of a few attempts (each already best-of-``repeat``)."""
+    takes the best of a few attempts (each already best-of-``repeat``);
+    every attempt reuses one staged store per (n, block_rows) shape
+    instead of re-encoding."""
+    scale_store = make_store(np.random.default_rng(7), n, block_rows)
     out = None
     for _ in range(attempts):
-        cur = shard_scaling(n, block_rows, repeat=5)
+        cur = shard_scaling(n, block_rows, repeat=5, store=scale_store)
         if out is None or cur["speedup_4x"] > out["speedup_4x"]:
             out = cur
         if out["speedup_4x"] >= 1.5:
@@ -247,6 +383,37 @@ def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
         f"adaptive granularity < 1.3x over worst fixed selective: {sweep}")
     out["granularity"] = sweep
     out.update(auto_shard_choice(stores, n))
+
+    # -- single-launch collective vs per-shard host merge (device routes) --
+    coll_store = make_store(np.random.default_rng(7), COLL_N,
+                            COLL_BLOCK_ROWS)
+    coll = None
+    for attempt in range(attempts):
+        cur = collective_vs_host(store=coll_store, verify=attempt == 0)
+        best = max(cur[f"collective_vs_host_{s}x"] for s in (2, 4))
+        if coll is None or best > max(coll[f"collective_vs_host_{s}x"]
+                                      for s in (2, 4)):
+            coll = cur
+        if best >= 1.0:
+            break
+    out["collective"] = coll
+    best_coll = max(coll[f"collective_vs_host_{s}x"] for s in (2, 4))
+    if coll["n_devices"] >= 2:
+        assert best_coll >= 1.0, (
+            f"single-launch collective slower than per-shard launches on a "
+            f"{coll['n_devices']}-device mesh: {coll}")
+
+    # -- limit-aware top-k pushdown vs full merge -------------------------
+    topk = None
+    for _ in range(attempts):
+        cur = topk_limit_pushdown(scale_store)
+        if topk is None or cur["topk_speedup"] > topk["topk_speedup"]:
+            topk = cur
+        if topk["topk_speedup"] >= 1.3:
+            break
+    out["topk"] = topk
+    assert topk["topk_speedup"] >= 1.3, (
+        f"top-k limit pushdown < 1.3x over full-merge-then-sort: {topk}")
     return out
 
 
@@ -270,6 +437,17 @@ def run() -> str:
     rep.add(config="adaptive_vs_worst_fixed_selective", shards="-",
             ms=f"{sweep['adaptive_selective_ms']:.3f}",
             speedup=f"{sweep['adaptive_vs_worst_fixed_selective']:.2f}x")
+    coll = collective_vs_host()
+    for s in (2, 4):
+        rep.add(config=f"device_collective_vs_host_ndev"
+                       f"{coll['n_devices']}", shards=s,
+                ms=f"{coll[f'collective{s}_ms']:.1f}",
+                speedup=f"{coll[f'collective_vs_host_{s}x']:.2f}x")
+    topk = topk_limit_pushdown(make_store(np.random.default_rng(7), N,
+                                          BLOCK_ROWS))
+    rep.add(config="topk_limit_pushdown", shards=4,
+            ms=f"{topk['topk_pushdown_ms']:.1f}",
+            speedup=f"{topk['topk_speedup']:.2f}x")
     return rep.emit()
 
 

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# One-command pre-merge check: the documented fast test lane plus the two
+# benchmark smoke suites (see pytest.ini "Lanes" and benchmarks/README.md).
+#
+#   scripts/check.sh           # fast lane + bench smoke (~2 min)
+#   scripts/check.sh --full    # full tier-1 gate instead of the fast lane
+#
+# The smoke suites self-check their perf guards and rewrite BENCH_*.json in
+# the repo root, so a green run leaves the recorded trajectory up to date.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -q -m "not device and not slow"
+fi
+
+python -m benchmarks.run --suite distributed --json BENCH_distributed.json
+python -m benchmarks.run --suite vectorized  --json BENCH_vectorized.json
+
+echo "check.sh: all green"

@@ -20,21 +20,32 @@ computed), and three granularity knobs are derived from the estimate:
   launch uses selectivity-matched tile shapes: big tiles amortize grid steps
   when nothing is pruned, single-block tiles keep the scalar-prefetch
   visit-list prune effective when the zone maps are doing the work.
+* ``choose_device_route`` — how the sharded device fan-out merges partials:
+  one ``shard_map`` launch with an on-device collective tree-reduce
+  (psum/pmin/pmax over the 'scan' mesh axis), or the legacy per-shard
+  kernel launches with a host-side partial merge.
 
 All estimates are sketch-only (no data access): the same per-leaf
 (count, null_count, vmin, vmax) arrays that drive pruning drive the plan,
 so planning costs O(blocks) numpy arithmetic per predicate.
+
+The loop is **closed**: after every scan the executors report the actual
+surviving-row count next to the estimate (``observe_scan``), and a
+per-table EWMA calibration factor (actual/estimated, clamped) multiplies
+subsequent estimates — a workload whose data violates the uniform
+interpolation assumption converges onto corrected plans instead of
+repeating the same misestimate forever.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import os
-from typing import Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .relation import Predicate
+from .relation import Predicate, PredOp
 from .skipping import Verdict
 
 TARGET_BATCH_ROWS = 1 << 15    # coalesce candidate blocks up to ~32K-row batches
@@ -42,6 +53,88 @@ MIN_ADAPTIVE_ROWS = 1 << 12    # below this, batching cannot amortize anything
 ROWS_PER_SHARD = 1 << 17       # ~128K surviving rows per fan-out shard
 DEVICE_TILE_ROWS = 1 << 14     # target fused-kernel tile height (rows)
 MAX_COALESCE = 64
+CAL_ALPHA = 0.4                # EWMA weight of the newest actual/est ratio
+CAL_CLAMP = (0.2, 5.0)         # calibration factor bounds (misestimates are
+                               # corrected, never amplified into absurd plans)
+
+
+# ---------------------------------------------------------------------------
+# Feedback calibration (closed-loop planning)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TableCalibration:
+    """Per-table feedback state: EWMAs of observed actual/estimated
+    surviving-row ratios, keyed by the query's (predicate column, shape)
+    set — a point probe (EQ/IN) and a range scan over the *same* column
+    are different estimation problems with different biases, so they get
+    separate factors and neither pollutes the other's correction (one
+    shared EWMA would oscillate between the two and converge for
+    neither).  The matching factor multiplies every subsequent
+    interpolated estimate, so systematic bias (skew, correlated
+    predicates) is corrected after a few queries instead of persisting
+    open-loop."""
+
+    factors: Dict[Tuple, float] = \
+        dataclasses.field(default_factory=dict)
+    n_obs: Dict[Tuple, int] = \
+        dataclasses.field(default_factory=dict)
+    last_est: float = 0.0
+    last_actual: float = 0.0
+
+    def factor_for(self, key: Tuple) -> float:
+        return self.factors.get(key, 1.0)
+
+    def observe(self, key: Tuple, est_rows: float,
+                actual_rows: float) -> None:
+        self.last_est, self.last_actual = float(est_rows), float(actual_rows)
+        if est_rows <= 0.0:
+            return                       # nothing survived the plan: no signal
+        lo, hi = CAL_CLAMP
+        ratio = min(max(actual_rows / est_rows, lo), hi)
+        n = self.n_obs.get(key, 0)
+        w = CAL_ALPHA if n else 1.0
+        prev = self.factors.get(key, 1.0)
+        self.factors[key] = min(max((1 - w) * prev + w * ratio, lo), hi)
+        self.n_obs[key] = n + 1
+
+
+def calibration(store) -> TableCalibration:
+    """The store's (lazily attached) calibration state."""
+    cal = getattr(store, "_cost_calibration", None)
+    if cal is None:
+        cal = TableCalibration()
+        store._cost_calibration = cal
+    return cal
+
+
+def _pred_shape(op: PredOp) -> str:
+    if op in (PredOp.EQ, PredOp.IN):
+        return "pt"                     # point probe
+    if op in (PredOp.IS_NULL, PredOp.NOT_NULL):
+        return "null"
+    if op == PredOp.NE:
+        return "ne"
+    return "rng"                        # LT/LE/GT/GE/BETWEEN
+
+
+def _cal_key(preds: Sequence[Predicate]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted({(p.column, _pred_shape(p.op)) for p in preds}))
+
+
+def observe_scan(store, est: Optional["ScanEstimate"],
+                 actual_rows: float) -> None:
+    """Close the loop after a scan: fold the observed surviving-row count
+    into the table's calibration factor for this predicate-column set.
+    Only interpolated estimates carry signal (a full scan's estimate is
+    exact by construction, and the zone-map short-circuit path never
+    consults the interpolation it would correct), and the raw
+    (pre-calibration) estimate is compared so repeated observations of the
+    same bias converge instead of compounding."""
+    if est is None or not est.calibrated:
+        return
+    calibration(store).observe(est.cal_key, est.raw_rows, actual_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +145,15 @@ class ScanEstimate:
     n_blocks: int
     candidate_blocks: int      # blocks with verdict != NONE
     est_rows: float            # estimated rows surviving every predicate
+                               # (calibration factor already applied)
+    raw_rows: float = -1.0     # pre-calibration estimate (-1 == same as est)
+    calibrated: bool = False   # True when a feedback factor could apply
+                               # (predicate-bearing, interpolated estimate)
+    cal_key: Tuple = ()        # (column, shape) set of the estimate
+
+    def __post_init__(self):
+        if self.raw_rows < 0.0:
+            object.__setattr__(self, "raw_rows", self.est_rows)
 
     @property
     def selectivity(self) -> float:
@@ -72,20 +174,26 @@ def estimate_scan(store, preds: Sequence[Predicate],
     sketches: per-block matching fractions multiply across predicates
     (independence assumption), NONE-verdict blocks contribute zero.  Columns
     without numeric bounds fall back to verdict-coarse fractions
-    (ALL → 1, SOME → ½, NONE → 0)."""
+    (ALL → 1, SOME → ½, NONE → 0).  Predicate-bearing estimates are
+    multiplied by the table's feedback calibration factor (``observe_scan``)
+    so the loop is closed across queries."""
     base = store.baseline
     nb = base.n_blocks
     if nb == 0:
         return ScanEstimate(0, 0, 0, 0.0)
+    key = _cal_key(preds)
+    factor = calibration(store).factor_for(key) if preds else 1.0
     counts = base.cols[base.schema.pk].index.leaf_counts().astype(np.float64)
     if verdicts is not None:
         cand_mask = verdicts != Verdict.NONE.value
         candidates = int(cand_mask.sum())
         if candidates <= 1:
             # zone maps already decided the plan (one candidate block forces
-            # coalesce/shards/tile to 1) — skip per-predicate interpolation
-            est = float(counts[cand_mask].sum()) * (0.5 if preds else 1.0)
-            return ScanEstimate(base.nrows, nb, candidates, est)
+            # coalesce/shards/tile to 1) — skip per-predicate interpolation;
+            # this verdict-coarse guess is not calibrated feedback material
+            # (the factor corrects interpolation it never consulted)
+            raw = float(counts[cand_mask].sum()) * (0.5 if preds else 1.0)
+            return ScanEstimate(base.nrows, nb, candidates, raw, raw)
     frac = np.ones(nb, np.float64)
     for p in preds:
         f = base.cols[p.column].index.estimate_fraction(p)
@@ -102,8 +210,12 @@ def estimate_scan(store, preds: Sequence[Predicate],
         candidates = int((verdicts != Verdict.NONE.value).sum())
     else:
         candidates = nb
+    raw = float((counts * frac).sum())
+    if not preds:
+        return ScanEstimate(base.nrows, nb, candidates, raw, raw)
     return ScanEstimate(base.nrows, nb, candidates,
-                        float((counts * frac).sum()))
+                        min(raw * factor, float(base.nrows)), raw,
+                        calibrated=True, cal_key=key)
 
 
 def choose_coalesce(est: ScanEstimate, block_rows: int,
@@ -143,6 +255,27 @@ def choose_device_tile(est: ScanEstimate, block_rows: int,
         return 1
     return int(max(1, min(est.n_blocks, target_rows // max(block_rows, 1),
                           MAX_COALESCE)))
+
+
+def choose_device_route(est: Optional[ScanEstimate], n_devices: int,
+                        n_shards: int) -> str:
+    """How the sharded device fan-out merges partials: ``'collective'`` is
+    one ``shard_map`` launch whose partials tree-reduce on device
+    (psum/pmin/pmax over the 'scan' axis), ``'host'`` is one kernel launch
+    per shard with a host-side Python merge.  A single shard has nothing to
+    merge, so the per-shard path (== one launch) is free; a real
+    multi-device mesh always prefers the collective (the host merge is the
+    cross-system synchronization the paper's engine exists to avoid); on a
+    one-device mesh the batched single launch still wins once the shard
+    count is non-trivial and enough rows survive to amortize the padded
+    staging."""
+    if n_shards <= 1:
+        return "host"
+    if n_devices > 1:
+        return "collective"
+    if est is not None and est.est_rows < MIN_ADAPTIVE_ROWS:
+        return "host"
+    return "collective"
 
 
 def choose_batch_rows(n_rows: int, max_batch: int = 1 << 16) -> int:

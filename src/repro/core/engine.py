@@ -217,10 +217,12 @@ class VectorEngine:
         """Terminal pipeline stages over already-filtered columns: project /
         flat aggregate / group-by, then sort + limit.  ``c(name)`` returns the
         filtered (late-materialized) values of one column; ``nulls(name)``
-        (optional) its NULL mask, so flat aggregates skip NULL slots and
-        projections emit None (SQL semantics) — group-by keys and grouped
-        aggregates keep the encoded fill-value convention.  Shared by the
-        in-memory vectorized path and the block-pushdown executors."""
+        (optional) its NULL mask, so aggregates — flat AND grouped — skip
+        NULL slots and projections emit None (SQL semantics: count(col)/sum/
+        min/max/avg ignore NULLs, count(*) does not).  Group *keys* keep the
+        encoded fill-value convention (a NULL key story is still open).
+        Shared by the in-memory vectorized path and the block-pushdown
+        executors."""
         if not q.aggs:
             names = list(q.project or all_names)
             data = {nm: c(nm) for nm in names}
@@ -239,7 +241,7 @@ class VectorEngine:
                 valid[a] = v if nm is None else v[~nm]
             out = [self._agg_flat(valid, q.aggs, n_rows=n_rows)]
         else:
-            out = self._groupby(q, c, n_rows)
+            out = self._groupby(q, c, n_rows, nulls=nulls)
 
         if q.sort_by:
             out = self._sort(out, q.sort_by)
@@ -275,7 +277,9 @@ class VectorEngine:
         return r
 
     def _groupby(self, q: Query, c: Callable[[str], np.ndarray],
-                 n_rows: int) -> List[Dict[str, Any]]:
+                 n_rows: int,
+                 nulls: Optional[Callable[[str], Optional[np.ndarray]]] = None
+                 ) -> List[Dict[str, Any]]:
         keys = [c(g) for g in q.group_by]
         # Dictionary-encode the composite key.
         if len(keys) == 1:
@@ -293,36 +297,61 @@ class VectorEngine:
                 key_rows = [tuple(_item(x) for x in u) for u in uniq]
         G = len(key_rows)
         # Low-NDV fast path: array-indexed accumulation (no hash table).
-        out_states: Dict[str, np.ndarray] = {}
         counts = np.bincount(codes, minlength=G)
         rows: List[Dict[str, Any]] = []
         agg_results: Dict[str, np.ndarray] = {}
+        # Per-alias validity: grouped aggregates over a NULL-bearing column
+        # strip NULL slots (SQL semantics), so a group whose rows are all
+        # NULL in that column emits None for avg/min/max and 0 for sum.
+        # The filtered (values, codes, per-group non-null counts) are
+        # shared across aggregates of the same column — sum+avg+count over
+        # one column pays the mask gather and bincount once, the same
+        # one-accumulator-per-column rule ScalarEngine follows.
+        agg_valid: Dict[str, Optional[np.ndarray]] = {}
+        col_cache: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         for a in q.aggs:
+            agg_valid[a.alias] = None
             if a.column is None:
                 agg_results[a.alias] = counts
                 continue
-            v = c(a.column)
+            if a.column in col_cache:
+                v, vcodes, vcounts = col_cache[a.column]
+            else:
+                v = c(a.column)
+                m = nulls(a.column) if nulls else None
+                vcodes = codes
+                vcounts = counts
+                if m is not None:
+                    keep = ~m
+                    v, vcodes = v[keep], codes[keep]
+                    vcounts = np.bincount(vcodes, minlength=G)
+                col_cache[a.column] = (v, vcodes, vcounts)
+            if vcounts is not counts and a.op in ("avg", "min", "max"):
+                agg_valid[a.alias] = vcounts > 0  # sum/count of none == 0
             if a.op == "count":
-                agg_results[a.alias] = counts
+                agg_results[a.alias] = vcounts
             elif a.op in ("sum", "avg"):
-                s = np.bincount(codes, weights=v.astype(np.float64), minlength=G)
-                agg_results[a.alias] = s / np.maximum(counts, 1) if a.op == "avg" else s
+                s = np.bincount(vcodes, weights=v.astype(np.float64),
+                                minlength=G)
+                agg_results[a.alias] = \
+                    s / np.maximum(vcounts, 1) if a.op == "avg" else s
             elif a.op in ("min", "max"):
                 if v.size == 0:
-                    agg_results[a.alias] = np.empty((0,), v.dtype)
+                    agg_results[a.alias] = np.zeros(G, v.dtype)
+                    agg_valid[a.alias] = np.zeros(G, bool)
                     continue
                 fill = v.max() if a.op == "min" else v.min()
                 acc = np.full(G, fill, v.dtype)
-                (np.minimum if a.op == "min" else np.maximum).at(acc, codes, v)
+                (np.minimum if a.op == "min" else np.maximum).at(acc, vcodes, v)
                 agg_results[a.alias] = acc
         for g in range(G):
             r = {col: _item(kv) for col, kv in zip(q.group_by, key_rows[g])}
             for a in q.aggs:
-                val = agg_results[a.alias][g]
-                if a.op == "sum" and not np.issubdtype(type(val), np.floating):
-                    r[a.alias] = _item(val)
+                valid = agg_valid[a.alias]
+                if valid is not None and not valid[g]:
+                    r[a.alias] = None
                 else:
-                    r[a.alias] = _item(val)
+                    r[a.alias] = _item(agg_results[a.alias][g])
             rows.append(r)
         return rows
 

@@ -289,8 +289,13 @@ class ScanStats:
     used_device: bool = False          # fused Pallas kernel answered the scan
     n_shards: int = 0                  # >0: mesh-sharded fan-out ran
     est_rows: float = 0.0              # planner estimate of surviving rows
+    actual_rows: int = 0               # observed baseline rows surviving the
+                                       # predicates (feeds cost calibration)
     batch_blocks: int = 1              # blocks fused per vector batch
     device_tile_blocks: int = 1        # blocks fused per kernel tile
+    device_route: str = ""             # 'collective' | 'host' when used_device
+    n_devices: int = 0                 # scan-mesh size the device fan-out saw
+    topk_pushdown: bool = False        # per-shard limit-aware top-k ran
 
     def absorb(self, other: "ScanStats") -> None:
         """Fold one shard's counters into the query-level stats (the
@@ -299,6 +304,7 @@ class ScanStats:
         self.blocks_skipped += other.blocks_skipped
         self.blocks_sketch_only += other.blocks_sketch_only
         self.blocks_scanned += other.blocks_scanned
+        self.actual_rows += other.actual_rows
 
 
 class LSMStore:

@@ -27,10 +27,25 @@ and, on the device path, the fused-kernel tile height.
 Shards execute concurrently on a thread pool sized to the host cores (the
 per-shard work is numpy decode/filter/bincount, which releases the GIL).
 With ``device=True`` the supported query shape is staged once through
-``pushdown.stage_device`` and each shard runs the fused Pallas kernel over
-its own block slice, placed round-robin on the 1-D ``'scan'`` mesh from
-``launch.mesh.make_scan_mesh``; the per-shard device partials tree-merge
-with the same combination rule.
+``pushdown.stage_device`` and the cost model picks between two routes
+(``cost.choose_device_route``): the **collective** route pads the per-shard
+block slices to a common tile shape and hands ONE batched ``shard_map``
+launch to ``kernels.fused_scan_agg.sharded_scan_agg`` — the fused kernel
+runs per shard on its 'scan'-mesh device and the count/sum/min/max partials
+tree-reduce on device via psum/pmin/pmax over packed group-code
+accumulators, so no ``GroupedPartial`` ever crosses back to the host; the
+**host** route keeps the legacy per-shard kernel launches (round-robin
+placement via ``launch.mesh.scan_shard_devices``) with a host-side
+tree-merge.
+
+``Query(sort_by=<group columns>, limit=k)`` additionally activates
+**limit-aware top-k pushdown**: because a group's sort rank is fixed by its
+key (never by a merged aggregate), each shard keeps only a k-group partial
+heap, the merge tree combines heaps instead of full grouped partials, and
+the device collective route slices the first k non-empty groups out of the
+reduced accumulator before anything is copied to the host.  Sorting by an
+aggregate alias is not rank-stable under merge and keeps the full-merge
+path.
 """
 from __future__ import annotations
 
@@ -128,22 +143,27 @@ class GroupedPartial:
     sums: Dict[str, np.ndarray]                 # per agg column [G]
     mins: Dict[str, np.ndarray]
     maxs: Dict[str, np.ndarray]
-    # flat (group-less) shards track SQL non-null counts per aggregated
-    # column so count(col)/avg skip NULL slots; grouped partials keep the
-    # engine-wide fill-value convention (cnts empty).
+    # SQL non-null counts per aggregated column (flat: one slot; grouped:
+    # [G]) so count(col)/avg/min/max skip NULL slots in every shard shape.
     cnts: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------- build
     @classmethod
     def from_columns(cls, q: Query, cols: Dict[str, np.ndarray],
                      n_rows: int,
-                     nulls: Optional[Dict[str, Optional[np.ndarray]]] = None
-                     ) -> "GroupedPartial":
+                     nulls: Optional[Dict[str, Optional[np.ndarray]]] = None,
+                     topk_prefix: Optional[int] = None) -> "GroupedPartial":
         """Aggregate one shard's late-materialized columns, mirroring
         ``VectorEngine._groupby`` key discovery (packed sort keys when the
         ranges allow, record arrays otherwise) and array-indexed
-        accumulation.  ``nulls`` (flat shards only) strips NULL slots from
-        each aggregated column before accumulation."""
+        accumulation.  ``nulls`` strips NULL slots from each aggregated
+        column before accumulation (SQL null-skipping, flat and grouped
+        alike); the per-group non-null counts land in ``cnts``.
+
+        ``topk_prefix = k`` is the limit-pushdown fast path for queries
+        sorted by a leading prefix of the group columns: discovered keys
+        are already in sort order, so the partial keeps only the first k
+        groups and never accumulates the rows of the discarded ones."""
         gb = tuple(q.group_by)
         agg_cols = sorted({a.column for a in q.aggs if a.column})
         if gb:
@@ -165,6 +185,15 @@ class GroupedPartial:
                     stacked = np.rec.fromarrays(keyarrs)
                     uniq, codes = np.unique(stacked, return_inverse=True)
                     keys = [tuple(_item(x) for x in u) for u in uniq]
+            if topk_prefix is not None and len(keys) > topk_prefix:
+                keys = keys[: topk_prefix]      # unique-key order == sort
+                keep = codes < topk_prefix      # order for prefix sorts
+                codes = codes[keep]
+                cols = {c: np.asarray(cols[c])[keep] for c in agg_cols}
+                if nulls:
+                    nulls = {c: (None if m is None else m[keep])
+                             for c, m in nulls.items()}
+                n_rows = int(codes.shape[0])
         else:
             keys = [()]
             codes = np.zeros(n_rows, np.int64)
@@ -183,12 +212,17 @@ class GroupedPartial:
         for c in agg_cols:
             v = np.asarray(cols[c])
             ccodes = codes
+            m = nulls.get(c) if nulls else None
+            if m is not None:
+                keep = ~np.asarray(m)
+                v = v[keep]
+                ccodes = codes[keep]
             if not gb:
-                m = nulls.get(c) if nulls else None
-                if m is not None:
-                    v = v[~m]
-                    ccodes = codes[: v.shape[0]]    # flat: codes all zero
                 cnts[c] = np.asarray([v.shape[0]], np.int64)
+            else:
+                cnts[c] = (rows_per_group if m is None
+                           else np.bincount(ccodes, minlength=G)
+                           .astype(np.int64))
             if c in need_sum:
                 if not gb and v.dtype.kind in "iub":
                     # flat int sums: overflow-exact Python ints (object
@@ -305,12 +339,23 @@ class GroupedPartial:
                 r = dict(zip(q.group_by, key))
                 n = int(self.rows_per_group[g])
                 for a in q.aggs:
-                    if a.op == "count":
+                    if a.column is None:
                         r[a.alias] = n
+                        continue
+                    # SQL null-skipping: per-group non-null count when
+                    # tracked (count(col)/avg/min/max over an all-NULL
+                    # group → 0/None/None, matching ScalarEngine)
+                    cn = (int(self.cnts[a.column][g])
+                          if a.column in self.cnts else n)
+                    if a.op == "count":
+                        r[a.alias] = cn
                     elif a.op == "sum":
                         r[a.alias] = float(self.sums[a.column][g])
                     elif a.op == "avg":
-                        r[a.alias] = float(self.sums[a.column][g]) / n
+                        r[a.alias] = (float(self.sums[a.column][g]) / cn
+                                      if cn else None)
+                    elif cn == 0:
+                        r[a.alias] = None
                     else:
                         src = self.mins if a.op == "min" else self.maxs
                         r[a.alias] = _item(src[a.column][g])
@@ -320,6 +365,48 @@ class GroupedPartial:
         if q.limit is not None:
             rows = rows[: q.limit]
         return rows
+
+
+    # ------------------------------------------------------------- top-k
+    def topk(self, q: Query, k: int) -> "GroupedPartial":
+        """Limit-aware truncation of a partial heap: keep only the ``k``
+        groups that can still reach the final top-k.  Sound because the
+        sort columns are group columns (``topk_group_limit``), so a group's
+        rank is decided by its key alone and never moves under merge: any
+        group in the global top-k is preceded by < k groups globally, hence
+        by < k groups inside every shard that contains it.  Ties on the
+        sort columns break by the full key tuple — the same deterministic
+        order ``VectorEngine``'s stable sort produces over key-sorted
+        rows."""
+        if not self.group_cols or len(self.keys) <= k:
+            return self
+        if q.sort_by == self.group_cols[: len(q.sort_by)]:
+            keep = list(range(k))       # keys are kept sorted: a leading
+                                        # prefix sort is already the order
+        else:
+            pos = [self.group_cols.index(c) for c in q.sort_by]
+            order = sorted(range(len(self.keys)),
+                           key=lambda i: (tuple(self.keys[i][p] for p in pos),
+                                          self.keys[i]))
+            keep = sorted(order[:k])    # self.keys is sorted: index order
+        idx = np.asarray(keep, np.int64)  # == key order inside the heap
+        take = lambda d: {c: s[idx] for c, s in d.items()}
+        return GroupedPartial(self.group_cols, [self.keys[i] for i in keep],
+                              self.rows_per_group[idx], take(self.sums),
+                              take(self.mins), take(self.maxs),
+                              take(self.cnts))
+
+
+def topk_group_limit(q: Query) -> Optional[int]:
+    """The per-shard partial-heap bound when limit pushdown is sound: a
+    grouped query whose sort columns are all group columns (a group's rank
+    is fixed before the merge) with an actual limit.  Sorting by an
+    aggregate alias — whose value only exists after the full merge — is not
+    pushable and returns None (full-merge-then-sort)."""
+    if (q.limit is None or not q.group_by or not q.sort_by
+            or not set(q.sort_by) <= set(q.group_by)):
+        return None
+    return int(q.limit)
 
 
 def _fold(G: int, idx_a: np.ndarray, src_a: np.ndarray, pres_a: np.ndarray,
@@ -354,7 +441,9 @@ class ShardedScanExecutor:
 
     def __init__(self, n_shards: Optional[int] = None, device: bool = False,
                  engine: Optional[VectorEngine] = None,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 device_route: Optional[str] = None,
+                 limit_pushdown: bool = True):
         # n_shards None == cost-based: the planner picks the fan-out width
         # per query from the estimated surviving-row count (a selective
         # probe stays single-shard, a full scan fans out to the cores).
@@ -363,6 +452,15 @@ class ShardedScanExecutor:
         self.device = device
         self.engine = engine or VectorEngine()
         self.max_workers = max_workers
+        # device_route None == cost-based (cost.choose_device_route);
+        # 'collective' pins the single-launch shard_map route, 'host' the
+        # per-shard launches + host merge (route benchmarks, parity tests).
+        if device_route not in (None, "collective", "host"):
+            raise ValueError(f"unknown device_route {device_route!r}")
+        self.device_route = device_route
+        # limit_pushdown False pins the full-merge-then-sort baseline even
+        # for pushable top-k shapes (benchmarks measure the heap win).
+        self.limit_pushdown = limit_pushdown
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -397,6 +495,7 @@ class ShardedScanExecutor:
         if self.device and not inc_rows and not over.size:
             out = self._try_device(store, q, shards, verdicts, stats, est)
             if out is not None:
+                cost.observe_scan(store, est, stats.actual_rows)
                 return out, stats
 
         str_aggs = any(store.schema.spec(a.column).ctype == ColType.STR
@@ -407,6 +506,7 @@ class ShardedScanExecutor:
         else:
             rows = self._execute_gather(store, q, needed, shards, verdicts,
                                         over, inc_rows, stats, coalesce)
+        cost.observe_scan(store, est, stats.actual_rows)
         return rows, stats
 
     # -------------------------------------------------- shard scheduling
@@ -427,6 +527,13 @@ class ShardedScanExecutor:
                           | {a.column for a in q.aggs if a.column})
         flat = not q.group_by            # group-less: sketches can answer
                                          # clean blocks without decoding
+        k = topk_group_limit(q) if self.limit_pushdown else None
+        stats.topk_pushdown = k is not None
+        # leading-prefix sorts skip straight to a k-group partial inside
+        # the per-shard aggregation (discarded groups never accumulate)
+        prefix_k = (k if k is not None
+                    and q.sort_by == tuple(q.group_by)[: len(q.sort_by)]
+                    else None)
 
         def scan_shard(shard: BlockShard):
             sstats = ScanStats()
@@ -437,11 +544,14 @@ class ShardedScanExecutor:
             cols, masks = _pd.PushdownExecutor._materialize(
                 store, mat_cols, filtered, (), with_nulls=True)
             n = sum(fb.n_selected for fb in filtered)
-            partial = GroupedPartial.from_columns(q, cols, n,
-                                                  masks if flat else None)
+            sstats.actual_rows = n + (sketch.n_rows if sketch else 0)
+            partial = GroupedPartial.from_columns(q, cols, n, masks,
+                                                  topk_prefix=prefix_k)
             if sketch is not None and sketch.n_rows:
                 partial = GroupedPartial.merge(
                     partial, _sketch_to_partial(q, sketch))
+            if k is not None:            # per-shard partial heap
+                partial = partial.topk(q, k)
             return partial, sstats
 
         results = self._map_shards(scan_shard, shards)
@@ -450,17 +560,31 @@ class ShardedScanExecutor:
             stats.absorb(sstats)
         if inc_rows:
             cols, masks = _rows_to_columns(store, mat_cols, inc_rows)
-            partials.append(GroupedPartial.from_columns(
-                q, cols, len(inc_rows), masks if flat else None))
+            inc_part = GroupedPartial.from_columns(q, cols, len(inc_rows),
+                                                   masks,
+                                                   topk_prefix=prefix_k)
+            partials.append(inc_part if k is None else inc_part.topk(q, k))
         if not partials:                 # empty baseline, no increments
             cols, masks = _rows_to_columns(store, mat_cols, [])
             partials = [GroupedPartial.from_columns(q, cols, 0)]
-        merged = tree_reduce(partials, GroupedPartial.merge)
+        combine = (GroupedPartial.merge if k is None else
+                   lambda a, b: GroupedPartial.merge(a, b).topk(q, k))
+        merged = tree_reduce(partials, combine)
         return merged.finalize(q)
 
     # ---------------------------------------------- gather (projection)
     def _execute_gather(self, store, q, needed, shards, verdicts, over,
                         inc_rows, stats, coalesce=1) -> List[Dict[str, Any]]:
+        # Projection top-k pushdown: with sort columns materialized per
+        # shard, each shard keeps only its limit-first rows (stable order
+        # preserved, so cross-shard ties break exactly as the unsharded
+        # stable sort would by original row position).
+        k = (q.limit if q.limit is not None and not q.aggs and q.sort_by
+             and set(q.sort_by) <= set(needed) and self.limit_pushdown
+             else None)
+        if k is not None:
+            stats.topk_pushdown = True
+
         def scan_shard(shard: BlockShard):
             sstats = ScanStats()
             filtered = _pd.filter_blocks(store, q, needed, verdicts, over,
@@ -469,6 +593,9 @@ class ShardedScanExecutor:
             cols, masks = _pd.PushdownExecutor._materialize(
                 store, needed, filtered, (), with_nulls=True)
             n = sum(fb.n_selected for fb in filtered)
+            sstats.actual_rows = n
+            if k is not None and n > k:
+                cols, masks, n = _topk_rows(cols, masks, n, q.sort_by, k)
             return cols, masks, n, sstats
 
         results = self._map_shards(scan_shard, shards)
@@ -488,13 +615,24 @@ class ShardedScanExecutor:
     # ------------------------------------------------------- device path
     def _try_device(self, store, q, shards, verdicts, stats, est=None
                     ) -> Optional[List[Dict[str, Any]]]:
-        """Stage the fused-kernel inputs once, fan the kernel out over the
-        per-shard block slices (one mesh device per shard, round-robin),
-        then tree-merge the device partials: counts/sums add, mins/maxs
-        fold — the same combination rule as ``GroupedPartial.merge``.
-        Each shard's kernel launches with the cost-model tile height
-        (blocks fused per grid step) chosen from the selectivity
-        estimate."""
+        """Stage the fused-kernel inputs once and fan the kernel out over
+        the per-shard block slices, on the route the cost model picks (or
+        ``self.device_route`` pins):
+
+        * **collective** — pad the shard slices to a common tile shape and
+          hand ONE batched ``shard_map`` launch to
+          ``ops.sharded_scan_agg``; each 'scan'-mesh device runs the fused
+          kernel over its shard slice and the per-group partials
+          tree-reduce on device (psum/pmin/pmax), so the host receives one
+          already-merged accumulator — and, for pushable top-k shapes,
+          only its first ``limit`` non-empty groups.
+        * **host** — the legacy per-shard kernel launches (round-robin
+          device placement, async dispatch) with a host-side tree-merge:
+          counts/sums add, mins/maxs fold — the same combination rule as
+          ``GroupedPartial.merge``.
+
+        Either route launches with the cost-model tile height (blocks fused
+        per grid step) chosen from the selectivity estimate."""
         plan = _pd.plan_device(store, q)
         if plan is None:
             return None
@@ -510,35 +648,56 @@ class ShardedScanExecutor:
         tile = (cost.choose_device_tile(est, store.baseline.block_rows)
                 if est is not None else 1)
         stats.device_tile_blocks = tile
-        import jax
         from ..kernels import ops
-        from ..launch.mesh import scan_shard_devices
-        devices = scan_shard_devices(len(shards))
-
-        def launch_shard(shard: BlockShard, dev):
-            sl = slice(shard.lo_block, shard.hi_block)
-            ins = [stage.deltas[sl], stage.bases[sl], stage.counts[sl],
-                   stage.codes[sl], stage.values[sl], block_mask[sl]]
-            if dev is not None:
-                ins = [jax.device_put(x, dev) for x in ins]
-            return ops.fused_scan_agg(ins[0], ins[1], ins[2], plan.lo,
-                                      plan.hi, ins[3], ins[4], ndv=stage.ndv,
-                                      block_mask=ins[5], coalesce=tile)
-
-        # launch every shard's kernel before blocking on any result — jax
-        # dispatch is async, so on a multi-device mesh the shards overlap
-        launched = [launch_shard(s, devices[s.shard_id])
-                    for s in shards if s.n_blocks]
-        partials = [tuple(np.asarray(x) for x in out) for out in launched]
-
-        def combine(a, b):
-            return (a[0] + b[0], a[1] + b[1],
-                    np.minimum(a[2], b[2]), np.maximum(a[3], b[3]))
-
-        g_cnt, g_sums, g_mins, g_maxs = tree_reduce(partials, combine)
-        return _pd.emit_device_groups(q, plan, stage, g_cnt,
+        from ..launch.mesh import make_scan_mesh, scan_shard_devices
+        active = [s for s in shards if s.n_blocks]
+        mesh = make_scan_mesh(len(active))
+        stats.n_devices = int(mesh.devices.size)
+        route = self.device_route or cost.choose_device_route(
+            est, stats.n_devices, len(active))
+        stats.device_route = route
+        if route == "collective":
+            out = self._device_collective(q, plan, stage, active, block_mask,
+                                          mesh, tile, stats, ops)
+        else:
+            devices = scan_shard_devices(len(shards), mesh)
+            launched = launch_shard_kernels(plan, stage, active, block_mask,
+                                            devices, tile)
+            partials = [tuple(np.asarray(x) for x in o) for o in launched]
+            out = tree_reduce(partials, device_partial_combine) + (None,)
+        g_cnt, g_sums, g_mins, g_maxs, g_ids = out
+        if g_ids is None:          # top-k-sliced runs record total already
+            stats.actual_rows = int(np.asarray(g_cnt).sum())
+        return _pd.emit_device_groups(q, plan, stage, np.asarray(g_cnt),
                                       np.asarray(g_sums, np.float64),
-                                      g_mins, g_maxs)
+                                      np.asarray(g_mins),
+                                      np.asarray(g_maxs), group_ids=g_ids)
+
+    def _device_collective(self, q, plan, stage, active, block_mask, mesh,
+                           tile, stats, ops):
+        """Stack the per-shard staged slices into one [S, Nb, ...] launch
+        batch and run the single-launch collective fan-out."""
+        (deltas, bases, counts, codes, values, bmask), tile = \
+            stack_device_stage(stage, active, block_mask, mesh, tile)
+        stats.device_tile_blocks = tile
+        k = topk_group_limit(q) if self.limit_pushdown else None
+        if k is not None and q.sort_by != plan.group_cols[: len(q.sort_by)]:
+            k = None          # packed order is lexicographic over the key
+                              # columns in order: only prefix sorts slice
+        stats.topk_pushdown = k is not None
+        out = ops.sharded_scan_agg(deltas, bases, counts, plan.lo, plan.hi,
+                                   codes, values, ndv=stage.ndv,
+                                   block_mask=bmask, mesh=mesh,
+                                   coalesce=tile, topk=k or 0)
+        if k is not None:
+            g_ids, g_cnt, g_sums, g_mins, g_maxs, total = out
+            stats.actual_rows = int(total)
+            return (np.asarray(g_cnt), np.asarray(g_sums),
+                    np.asarray(g_mins), np.asarray(g_maxs),
+                    np.asarray(g_ids))
+        g_cnt, g_sums, g_mins, g_maxs = out
+        return (np.asarray(g_cnt), np.asarray(g_sums), np.asarray(g_mins),
+                np.asarray(g_maxs), None)
 
 
 def _sketch_to_partial(q: Query, sk: "_pd._SketchAgg") -> GroupedPartial:
@@ -564,6 +723,111 @@ def _sketch_to_partial(q: Query, sk: "_pd._SketchAgg") -> GroupedPartial:
     cnts = {c: np.asarray([sk.cnt.get(c, 0)], np.int64) for c in agg_cols}
     return GroupedPartial((), [()], np.asarray([sk.n_rows], np.int64),
                           sums, mins, maxs, cnts)
+
+
+def stack_device_stage(stage, shards: Sequence[BlockShard],
+                       block_mask: np.ndarray, mesh, tile: int = 1):
+    """Stack per-shard slices of a ``DeviceStage`` into the collective
+    launch batch: [S, Nb, ...] arrays with the shard count padded to a
+    multiple of the mesh size and block counts padded to the widest shard
+    (padding blocks are zero-count and masked off).  Returns
+    ((deltas, bases, counts, codes, values, block_mask), tile) with the
+    tile factor clamped to a divisor of the padded width — tile fusing
+    must never span a shard boundary, or padding blocks in the middle of a
+    tile would break the kernel's valid-rows-prefix invariant.  Shared by
+    ``ShardedScanExecutor._device_collective`` and the route benchmark."""
+    from ..launch.mesh import scan_launch_shape
+    _, S = scan_launch_shape(len(shards), mesh)
+    nbp = max(s.n_blocks for s in shards)
+    bk = stage.deltas.shape[1]
+    K, V = stage.codes.shape[1], stage.values.shape[1]
+    out = (np.zeros((S, nbp, bk), np.int32),
+           np.zeros((S, nbp), np.int32),
+           np.zeros((S, nbp), np.int32),
+           np.zeros((S, nbp, K, bk), np.int32),
+           np.zeros((S, nbp, V, bk), np.float32),
+           np.zeros((S, nbp), bool))
+    srcs = (stage.deltas, stage.bases, stage.counts, stage.codes,
+            stage.values, block_mask)
+    for i, s in enumerate(shards):
+        sl = slice(s.lo_block, s.hi_block)
+        for dst, src in zip(out, srcs):
+            dst[i, : s.n_blocks] = src[sl]
+    tile = max(int(tile), 1)
+    while nbp % tile:
+        tile -= 1
+    return out, tile
+
+
+def launch_shard_kernels(plan, stage, shards: Sequence[BlockShard],
+                         block_mask: np.ndarray, devices, tile: int = 1):
+    """Per-shard-launch device route: dispatch the fused kernel for every
+    shard's block slice (round-robin placement by shard id) and return the
+    raw per-shard outputs.  Every kernel is launched before any result is
+    blocked on — jax dispatch is async, so on a multi-device mesh the
+    shards overlap.  Shared by ``ShardedScanExecutor._try_device`` and the
+    route benchmark, so the bench always measures the loop the engine
+    runs."""
+    import jax
+    from ..kernels import ops
+    outs = []
+    for shard in shards:
+        sl = slice(shard.lo_block, shard.hi_block)
+        dev = devices[shard.shard_id % len(devices)]
+        ins = [stage.deltas[sl], stage.bases[sl], stage.counts[sl],
+               stage.codes[sl], stage.values[sl], block_mask[sl]]
+        if dev is not None:
+            ins = [jax.device_put(x, dev) for x in ins]
+        outs.append(ops.fused_scan_agg(ins[0], ins[1], ins[2], plan.lo,
+                                       plan.hi, ins[3], ins[4],
+                                       ndv=stage.ndv, block_mask=ins[5],
+                                       coalesce=tile))
+    return outs
+
+
+def device_partial_combine(a, b):
+    """Host-merge rule for per-shard device partials — the same
+    combination ``GroupedPartial.merge`` applies: counts/sums add,
+    mins/maxs fold."""
+    return (a[0] + b[0], a[1] + b[1],
+            np.minimum(a[2], b[2]), np.maximum(a[3], b[3]))
+
+
+def _topk_rows(cols: Dict[str, np.ndarray],
+               masks: Dict[str, Optional[np.ndarray]], n: int,
+               sort_by: Tuple[str, ...], k: int
+               ) -> Tuple[Dict[str, np.ndarray],
+                          Dict[str, Optional[np.ndarray]], int]:
+    """Keep one shard's ``k`` sort-first rows, in original row order (the
+    final stable sort then breaks cross-shard ties by position exactly as
+    it would have over the untruncated concatenation).  Rows with NULL sort
+    keys have no defined rank — such shards stay untruncated.
+
+    Packable int keys take an O(n) ``argpartition`` pre-select instead of
+    a full O(n log n) sort: every row whose key <= the k-th partitioned
+    key is a candidate (ties included, so the position-stable tie-break is
+    exact), and only the candidates are stably sorted."""
+    if any(masks.get(c) is not None for c in sort_by):
+        return cols, masks, n
+    keys = [np.asarray(cols[c]) for c in sort_by]
+    keep = None
+    try:
+        if all(np.issubdtype(c.dtype, np.integer) for c in keys):
+            packed = pack_sort_keys(keys)
+            if n > 4 * k:
+                thresh = packed[np.argpartition(packed, k - 1)[:k]].max()
+                cand = np.nonzero(packed <= thresh)[0]   # position order
+                order = np.argsort(packed[cand], kind="stable")
+                keep = np.sort(cand[order[:k]])
+            else:
+                keep = np.sort(np.argsort(packed, kind="stable")[:k])
+    except ValueError:
+        pass
+    if keep is None:
+        keep = np.sort(np.lexsort(list(reversed(keys)))[:k])
+    return ({c: v[keep] for c, v in cols.items()},
+            {c: (None if m is None else m[keep])
+             for c, m in masks.items()}, int(keep.shape[0]))
 
 
 def _rows_to_columns(store: LSMStore, names: Sequence[str],

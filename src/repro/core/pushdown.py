@@ -359,6 +359,7 @@ class PushdownExecutor:
         if self.device and not inc_rows and not over.size:
             out = self._try_device(store, q, verdicts, stats, est)
             if out is not None:
+                cost.observe_scan(store, est, stats.actual_rows)
                 return out, stats
 
         # flat group-less aggregates can swallow clean blocks from sketches
@@ -368,6 +369,9 @@ class PushdownExecutor:
         filtered = filter_blocks(store, q, needed, verdicts, over,
                                  range(nb), stats, sketch, coalesce,
                                  sub_block=adaptive)
+        stats.actual_rows = (sum(fb.n_selected for fb in filtered)
+                             + (sketch.n_rows if sketch is not None else 0))
+        cost.observe_scan(store, est, stats.actual_rows)
 
         # -- stage 3+4: late materialization + terminal operators --------
         if sketch is not None:
@@ -527,8 +531,10 @@ class PushdownExecutor:
             stage.deltas, stage.bases, stage.counts, plan.lo, plan.hi,
             stage.codes, stage.values, ndv=stage.ndv, block_mask=block_mask,
             coalesce=tile)
+        g_cnt = np.asarray(g_cnt)
+        stats.actual_rows = int(g_cnt.sum())
         return emit_device_groups(
-            q, plan, stage, np.asarray(g_cnt),
+            q, plan, stage, g_cnt,
             np.asarray(g_sums, np.float64), np.asarray(g_mins),
             np.asarray(g_maxs))
 
@@ -694,11 +700,15 @@ def stage_device(store: LSMStore, plan: DevicePlan) -> Optional[DeviceStage]:
 
 def emit_device_groups(q: Query, plan: DevicePlan, stage: DeviceStage,
                        g_cnt: np.ndarray, g_sums: np.ndarray,
-                       g_mins: np.ndarray, g_maxs: np.ndarray
+                       g_mins: np.ndarray, g_maxs: np.ndarray,
+                       group_ids: Optional[np.ndarray] = None
                        ) -> List[Dict[str, Any]]:
     """Unpack per-packed-group kernel partials into result rows (group order
     = lexicographic over the sorted dictionaries, matching VectorEngine's
-    unique-key order), then the shared sort/limit tail."""
+    unique-key order), then the shared sort/limit tail.  With ``group_ids``
+    the accumulators are already top-k-sliced on device: position ``j``
+    holds packed group ``group_ids[j]`` (zero-count slots are padding from
+    a result smaller than k)."""
     strides = []
     acc = 1
     for d in reversed(stage.ndv):
@@ -707,24 +717,26 @@ def emit_device_groups(q: Query, plan: DevicePlan, stage: DeviceStage,
     strides = list(reversed(strides))
     vidx = {c: v for v, c in enumerate(plan.value_cols)}
     out: List[Dict[str, Any]] = []
-    for g in np.nonzero(g_cnt)[0]:
+    cols_live = np.nonzero(g_cnt)[0]
+    packed = cols_live if group_ids is None else group_ids[cols_live]
+    for j, g in zip(cols_live, packed):
         r: Dict[str, Any] = {}
         for k, col in enumerate(plan.group_cols):
             r[col] = _item(stage.gdicts[k][(g // strides[k]) % stage.ndv[k]])
-        n = int(g_cnt[g])
+        n = int(g_cnt[j])
         for a in q.aggs:
             if a.op == "count":
                 r[a.alias] = n
                 continue
             v = vidx[a.column]
             if a.op == "sum":
-                r[a.alias] = float(g_sums[v, g])
+                r[a.alias] = float(g_sums[v, j])
             elif a.op == "avg":
-                r[a.alias] = float(g_sums[v, g]) / n
+                r[a.alias] = float(g_sums[v, j]) / n
             elif a.op == "min":
-                r[a.alias] = float(g_mins[v, g])
+                r[a.alias] = float(g_mins[v, j])
             elif a.op == "max":
-                r[a.alias] = float(g_maxs[v, g])
+                r[a.alias] = float(g_maxs[v, j])
         out.append(r)
     if q.sort_by:
         out = VectorEngine._sort(out, q.sort_by)

@@ -223,3 +223,68 @@ def fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
     if legacy:
         return g_cnt, sums[0], mins[0], maxs[0]
     return g_cnt, sums, mins, maxs
+
+
+def sharded_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
+                     lo, hi, codes: jax.Array, values: jax.Array,
+                     ndv: Sequence[int], block_mask: jax.Array, mesh,
+                     *, coalesce: int = 1, topk: int = 0,
+                     interpret: bool = False):
+    """Single-launch sharded fused scan-agg with an on-device collective
+    tree-reduce (the distributed read path of the paper's §V engine: the
+    scan *and* the partial-aggregate merge stay on the compute substrate —
+    the host never combines partials).
+
+    Every input carries a leading shard axis: deltas [S, Nb, Bk], bases /
+    counts / block_mask [S, Nb], codes [S, Nb, K, Bk], values
+    [S, Nb, V, Bk], with S a multiple of the 1-D ``'scan'`` mesh's size.
+    One ``shard_map`` launch places S/msize shard slices on each device;
+    a device folds its slices into the block grid of ONE fused-kernel
+    launch (zero-count padding blocks are masked off by the visit list),
+    and the [1+3V, G] accumulators tree-reduce across the mesh via
+    psum (count, sums) / pmin / pmax — log-depth on a real torus.
+
+    With ``topk = k > 0`` the reduced accumulator is additionally sliced on
+    device to its first k non-empty packed groups (packed order ==
+    lexicographic key order, so this is a sorted top-k when the query sorts
+    by a key-column prefix): returns (ids [k], count [k], sums [V, k],
+    mins, maxs, total_rows) and only O(k) lanes cross back to the host.
+    Otherwise returns (count [P], sums [V, P], mins, maxs) replicated."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P_
+
+    S, Nb, Bk = deltas.shape
+    K, V = codes.shape[2], values.shape[2]
+    ndv_t = tuple(int(x) for x in ndv)
+    msize = int(mesh.devices.size)
+    if S % msize:
+        raise ValueError(f"shard count {S} not a multiple of mesh {msize}")
+
+    def body(d, b, c, k, v, m):
+        s_loc = d.shape[0]                       # shards on this device
+        d2, b2 = d.reshape(s_loc * Nb, Bk), b.reshape(-1)
+        c2, m2 = c.reshape(-1), m.reshape(-1)
+        k2 = k.reshape(s_loc * Nb, K, Bk)
+        v2 = v.reshape(s_loc * Nb, V, Bk)
+        if coalesce > 1:                         # caller guarantees tiles
+            d2, b2, c2, k2, v2, m2 = coalesce_blocks(  # never span shards
+                d2, b2, c2, k2, v2, m2, coalesce)
+        cnt, sums, mins, maxs = fused_scan_agg(
+            d2, b2, c2, lo, hi, k2, v2, ndv_t, m2, interpret=interpret)
+        cnt = jax.lax.psum(cnt, "scan")
+        sums = jax.lax.psum(sums, "scan")
+        mins = jax.lax.pmin(mins, "scan")
+        maxs = jax.lax.pmax(maxs, "scan")
+        if not topk:
+            return cnt, sums, mins, maxs
+        P = cnt.shape[0]
+        total = cnt.sum()
+        # sorted slice of the accumulator: positions of the first k live
+        # groups in packed (== lexicographic key) order
+        ids = jnp.argsort(jnp.where(cnt > 0, jnp.arange(P), P))[:topk]
+        return (ids.astype(jnp.int32), cnt[ids], sums[:, ids], mins[:, ids],
+                maxs[:, ids], total)
+
+    f = shard_map(body, mesh=mesh, in_specs=(P_("scan"),) * 6,
+                  out_specs=P_(), check_rep=False)
+    return f(deltas, bases, counts, codes, values, block_mask)

@@ -25,6 +25,7 @@ from .columnar_scan import columnar_scan as _columnar_scan
 from .dict_groupby import dict_groupby as _dict_groupby
 from .fused_scan_agg import coalesce_blocks as _coalesce_blocks
 from .fused_scan_agg import fused_scan_agg as _fused_scan_agg
+from .fused_scan_agg import sharded_scan_agg as _sharded_scan_agg
 
 
 def _on_tpu() -> bool:
@@ -111,6 +112,28 @@ def fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, *, ndv,
         return out
     return _fused_scan_agg(deltas, bases, counts, lo, hi, codes, values, ndv,
                            block_mask, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("ndv", "mesh", "coalesce",
+                                             "topk"))
+def sharded_scan_agg(deltas, bases, counts, lo, hi, codes, values, *, ndv,
+                     mesh, block_mask=None, coalesce=1, topk=0):
+    """Single-launch sharded device fan-out: inputs carry a leading shard
+    axis [S, ...] split over ``mesh``'s 'scan' axis by one ``shard_map``
+    launch; each device runs the fused scan-agg kernel over its shard
+    slices and the per-group partials tree-reduce ON DEVICE via
+    psum/pmin/pmax — no host-side partial merge.  ``topk=k`` additionally
+    slices the reduced accumulator to its first k non-empty packed groups
+    on device (returns (ids, count, sums, mins, maxs, total_rows))."""
+    if block_mask is None:
+        block_mask = jnp.ones(deltas.shape[:2], bool)
+    if _force_ref():
+        return ref.ref_sharded_scan_agg(deltas, bases, counts, lo, hi,
+                                        codes, values, ndv, block_mask,
+                                        topk=topk)
+    return _sharded_scan_agg(deltas, bases, counts, lo, hi, codes, values,
+                             ndv, block_mask, mesh, coalesce=int(coalesce),
+                             topk=int(topk), interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("ndv", "block_n"))

@@ -408,3 +408,29 @@ def ref_fused_scan_agg(deltas: jax.Array, bases: jax.Array, counts: jax.Array,
     if legacy:
         return cnts.astype(jnp.int32), sums[0], mins[0], maxs[0]
     return cnts.astype(jnp.int32), sums, mins, maxs
+
+
+def ref_sharded_scan_agg(deltas: jax.Array, bases: jax.Array,
+                         counts: jax.Array, lo, hi, codes: jax.Array,
+                         values: jax.Array, ndv,
+                         block_mask: Optional[jax.Array] = None,
+                         topk: int = 0):
+    """Oracle for the single-launch sharded fused scan-agg: shard-merged
+    grouped aggregation is associative/commutative, so the collective
+    tree-reduce over [S, ...] shard slices equals one flat aggregation over
+    the concatenated blocks.  Matches ``fused_scan_agg.sharded_scan_agg``'s
+    outputs, including the on-device top-k accumulator slice."""
+    S, Nb, Bk = deltas.shape
+    K, V = codes.shape[2], values.shape[2]
+    if block_mask is None:
+        block_mask = jnp.ones((S, Nb), bool)
+    cnt, sums, mins, maxs = ref_fused_scan_agg(
+        deltas.reshape(S * Nb, Bk), bases.reshape(-1), counts.reshape(-1),
+        lo, hi, codes.reshape(S * Nb, K, Bk), values.reshape(S * Nb, V, Bk),
+        tuple(int(x) for x in ndv), block_mask.reshape(-1))
+    if not topk:
+        return cnt, sums, mins, maxs
+    P = cnt.shape[0]
+    ids = jnp.argsort(jnp.where(cnt > 0, jnp.arange(P), P))[:topk]
+    return (ids.astype(jnp.int32), cnt[ids], sums[:, ids], mins[:, ids],
+            maxs[:, ids], cnt.sum())
