@@ -14,8 +14,8 @@ from benchmarks.common import Report, timeit
 from repro.core.engine import (QAgg, Query, ScalarEngine, VectorEngine,
                                hash_join)
 from repro.core.lsm import LSMStore
-from repro.core.pushdown import PushdownExecutor
 from repro.core.relation import ColType, Predicate, PredOp, Table, schema
+from repro.core.session import Database
 
 N = 120_000
 
@@ -69,29 +69,29 @@ def pushdown_comparison(n: int, block_rows: int = 1024,
                         repeat: int = 3) -> dict:
     """§III-G pushdown vs full decode on a ≤1%-selectivity BETWEEN over the
     FOR/delta-encoded sorted pk: full decode materializes 100% of rows to
-    keep <1%; the pushdown executor zone-map-prunes all but ~2 blocks."""
+    keep <1%; the session's auto-router must send the probe to the
+    pushdown executor, which zone-map-prunes all but ~2 blocks.  Both
+    sides go through the unified ``Database`` API — the baseline pins
+    ``engine='vectorized'`` (full decode), the probe is unhinted."""
     rng = np.random.default_rng(7)
     store = make_store(rng, n, block_rows)
+    db = Database(store)
     lo = n // 2
     hi = lo + max(n // 100 - 1, 0)        # ~1% of rows
     q = Query(preds=(Predicate("o_id", PredOp.BETWEEN, lo, hi),),
               aggs=(QAgg("count", None, "n"), QAgg("sum", "total", "rev"),
                     QAgg("avg", "total", "avg_rev")))
-    needed = sorted(VectorEngine.columns_needed(q, store.schema.names))
-
-    def full_decode():
-        table, _ = store.scan(columns=needed)    # decode every block
-        return VectorEngine().execute(table, q)
-
-    push = PushdownExecutor()
-    t_full = timeit(full_decode, repeat=repeat)
-    t_push = timeit(lambda: push.execute(store, q), repeat=repeat)
+    auto = db.query(q)
+    assert auto.plan.route == "pushdown", auto.plan.describe()
+    t_full = timeit(lambda: db.query(q, engine="vectorized"), repeat=repeat)
+    t_push = timeit(lambda: db.query(q), repeat=repeat)
     # sanity: identical answers
-    a, b = full_decode(), push.execute(store, q)
+    a, b = db.query(q, engine="vectorized").rows, auto.rows
     assert a[0]["n"] == b[0]["n"] and abs(a[0]["rev"] - b[0]["rev"]) < 1e-6
-    _, stats = push.execute_stats(store, q)
+    stats = auto.stats
     return {"n_rows": n, "block_rows": block_rows,
             "selectivity": (hi - lo + 1) / n,
+            "router_route": auto.plan.route,
             "full_decode_ms": t_full * 1e3, "pushdown_ms": t_push * 1e3,
             "pushdown_speedup": t_full / t_push,
             "blocks_total": stats.blocks_total,
@@ -172,16 +172,11 @@ def run() -> str:
     # pushdown_comparison — a decoded table is never free over an LSM store)
     store = LSMStore(orders.schema, block_rows=1024)
     store.bulk_insert({c: orders.col(c).values for c in orders.schema.names})
-    push = PushdownExecutor()
+    db = Database(store)
 
-    def full_decode_q(q):
-        needed = sorted(VectorEngine.columns_needed(q, store.schema.names))
-        table, _ = store.scan(columns=needed)
-        return VectorEngine().execute(table, q)
-
-    t_pq = sum(timeit(lambda q=q: push.execute(store, q), repeat=2)
+    t_pq = sum(timeit(lambda q=q: db.query(q, engine="pushdown"), repeat=2)
                for q in QUERIES.values())
-    t_vq = sum(timeit(lambda q=q: full_decode_q(q), repeat=2)
+    t_vq = sum(timeit(lambda q=q: db.query(q, engine="vectorized"), repeat=2)
                for q in QUERIES.values())
     rep.add(query="queries_via_pushdown_store",
             scalar_ms=f"full_decode={t_vq*1e3:.1f}",

@@ -1,9 +1,11 @@
 """Nearly-real-time analytics demo: concurrent writes + MV dashboard.
 
 Simulates the paper's core serving scenario — a stream of transactional
-writes against a table while an analyst dashboard reads fresh aggregates
-from incrementally-refreshed materialized views, with compactions keeping
-scan latency bounded.
+writes against a table while an analyst dashboard reads fresh aggregates,
+with compactions keeping scan latency bounded.  Everything goes through
+the unified ``Database`` session: the dashboard aggregate is transparently
+rewritten onto the registered MAV (container ⊕ pending-mlog merge), and the
+ad-hoc filtered scan is cost-routed with plan/stats provenance.
 
   PYTHONPATH=src python examples/olap_dashboard.py
 """
@@ -11,55 +13,66 @@ import time
 
 import numpy as np
 
-from repro.core.lsm import LSMStore
-from repro.core.mview import AggSpec, MAVDefinition, MaterializedAggView, MLog
+from repro.core.engine import QAgg, Query
+from repro.core.mview import AggSpec, MAVDefinition
 from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.session import Database
 
 
 def main():
-    st = LSMStore(schema(("order_id", ColType.INT), ("shop", ColType.INT),
+    db = Database()
+    orders = db.create_table(
+        "orders", schema(("order_id", ColType.INT), ("shop", ColType.INT),
                          ("amount", ColType.FLOAT), ("status", ColType.INT)))
-    mlog = MLog(st)
-    dash = MaterializedAggView(
-        "shop_dashboard", st, mlog,
+    db.create_mav(
+        "shop_dashboard",
         MAVDefinition(group_by=("shop",),
                       aggs=(AggSpec("count_star", None, "orders"),
                             AggSpec("sum", "amount", "gmv"),
                             AggSpec("max", "amount", "biggest"))),
-        container_mode="column", refresh_mode="incremental")
+        table="orders", container_mode="column")
+    dash_q = Query(group_by=("shop",),
+                   aggs=(QAgg("count", None, "orders"),
+                         QAgg("sum", "amount", "gmv"),
+                         QAgg("max", "amount", "biggest")))
 
     rng = np.random.default_rng(1)
     next_id = 0
     for epoch in range(5):
         # -- OLTP: a burst of inserts/updates ------------------------------
         for _ in range(2000):
-            st.insert({"order_id": next_id, "shop": int(rng.integers(0, 5)),
-                       "amount": float(rng.gamma(2.0, 30.0)),
-                       "status": 0})
+            orders.insert({"order_id": next_id,
+                           "shop": int(rng.integers(0, 5)),
+                           "amount": float(rng.gamma(2.0, 30.0)),
+                           "status": 0})
             next_id += 1
         for _ in range(200):
-            st.update(int(rng.integers(0, next_id)), {"status": 1})
+            orders.update(int(rng.integers(0, next_id)), {"status": 1})
 
         # -- AP: fresh reads without waiting for any refresh ----------------
         t0 = time.perf_counter()
-        fresh = dash.query(realtime=True)        # MV ⊕ mlog merge
+        fresh = db.query(dash_q)                 # → transparent MV rewrite
         t_q = (time.perf_counter() - t0) * 1e3
-        total_gmv = sum(r["gmv"] for r in fresh.rows())
+        assert fresh.plan.route == "mav", fresh.plan.describe()
+        total_gmv = sum(r["gmv"] for r in fresh)
         t0 = time.perf_counter()
-        scan, stats = st.scan((Predicate("amount", PredOp.GT, 100.0),))
+        scan = db.query(Query(preds=(Predicate("amount", PredOp.GT, 100.0),),
+                              project=("order_id", "amount")))
         t_s = (time.perf_counter() - t0) * 1e3
+        stats = scan.stats
         print(f"epoch {epoch}: rows={next_id:6d} "
-              f"dashboard(realtime)={t_q:6.2f} ms gmv={total_gmv:10.0f} | "
-              f"filtered scan={t_s:6.1f} ms "
+              f"dashboard({fresh.plan.route},+{fresh.plan.mv_pending} "
+              f"pending)={t_q:6.2f} ms gmv={total_gmv:10.0f} | "
+              f"scan({scan.plan.route})={t_s:6.1f} ms "
               f"(blocks skipped {stats.blocks_skipped}/{stats.blocks_total}, "
               f"incr merged {stats.rows_merged_incremental})")
 
         # -- background maintenance ----------------------------------------
-        dash.refresh()                           # incremental (mlog delta)
+        db.table("orders").mavs["shop_dashboard"].refresh()
         if epoch % 2 == 1:
-            st.major_compact()                   # daily compaction analogue
+            orders.major_compact()               # daily compaction analogue
             print(f"   compacted → incremental fraction "
-                  f"{st.incremental_fraction():.3f}")
+                  f"{orders.incremental_fraction():.3f}")
 
 
 if __name__ == "__main__":

@@ -1,57 +1,95 @@
 """Quickstart: the paper's OLAP core in five minutes (pure CPU).
 
-Creates a Mercury-style table (LSM hybrid store), runs DML, compacts,
-queries with pushdown, and maintains a materialized view incrementally —
-the C1/C2/S1/S2 mechanics of the paper end to end.
+Creates a Mercury-style table behind the unified ``Database`` session API,
+runs DML, compacts, queries through the cost-routed planner (with
+``explain`` provenance), and maintains a materialized view that matching
+aggregate queries are *transparently rewritten onto* — the C1/C2/S1/S2/S4
+mechanics of the paper end to end.
 
   PYTHONPATH=src python examples/quickstart.py
+
+API migration note
+------------------
+Before the session API, callers hand-picked an engine and queried MAVs
+through a separate interface::
+
+    # OLD: hand-picked engine + disjoint MV read path
+    from repro.core.engine import make_engine
+    push = make_engine("pushdown")              # caller guesses the engine
+    rows = push.execute(store, q)               # List[Dict], no provenance
+    mv_rows = mav.query(realtime=True).rows()   # separate MV API
+
+``make_engine`` still works (it now emits a one-time DeprecationWarning);
+the unified surface is::
+
+    # NEW: one entry point, cost-routed, MV rewrite is transparent
+    from repro.core.session import Database
+    db = Database(store)
+    res = db.query(q)             # ResultSet: columns + rows + plan + stats
+    res.plan.route                # 'pushdown' | 'sharded' | 'mav' | ...
+    db.query(q, engine="scalar")  # explicit pin when you *want* a baseline
 """
 import numpy as np
 
-from repro.core.lsm import LSMStore
-from repro.core.mview import AggSpec, MAVDefinition, MaterializedAggView, MLog
+from repro.core.mview import AggSpec, MAVDefinition
+from repro.core.engine import QAgg, Query
 from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.session import Database
 
 
 def main():
     # -- a table: orders(k, region, amount) --------------------------------
-    st = LSMStore(schema(("k", ColType.INT), ("region", ColType.INT),
-                         ("amount", ColType.FLOAT)))
-    mlog = MLog(st)
-    mv = MaterializedAggView(
-        "rev_by_region", st, mlog,
+    db = Database()
+    orders = db.create_table("orders", schema(("k", ColType.INT),
+                                              ("region", ColType.INT),
+                                              ("amount", ColType.FLOAT)))
+    mv = db.create_mav(
+        "rev_by_region",
         MAVDefinition(group_by=("region",),
                       aggs=(AggSpec("count_star", None, "orders"),
                             AggSpec("sum", "amount", "revenue"))),
-        refresh_mode="incremental")
+        table="orders")
 
     rng = np.random.default_rng(0)
     print("== ingest 5000 rows (row-format MemTable / minor SSTables)")
     for i in range(5000):
-        st.insert({"k": i, "region": int(rng.integers(0, 4)),
-                   "amount": float(rng.gamma(2.0, 50.0))})
-    print(f"   incremental fraction: {st.incremental_fraction():.2f}")
+        orders.insert({"k": i, "region": int(rng.integers(0, 4)),
+                       "amount": float(rng.gamma(2.0, 50.0))})
+    print(f"   incremental fraction: {orders.incremental_fraction():.2f}")
 
     print("== major compaction (daily compaction → columnar baseline)")
-    st.major_compact()
-    print(f"   incremental fraction: {st.incremental_fraction():.2f}")
+    orders.major_compact()
+    print(f"   incremental fraction: {orders.incremental_fraction():.2f}")
 
-    print("== predicate pushdown with the data-skipping index")
-    tbl, stats = st.scan((Predicate("amount", PredOp.GT, 400.0),))
-    print(f"   rows={tbl.nrows}  blocks: total={stats.blocks_total} "
-          f"skipped={stats.blocks_skipped} scanned={stats.blocks_scanned}")
+    print("== cost-routed query (zone-map pushdown, explain provenance)")
+    q = Query(preds=(Predicate("amount", PredOp.GT, 400.0),),
+              project=("k", "amount"))
+    print(f"   explain: {db.explain(q).describe()}")
+    res = db.query(q)
+    st = res.stats
+    print(f"   rows={len(res)}  blocks: total={st.blocks_total} "
+          f"skipped={st.blocks_skipped} scanned={st.blocks_scanned}")
 
     print("== aggregate pushdown (answered from sketches)")
-    total, stats = st.aggregate("sum", "amount")
-    print(f"   sum(amount)={total:.1f}  sketch-only blocks: "
-          f"{stats.blocks_sketch_only}/{stats.blocks_total}")
+    agg = db.query(Query(aggs=(QAgg("sum", "amount", "total"),)))
+    print(f"   sum(amount)={agg.rows[0]['total']:.1f}  sketch-only blocks: "
+          f"{agg.stats.blocks_sketch_only}/{agg.stats.blocks_total}")
 
-    print("== incremental MV refresh after new writes (freshness ≈ 0)")
+    print("== transparent MV rewrite (freshness ≈ 0 through the mlog)")
     mv.refresh()
-    st.insert({"k": 10_000, "region": 0, "amount": 1e6})   # not refreshed
-    row0 = [r for r in mv.query(realtime=True).rows() if r["region"] == 0][0]
+    orders.insert({"k": 10_000, "region": 0, "amount": 1e6})  # not refreshed
+    qmv = Query(group_by=("region",),
+                aggs=(QAgg("count", None, "orders"),
+                      QAgg("sum", "amount", "revenue")))
+    res = db.query(qmv)
+    assert res.plan.route == "mav", res.plan.describe()
+    row0 = [r for r in res if r["region"] == 0][0]
+    print(f"   {res.plan.describe()}")
     print(f"   realtime revenue(region 0) includes the new row: "
           f"{row0['revenue']:.1f}")
+    base = db.query(qmv, use_mv=False)      # same answer from the base scan
+    assert {r["region"]: round(r["revenue"], 6) for r in res} == \
+        {r["region"]: round(r["revenue"], 6) for r in base}
     mv.refresh()
     print(f"   refresh stats: {mv.stats}")
 

@@ -1,0 +1,86 @@
+"""Bench-smoke regression guard: compare a freshly recorded BENCH_*.json
+against the committed baseline and fail when a recorded performance ratio
+drops below 0.9x its committed value.
+
+  python scripts/bench_guard.py BASELINE.json FRESH.json
+
+Guarded metrics are numeric leaves whose key names a *ratio the code is
+responsible for* — keys matching ``speedup``, ``_vs_``, or ``_vs`` suffixes
+(e.g. ``pushdown_speedup``, ``collective_vs_host_2x``, ``route_vs_best``,
+``adaptive_vs_worst_fixed_selective``) — and only when the committed value
+is >= MIN_GUARDED: ratios parked near 1.0 are parity checks whose exact
+value is wall-clock noise on a shared host, not recorded wins, and a hard
+0.9x floor on them would be pure flake.  Host-property diagnostics
+(``parallel_headroom``, ``machinery_ratio``) never match the pattern and
+are never guarded.  Keys present on only one side are skipped (new metrics
+appear, old ones retire, across PRs).
+
+Exit status: 0 when every guarded ratio holds, 1 with a per-key report
+otherwise (also 1 on unreadable input).
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from typing import Dict, Iterator, Tuple
+
+THRESHOLD = 0.9          # fresh must be >= THRESHOLD * committed
+MIN_GUARDED = 1.2        # committed ratios below this are parity noise
+PATTERN = re.compile(r"(speedup|_vs_|_vs$)")
+
+
+def ratio_leaves(node, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    """Yield (dotted-path, value) for every guarded numeric leaf."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}.{k}" if prefix else k
+            if isinstance(v, dict):
+                yield from ratio_leaves(v, path)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and PATTERN.search(k):
+                yield path, float(v)
+
+
+def check(baseline: Dict, fresh: Dict) -> list:
+    """Return a list of failure strings (empty == green)."""
+    fresh_map = dict(ratio_leaves(fresh))
+    failures = []
+    for path, committed in ratio_leaves(baseline):
+        if committed < MIN_GUARDED:
+            continue                       # parity-range ratio: not a win
+        now = fresh_map.get(path)
+        if now is None:
+            continue                       # metric retired/renamed
+        if now < THRESHOLD * committed:
+            failures.append(
+                f"  {path}: {now:.3f} < {THRESHOLD} * committed "
+                f"{committed:.3f} (= {THRESHOLD * committed:.3f})")
+    return failures
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 1
+    try:
+        with open(argv[1]) as f:
+            baseline = json.load(f)
+        with open(argv[2]) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_guard: cannot read inputs: {e}")
+        return 1
+    failures = check(baseline, fresh)
+    if failures:
+        print(f"bench_guard: {argv[2]} regressed below {THRESHOLD}x the "
+              f"committed {argv[1]}:")
+        print("\n".join(failures))
+        return 1
+    n = sum(1 for p, v in ratio_leaves(baseline) if v >= MIN_GUARDED)
+    print(f"bench_guard: {argv[2]} ok ({n} guarded ratios hold)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

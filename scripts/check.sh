@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # One-command pre-merge check: the documented fast test lane plus the two
-# benchmark smoke suites (see pytest.ini "Lanes" and benchmarks/README.md).
+# benchmark smoke suites (see pytest.ini "Lanes" and benchmarks/README.md),
+# plus the bench-smoke regression guard — the fresh BENCH_*.json ratios
+# must not drop below 0.9x their committed values (scripts/bench_guard.py).
 #
-#   scripts/check.sh           # fast lane + bench smoke (~2 min)
+#   scripts/check.sh           # fast lane + bench smoke + guard (~2 min)
 #   scripts/check.sh --full    # full tier-1 gate instead of the fast lane
 #
 # The smoke suites self-check their perf guards and rewrite BENCH_*.json in
@@ -17,7 +19,25 @@ else
     python -m pytest -q -m "not device and not slow"
 fi
 
+# snapshot the committed bench records before the smokes rewrite them —
+# from git HEAD, so a previously failed run's regressed on-disk file can't
+# ratchet the baseline down (working-tree copy only as a git-less fallback)
+BASELINES="$(mktemp -d)"
+trap 'rm -rf "$BASELINES"' EXIT
+for f in BENCH_distributed.json BENCH_vectorized.json; do
+    if git cat-file -e "HEAD:$f" 2>/dev/null; then
+        git show "HEAD:$f" > "$BASELINES/$f"
+    elif [[ -f "$f" ]]; then
+        cp "$f" "$BASELINES/$f"
+    fi
+done
+
 python -m benchmarks.run --suite distributed --json BENCH_distributed.json
 python -m benchmarks.run --suite vectorized  --json BENCH_vectorized.json
+
+# regression guard: recorded ratios must hold >= 0.9x the committed values
+for f in BENCH_distributed.json BENCH_vectorized.json; do
+    [[ -f "$BASELINES/$f" ]] && python scripts/bench_guard.py "$BASELINES/$f" "$f"
+done
 
 echo "check.sh: all green"

@@ -6,6 +6,13 @@ C3: vectorized engine        -> vec.py / engine.py
 S1: column encodings         -> encoding.py
 S2: data-skipping index      -> skipping.py
 S3: granularity cost model   -> cost.py      (selectivity-adaptive plans)
+S4: unified session API      -> session.py   (Database: logical plan ->
+                                cost-routed physical plan + MV rewrite)
+
+The query entry point is ``session.Database``: ``db = Database(store);
+db.query(q)`` routes each query through the cost model (pushdown vs
+sharded fan-out vs registered materialized views); ``engine.make_engine``
+remains as a deprecated shim for hand-picking one executor.
 """
 from .relation import (And, Column, ColumnSpec, ColType, PredOp, Predicate,
                        Schema, Table, schema)
@@ -18,12 +25,15 @@ from .skipping import Sketch, SkippingIndex, Verdict
 from .cost import (ScanEstimate, choose_batch_rows, choose_coalesce,
                    choose_device_tile, choose_shards, estimate_scan)
 from .lsm import DmlType, LSMStore, MemTable, MinorSSTable, ScanStats, VirtualSSTable
-from .mview import (AggSpec, MAVDefinition, MJVDefinition, MLog,
+from .mview import (AggSpec, MAVDefinition, MJVDefinition, MLog, MLogPurged,
                     MaterializedAggView, MaterializedJoinView)
 from .vec import (BatchAttrs, FixedBatch, VarContinuousBatch, VarDiscreteBatch,
                   continuous_to_discrete, continuous_to_fixed,
                   discrete_to_continuous, discrete_to_fixed,
                   fixed_to_continuous, pack_rows)
-from .engine import QAgg, Query, ScalarEngine, VectorEngine, hash_join, pack_sort_keys
+from .engine import (QAgg, Query, ScalarEngine, VectorEngine, hash_join,
+                     make_engine, pack_sort_keys)
 from .partition import (BlockShard, GroupedPartial, ShardedScanExecutor,
                         range_partition, tree_reduce)
+from .session import (Database, LogicalPlan, Plan, ResultSet, TableHandle,
+                      mav_rewrite, plan_logical, plan_physical)

@@ -51,6 +51,19 @@ from .skipping import Verdict
 TARGET_BATCH_ROWS = 1 << 15    # coalesce candidate blocks up to ~32K-row batches
 MIN_ADAPTIVE_ROWS = 1 << 12    # below this, batching cannot amortize anything
 ROWS_PER_SHARD = 1 << 17       # ~128K surviving rows per fan-out shard
+MIN_FANOUT_ROWS = 4 * ROWS_PER_SHARD   # fan-out amortization floor: below
+                               # ~512K surviving rows the thread dispatch +
+                               # per-shard partial build + merge overhead
+                               # eats the parallel win (measured: a ~330K-row
+                               # grouped scan is faster single-shard on the
+                               # bench hosts), so stay single-shard
+MAX_FANOUT = 8                 # shards are queue granularity, not threads
+                               # (the pool stays core-sized): past the floor,
+                               # shards sized toward ROWS_PER_SHARD beat
+                               # core-count-sized shards even *sequentially*
+                               # — smaller decode/materialize working sets —
+                               # so the width cap is 2x the worker slots,
+                               # bounded by this
 DEVICE_TILE_ROWS = 1 << 14     # target fused-kernel tile height (rows)
 MAX_COALESCE = 64
 CAL_ALPHA = 0.4                # EWMA weight of the newest actual/est ratio
@@ -168,6 +181,36 @@ class ScanEstimate:
         return min(self.est_rows / cand_rows, 1.0)
 
 
+def _pred_cache_key(preds: Sequence[Predicate]) -> Tuple:
+    return tuple((p.column, p.op, repr(p.value), repr(p.value2))
+                 for p in preds)
+
+
+def prune_verdicts(store, preds: Sequence[Predicate]) -> np.ndarray:
+    """Per-block conjunction verdicts (min over each predicate's zone-map
+    prune), cached on the store per (baseline, predicate set) so the
+    session planner and the executors' scan preambles share one
+    computation — and repeated identical queries pay the index descent
+    once.  The cache resets whenever the baseline object changes (major
+    compaction rebuilds it); callers must treat the returned array as
+    read-only."""
+    base = store.baseline
+    cached = getattr(store, "_verdict_cache", None)
+    if cached is None or cached[0] is not base:
+        cached = (base, {})
+        store._verdict_cache = cached
+    pkey = _pred_cache_key(preds)
+    v = cached[1].get(pkey)
+    if v is None:
+        v = np.full(base.n_blocks, Verdict.ALL.value, np.int8)
+        for p in preds:
+            v = np.minimum(v, base.cols[p.column].index.prune(p))
+        if len(cached[1]) >= 128:        # bound a long session's footprint
+            cached[1].clear()
+        cached[1][pkey] = v
+    return v
+
+
 def estimate_scan(store, preds: Sequence[Predicate],
                   verdicts: Optional[np.ndarray] = None) -> ScanEstimate:
     """Estimate surviving rows for a conjunction of predicates from leaf
@@ -176,13 +219,49 @@ def estimate_scan(store, preds: Sequence[Predicate],
     without numeric bounds fall back to verdict-coarse fractions
     (ALL → 1, SOME → ½, NONE → 0).  Predicate-bearing estimates are
     multiplied by the table's feedback calibration factor (``observe_scan``)
-    so the loop is closed across queries."""
+    so the loop is closed across queries.
+
+    The *raw* interpolation — everything except the calibration factor —
+    is cached on the store per (baseline, predicate set): the session
+    planner and the executor it routes to both estimate the same query,
+    and repeated identical queries must not re-descend the sketches.  The
+    factor is re-applied per call, so feedback observations take effect
+    immediately without invalidating the cache.  Every in-repo caller
+    passes either no verdicts or the conjunction verdicts of exactly
+    ``preds`` (``prune_verdicts``), so the cache keys on the predicate
+    set plus verdict presence."""
     base = store.baseline
     nb = base.n_blocks
     if nb == 0:
         return ScanEstimate(0, 0, 0, 0.0)
+    ckey = (_pred_cache_key(preds), verdicts is None)
+    cached = getattr(store, "_estimate_cache", None)
+    if cached is None or cached[0] is not base:
+        cached = (base, {})
+        store._estimate_cache = cached
+    raw_est = cached[1].get(ckey)
+    if raw_est is None:
+        raw_est = _raw_estimate(store, preds, verdicts)
+        if len(cached[1]) >= 128:
+            cached[1].clear()
+        cached[1][ckey] = raw_est
+    candidates, raw, eligible = raw_est
+    if not preds or not eligible:
+        return ScanEstimate(base.nrows, nb, candidates, raw, raw)
     key = _cal_key(preds)
-    factor = calibration(store).factor_for(key) if preds else 1.0
+    factor = calibration(store).factor_for(key)
+    return ScanEstimate(base.nrows, nb, candidates,
+                        min(raw * factor, float(base.nrows)), raw,
+                        calibrated=True, cal_key=key)
+
+
+def _raw_estimate(store, preds: Sequence[Predicate],
+                  verdicts: Optional[np.ndarray]
+                  ) -> Tuple[int, float, bool]:
+    """The calibration-free part of ``estimate_scan``: (candidate blocks,
+    raw estimated surviving rows, calibration-eligible)."""
+    base = store.baseline
+    nb = base.n_blocks
     counts = base.cols[base.schema.pk].index.leaf_counts().astype(np.float64)
     if verdicts is not None:
         cand_mask = verdicts != Verdict.NONE.value
@@ -193,7 +272,7 @@ def estimate_scan(store, preds: Sequence[Predicate],
             # this verdict-coarse guess is not calibrated feedback material
             # (the factor corrects interpolation it never consulted)
             raw = float(counts[cand_mask].sum()) * (0.5 if preds else 1.0)
-            return ScanEstimate(base.nrows, nb, candidates, raw, raw)
+            return candidates, raw, False
     frac = np.ones(nb, np.float64)
     for p in preds:
         f = base.cols[p.column].index.estimate_fraction(p)
@@ -211,11 +290,7 @@ def estimate_scan(store, preds: Sequence[Predicate],
     else:
         candidates = nb
     raw = float((counts * frac).sum())
-    if not preds:
-        return ScanEstimate(base.nrows, nb, candidates, raw, raw)
-    return ScanEstimate(base.nrows, nb, candidates,
-                        min(raw * factor, float(base.nrows)), raw,
-                        calibrated=True, cal_key=key)
+    return candidates, raw, bool(preds)
 
 
 def choose_coalesce(est: ScanEstimate, block_rows: int,
@@ -235,12 +310,20 @@ def choose_coalesce(est: ScanEstimate, block_rows: int,
 
 def choose_shards(est: ScanEstimate,
                   max_workers: Optional[int] = None) -> int:
-    """Fan-out width from the estimated surviving-row count: one shard per
-    ``ROWS_PER_SHARD`` surviving rows, capped by worker slots and by the
-    candidate block count (an empty shard is pure overhead)."""
+    """Fan-out width from the estimated surviving-row count: single-shard
+    below the ``MIN_FANOUT_ROWS`` amortization floor, then one shard per
+    ``ROWS_PER_SHARD`` surviving rows, capped at twice the worker slots
+    (shards are queue granularity — smaller working sets scan faster even
+    on a saturated pool — while the thread pool itself stays core-sized),
+    by ``MAX_FANOUT``, and by the candidate block count (an empty shard
+    is pure overhead).  ``max_workers=1`` pins the fan-out off."""
+    if est.est_rows < MIN_FANOUT_ROWS:
+        return 1
     cores = max_workers or os.cpu_count() or 1
+    if cores <= 1:
+        return 1
     by_rows = math.ceil(est.est_rows / ROWS_PER_SHARD)
-    return int(max(1, min(max(cores, 1), by_rows,
+    return int(max(1, min(min(MAX_FANOUT, 2 * cores), by_rows,
                           max(est.candidate_blocks, 1))))
 
 

@@ -27,6 +27,7 @@ the benchmarks compare.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -109,7 +110,7 @@ class ScalarEngine:
                         r[a.alias] = st["_maxs"].get(a.column)
                 out.append(r)
         if q.sort_by:
-            out.sort(key=lambda r: tuple(r[c] for c in q.sort_by))
+            out.sort(key=lambda r: null_last_key(r[c] for c in q.sort_by))
         if q.limit is not None:
             out = out[: q.limit]
         return out
@@ -118,6 +119,67 @@ class ScalarEngine:
 # ---------------------------------------------------------------------------
 # Vectorized engine
 # ---------------------------------------------------------------------------
+
+
+def null_last_key(values) -> Tuple:
+    """Engine-wide NULL ordering for group keys and ORDER BY columns: a
+    sort key that places ``None`` after every real value (matching the
+    reserved sentinel slot — the largest code — in the packed group-code
+    domain), without ever comparing ``None`` against a value."""
+    return tuple((v is None, 0 if v is None else v) for v in values)
+
+
+def null_aware_key_codes(keys: Sequence[np.ndarray],
+                         masks: Sequence[Optional[np.ndarray]]
+                         ) -> Tuple[List[Tuple[Any, ...]], np.ndarray]:
+    """Dictionary-encode composite group keys whose columns may carry
+    NULLs: each key column gets per-row codes in ``[0, ndv)`` plus one
+    **reserved sentinel slot** (``ndv``, the largest code) for its NULL
+    rows, the per-column codes pack mixed-radix into one integer domain,
+    and the emit side decodes the sentinel back to ``None``.
+
+    Returns ``(key_rows, codes)`` with ``key_rows`` in packed-code order —
+    ascending per column with the NULL key last, the same order
+    ``np.unique`` gives NULL-free keys — and ``codes`` mapping each input
+    row to its position in ``key_rows``.  Shared by ``VectorEngine`` and
+    the sharded fan-out's ``GroupedPartial`` so every engine emits
+    identical ``None`` keys."""
+    invs: List[np.ndarray] = []
+    dicts: List[np.ndarray] = []
+    for v, m in zip(keys, masks):
+        uniq, inv = np.unique(np.asarray(v), return_inverse=True)
+        inv = inv.astype(np.int64, copy=True).reshape(-1)
+        if m is not None:
+            m = np.asarray(m)
+            if m.any():
+                inv[m] = uniq.shape[0]          # the sentinel slot
+        invs.append(inv)
+        dicts.append(uniq)
+    dims = [int(d.shape[0]) + 1 for d in dicts]  # +1: sentinel per column
+    domain = 1
+    for d in dims:
+        domain *= d
+    if domain <= (1 << 62):
+        packed = invs[0]
+        for inv, dim in zip(invs[1:], dims[1:]):
+            packed = packed * dim + inv
+        uniqp, codes = np.unique(packed, return_inverse=True)
+        key_rows = []
+        for g in uniqp:
+            g = int(g)
+            vals: List[Any] = []
+            for d, dim in zip(reversed(dicts), reversed(dims)):
+                idx = g % dim
+                g //= dim
+                vals.append(None if idx >= d.shape[0] else _item(d[idx]))
+            key_rows.append(tuple(reversed(vals)))
+    else:                 # packed domain too wide for int64: record arrays
+        stacked = np.rec.fromarrays(invs)
+        uniqr, codes = np.unique(stacked, return_inverse=True)
+        key_rows = [tuple(None if int(u[k]) >= dicts[k].shape[0]
+                          else _item(dicts[k][int(u[k])])
+                          for k in range(len(dicts))) for u in uniqr]
+    return key_rows, codes
 
 
 def pack_sort_keys(cols: Sequence[np.ndarray]) -> np.ndarray:
@@ -219,10 +281,11 @@ class VectorEngine:
         filtered (late-materialized) values of one column; ``nulls(name)``
         (optional) its NULL mask, so aggregates — flat AND grouped — skip
         NULL slots and projections emit None (SQL semantics: count(col)/sum/
-        min/max/avg ignore NULLs, count(*) does not).  Group *keys* keep the
-        encoded fill-value convention (a NULL key story is still open).
-        Shared by the in-memory vectorized path and the block-pushdown
-        executors."""
+        min/max/avg ignore NULLs, count(*) does not).  Group *keys* are
+        NULL-aware too: NULL key rows take the reserved sentinel slot in
+        the packed group-code domain and emit as one ``None`` group,
+        ordered after every real key.  Shared by the in-memory vectorized
+        path and the block-pushdown executors."""
         if not q.aggs:
             names = list(q.project or all_names)
             data = {nm: c(nm) for nm in names}
@@ -281,8 +344,12 @@ class VectorEngine:
                  nulls: Optional[Callable[[str], Optional[np.ndarray]]] = None
                  ) -> List[Dict[str, Any]]:
         keys = [c(g) for g in q.group_by]
-        # Dictionary-encode the composite key.
-        if len(keys) == 1:
+        kmasks = [nulls(g) if nulls else None for g in q.group_by]
+        # Dictionary-encode the composite key.  NULL-bearing key columns
+        # take the sentinel-slot path (NULL rows form one None group).
+        if any(m is not None and m.any() for m in kmasks):
+            key_rows, codes = null_aware_key_codes(keys, kmasks)
+        elif len(keys) == 1:
             uniq, codes = np.unique(keys[0], return_inverse=True)
             key_rows = [(u,) for u in uniq]
         else:
@@ -359,6 +426,11 @@ class VectorEngine:
     def _sort(rows: List[Dict[str, Any]], sort_by: Tuple[str, ...]) -> List[Dict[str, Any]]:
         if not rows:
             return rows
+        if any(r[c] is None for r in rows for c in sort_by):
+            # NULL sort keys: stable python sort, None ordered last (the
+            # same order the sentinel group-code slot produces)
+            return sorted(rows,
+                          key=lambda r: null_last_key(r[c] for c in sort_by))
         cols = [np.asarray([r[c] for r in rows]) for c in sort_by]
         try:
             if all(np.issubdtype(c.dtype, np.integer) for c in cols):
@@ -427,13 +499,30 @@ def hash_join(left: Table, right: Table, lkey: str, rkey: str,
     return out
 
 
-def make_engine(kind: str, **kw):
-    """Planner entry point: 'scalar' | 'vectorized' | 'pushdown' | 'sharded'.
+_make_engine_warned = False
 
-    'pushdown' returns the block-granular executor over an ``LSMStore``
+
+def make_engine(kind: str, **kw):
+    """DEPRECATED hand-pick of one executor — the session API
+    (``repro.core.session.Database``) is the entry point now: ``db =
+    Database(store); db.query(q)`` plans the route (engine choice, fan-out
+    width, device route, MV rewrite) from the cost model, and
+    ``db.query(q, engine=kind)`` pins a specific engine where this factory
+    used to be called.
+
+    Kinds: 'scalar' | 'vectorized' | 'pushdown' | 'sharded'.  'pushdown'
+    returns the block-granular executor over an ``LSMStore``
     (``core.pushdown.PushdownExecutor``); 'sharded' the mesh-sharded scan
     fan-out over the same store (``core.partition.ShardedScanExecutor``);
-    the other two operate on a fully-decoded ``Table``."""
+    the other two operate on a fully-decoded ``Table``.  Emits a
+    ``DeprecationWarning`` once per process."""
+    global _make_engine_warned
+    if not _make_engine_warned:
+        _make_engine_warned = True
+        warnings.warn(
+            "make_engine() is deprecated: use repro.core.session.Database "
+            "(db.query(q) auto-routes; db.query(q, engine=kind) pins)",
+            DeprecationWarning, stacklevel=2)
     if kind == "scalar":
         return ScalarEngine()
     if kind == "vectorized":

@@ -58,7 +58,8 @@ import numpy as np
 
 from . import cost
 from . import pushdown as _pd
-from .engine import Query, VectorEngine, _item, pack_sort_keys
+from .engine import (Query, VectorEngine, _item, null_aware_key_codes,
+                     null_last_key, pack_sort_keys)
 from .lsm import LSMStore, ScanStats, VirtualSSTable
 from .relation import ColType, Column
 from .skipping import Verdict
@@ -138,7 +139,7 @@ class GroupedPartial:
     min/max entries are only meaningful where ``rows_per_group > 0``."""
 
     group_cols: Tuple[str, ...]
-    keys: List[Tuple[Any, ...]]
+    keys: List[Tuple[Any, ...]]                 # sorted; None (NULL) keys last
     rows_per_group: np.ndarray                  # int64 [G]
     sums: Dict[str, np.ndarray]                 # per agg column [G]
     mins: Dict[str, np.ndarray]
@@ -168,9 +169,15 @@ class GroupedPartial:
         agg_cols = sorted({a.column for a in q.aggs if a.column})
         if gb:
             keyarrs = [np.asarray(cols[g]) for g in gb]
+            kmasks = [(nulls.get(g) if nulls else None) for g in gb]
             if n_rows == 0:
                 keys: List[Tuple[Any, ...]] = []
                 codes = np.zeros(0, np.int64)
+            elif any(m is not None and np.asarray(m).any() for m in kmasks):
+                # NULL group keys: sentinel-slot dictionary codes, one
+                # None group per column, ordered after every real key —
+                # identical to VectorEngine._groupby
+                keys, codes = null_aware_key_codes(keyarrs, kmasks)
             elif len(keyarrs) == 1:
                 uniq, codes = np.unique(keyarrs[0], return_inverse=True)
                 keys = [(_item(u),) for u in uniq]
@@ -263,7 +270,7 @@ class GroupedPartial:
             return b
         if not b.keys:
             return a
-        keys = sorted(set(a.keys) | set(b.keys))
+        keys = sorted(set(a.keys) | set(b.keys), key=null_last_key)
         pos = {k: i for i, k in enumerate(keys)}
         ia = np.asarray([pos[k] for k in a.keys], np.int64)
         ib = np.asarray([pos[k] for k in b.keys], np.int64)
@@ -386,8 +393,9 @@ class GroupedPartial:
         else:
             pos = [self.group_cols.index(c) for c in q.sort_by]
             order = sorted(range(len(self.keys)),
-                           key=lambda i: (tuple(self.keys[i][p] for p in pos),
-                                          self.keys[i]))
+                           key=lambda i: (
+                               null_last_key(self.keys[i][p] for p in pos),
+                               null_last_key(self.keys[i])))
             keep = sorted(order[:k])    # self.keys is sorted: index order
         idx = np.asarray(keep, np.int64)  # == key order inside the heap
         take = lambda d: {c: s[idx] for c, s in d.items()}

@@ -144,9 +144,7 @@ def scan_preamble(store: LSMStore, q: Query, ts: int, stats: ScanStats
                              if i >= 0), np.int64)
     inc_rows = store.live_incremental_rows(inc, q.preds)
     stats.blocks_total = base.n_blocks
-    verdicts = np.full(base.n_blocks, Verdict.ALL.value, np.int8)
-    for p in q.preds:
-        verdicts = np.minimum(verdicts, base.cols[p.column].index.prune(p))
+    verdicts = cost.prune_verdicts(store, q.preds)
     return needed, over, inc_rows, verdicts
 
 
@@ -589,8 +587,9 @@ def plan_device(store: LSMStore, q: Query) -> Optional[DevicePlan]:
     for g in q.group_by:
         if sch.spec(g).ctype not in (ColType.INT, ColType.STR):
             return None
-        if not clean_col(g):
-            return None
+        # NULL group *keys* are allowed: staging reserves a sentinel slot
+        # per key in the packed code domain (emitted as None on the host
+        # side); predicate and value columns must stay clean below.
     val_cols = tuple(sorted({a.column for a in q.aggs
                              if a.column is not None}))
     if len(val_cols) > 4:
@@ -659,7 +658,13 @@ def stage_device(store: LSMStore, plan: DevicePlan) -> Optional[DeviceStage]:
     base = store.baseline
     nb, bk = base.n_blocks, base.block_rows
     gdicts = [_global_dict(base, g) for g in plan.group_cols]
-    ndv = tuple(max(int(d.shape[0]), 1) for d in gdicts)
+    # NULL group keys: a key column whose baseline carries NULLs gets one
+    # reserved sentinel slot (code == len(gdict), the largest code) in its
+    # packed domain; ``emit_device_groups`` decodes it back to None.
+    key_nulls = [base.cols[g].null_blocks is not None
+                 for g in plan.group_cols]
+    ndv = tuple(max(int(d.shape[0]), 1) + (1 if hn else 0)
+                for d, hn in zip(gdicts, key_nulls))
     packed_domain = 1
     for d in ndv:
         packed_domain *= d
@@ -693,6 +698,10 @@ def stage_device(store: LSMStore, plan: DevicePlan) -> Optional[DeviceStage]:
                 codes[b, k, :n] = remap[genc.codes]
             else:
                 codes[b, k, :n] = np.searchsorted(gdicts[k], genc.decode())
+            if key_nulls[k]:
+                nmask = base.cols[g].block_nulls(b)
+                if nmask is not None:              # NULL rows → sentinel
+                    codes[b, k, :n][nmask] = gdicts[k].shape[0]
         for v, c in enumerate(plan.value_cols):
             values[b, v, :n] = base.cols[c].decode_block(b)
     return DeviceStage(deltas, bases, counts, codes, values, gdicts, ndv)
@@ -722,7 +731,10 @@ def emit_device_groups(q: Query, plan: DevicePlan, stage: DeviceStage,
     for j, g in zip(cols_live, packed):
         r: Dict[str, Any] = {}
         for k, col in enumerate(plan.group_cols):
-            r[col] = _item(stage.gdicts[k][(g // strides[k]) % stage.ndv[k]])
+            di = (g // strides[k]) % stage.ndv[k]
+            # the reserved sentinel slot (>= dictionary size) is NULL
+            r[col] = (None if di >= stage.gdicts[k].shape[0]
+                      else _item(stage.gdicts[k][di]))
         n = int(g_cnt[j])
         for a in q.aggs:
             if a.op == "count":

@@ -1,0 +1,604 @@
+"""Unified ``Database`` session API: one query surface, cost-routed plans
+(paper §II architecture + §III–§V techniques behind a single SQL door).
+
+The paper's Mercury system exposes *one* SQL entry point behind which a
+cost-based planner picks among the polymorphic vectorization engine's
+formats, the distributed scan routes, and the differential-refresh
+materialized views; PolarDB-IMCI and L-Store stress the same point — HTAP
+value comes from transparent routing, not from callers hand-picking an
+engine.  This module is that routing layer for the repro:
+
+* ``Database`` — the session façade.  ``db = Database(store)`` (or
+  ``db.create_table(name, schema)``), then ``db.query(Query) -> ResultSet``,
+  ``db.explain(Query) -> Plan``, ``db.create_mav / create_mjv``.  Every
+  query goes through a two-stage compiler:
+
+* ``plan_logical(Query, schema)`` — normalizes the query into a small
+  ``LogicalPlan`` IR: predicates are validated against the schema,
+  de-duplicated, paired ``GE+LE`` bounds collapse into one ``BETWEEN``
+  (so the device planner's single-range shape matches more queries), and
+  aggregates are alias-checked.
+
+* ``plan_physical(LogicalPlan, cost.ScanEstimate, TableCalibration)`` —
+  chooses the physical route from the sketch-driven selectivity estimate
+  (the same closed-loop estimate the executors feed back into):
+
+    - **mav** — a registered ``MaterializedAggView`` whose definition the
+      query subsumes answers it from the container ⊕ pending-mlog merge.
+      Delta freshness is checked through the ``MLog`` first: a purged tail
+      (``MLogPurged``) or a pending tail beyond the staleness horizon
+      falls back to a base-table scan route.
+    - **sharded** — the mesh fan-out (``ShardedScanExecutor``) when the
+      estimated surviving rows justify a multi-shard width
+      (``cost.choose_shards``); the executor then applies its own
+      coalescing / top-k pushdown / device-route knobs.
+    - **pushdown** — the single-shard block-pushdown executor otherwise
+      (zone-map prune + encoded-domain filter + late materialization).
+    - **scalar / vectorized** — full-decode engines, only ever chosen by
+      an explicit ``engine=`` pin (kept for baselines and A/B runs).
+
+  Explicit ``engine=`` / ``n_shards=`` / ``device_route=`` arguments pin
+  the corresponding decision and are recorded as ``Plan.pinned``; any of
+  them also suppresses the MAV rewrite (a pinned scan knob demands a scan
+  route), as do ``use_mv=False`` and snapshot (``ts=``) reads.
+
+* ``ResultSet`` — typed result: named ``columns`` in output order, the
+  result ``rows``, and provenance (the ``Plan`` that was executed plus the
+  executor's ``ScanStats``), replacing the bare ``List[Dict]`` the engines
+  return.
+
+``core.engine.make_engine`` remains as a thin deprecated shim over the
+same executors so pre-session callers keep working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import cost
+from .engine import QAgg, Query, ScalarEngine, VectorEngine
+from .lsm import LSMStore, ScanStats
+from .mview import (MAVDefinition, MJVDefinition, MLog, MLogPurged,
+                    MaterializedAggView, MaterializedJoinView)
+from .partition import ShardedScanExecutor
+from .pushdown import PushdownExecutor
+from .relation import PredOp, Predicate, Schema
+
+#: Pending-mlog rows beyond which an MV rewrite is considered stale: the
+#: realtime merge applies the tail row-at-a-time in Python, so past this
+#: horizon a vectorized base-table scan is the cheaper (and equally fresh)
+#: answer.  Per-``Database`` override via ``mv_stale_rows=``.
+DEFAULT_MV_STALE_ROWS = 10_000
+
+_AGG_OPS = ("count", "sum", "avg", "min", "max")
+ROUTES = ("mav", "pushdown", "sharded", "scalar", "vectorized")
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: the logical plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalPlan:
+    """Normalized query IR: schema-validated, predicate-canonical.  The
+    physical planner and the MV rewriter both match against this — never
+    against the raw ``Query`` — so normalization (e.g. GE+LE → BETWEEN)
+    widens what every downstream route can recognize."""
+
+    preds: Tuple[Predicate, ...]
+    group_by: Tuple[str, ...]
+    aggs: Tuple[QAgg, ...]
+    sort_by: Tuple[str, ...]
+    limit: Optional[int]
+    project: Tuple[str, ...]
+
+    def to_query(self) -> Query:
+        return Query(preds=self.preds, group_by=self.group_by,
+                     aggs=self.aggs, sort_by=self.sort_by, limit=self.limit,
+                     project=self.project)
+
+    def output_names(self, all_names: Sequence[str]) -> Tuple[str, ...]:
+        """Result column names in output order."""
+        if self.aggs:
+            return self.group_by + tuple(a.alias for a in self.aggs)
+        return tuple(self.project) or tuple(all_names)
+
+
+def plan_logical(q: Query, schema: Optional[Schema] = None) -> LogicalPlan:
+    """Normalize a ``Query`` into the ``LogicalPlan`` IR.
+
+    * every referenced column is validated against ``schema`` (when given);
+    * duplicate predicates collapse; a lone ``GE`` + ``LE`` pair over one
+      column collapses into a single ``BETWEEN`` (the canonical range
+      shape the zone maps, sorted-window fast path, and device planner
+      all match on);
+    * aggregate ops are validated and aliases must be unique;
+    * predicates are ordered by column name (conjunction order is
+      semantically free, and a canonical order keys the calibration
+      EWMAs consistently)."""
+    names = set(schema.names) if schema is not None else None
+
+    def check(col: Optional[str], what: str) -> None:
+        if col is not None and names is not None and col not in names:
+            raise KeyError(f"unknown {what} column {col!r}")
+
+    seen: Dict[Tuple, Predicate] = {}
+    by_col: Dict[str, List[Predicate]] = {}
+    for p in q.preds:
+        check(p.column, "predicate")
+        key = (p.column, p.op, repr(p.value), repr(p.value2))
+        if key not in seen:
+            seen[key] = p
+            by_col.setdefault(p.column, []).append(p)
+    preds: List[Predicate] = []
+    for col in sorted(by_col):
+        ps = by_col[col]
+        ops = [p.op for p in ps]
+        if sorted(ops, key=lambda o: o.name) == [PredOp.GE, PredOp.LE]:
+            lo = next(p.value for p in ps if p.op == PredOp.GE)
+            hi = next(p.value for p in ps if p.op == PredOp.LE)
+            preds.append(Predicate(col, PredOp.BETWEEN, lo, hi))
+        else:
+            preds.extend(ps)
+
+    aliases = set()
+    for a in q.aggs:
+        if a.op not in _AGG_OPS:
+            raise ValueError(f"unknown aggregate op {a.op!r}")
+        if a.column is None and a.op != "count":
+            raise ValueError(f"{a.op} requires a column")
+        check(a.column, "aggregate")
+        if a.alias in aliases:
+            raise ValueError(f"duplicate aggregate alias {a.alias!r}")
+        aliases.add(a.alias)
+    for g in q.group_by:
+        check(g, "group-by")
+    for c in q.project:
+        check(c, "projection")
+    out_names = tuple(q.group_by) + tuple(a.alias for a in q.aggs) \
+        if q.aggs else (tuple(q.project) or tuple(names or ()))
+    for s in q.sort_by:
+        if out_names and s not in out_names:
+            raise KeyError(f"sort column {s!r} is not an output column")
+    if q.limit is not None and q.limit < 0:
+        raise ValueError(f"negative limit {q.limit}")
+    return LogicalPlan(tuple(preds), tuple(q.group_by), tuple(q.aggs),
+                       tuple(q.sort_by), q.limit,
+                       tuple(q.project) if not q.aggs else ())
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: the physical plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Plan:
+    """The chosen physical route plus the estimate that chose it — what
+    ``db.explain`` returns and what rides along in ``ResultSet.plan``."""
+
+    route: str                         # one of ROUTES
+    table: str = ""
+    reason: str = ""
+    est_rows: float = 0.0              # planner estimate of surviving rows
+    n_rows: int = 0                    # baseline rows at plan time
+    selectivity: float = 0.0
+    n_shards: int = 1
+    device: bool = False
+    device_route: str = ""             # '' | 'collective' | 'host'
+    mv: Optional[str] = None           # MAV the query was rewritten onto
+    mv_pending: int = 0                # mlog tail rows merged at read time
+    pinned: bool = False               # an explicit hint decided the route
+    logical: Optional[LogicalPlan] = None
+    rewrite: Optional[Dict[str, Any]] = dataclasses.field(
+        default=None, repr=False)      # MV emit mapping (execution detail)
+
+    def describe(self) -> str:
+        bits = [f"route={self.route}"]
+        if self.mv:
+            bits.append(f"mv={self.mv} (pending={self.mv_pending})")
+        if self.route == "sharded":
+            bits.append(f"n_shards={self.n_shards}")
+        if self.device:
+            bits.append(f"device_route={self.device_route or 'auto'}")
+        bits.append(f"est_rows={self.est_rows:.0f}/{self.n_rows}")
+        if self.pinned:
+            bits.append("pinned")
+        return f"Plan({', '.join(bits)}: {self.reason})"
+
+
+def _pred_key(p: Predicate) -> Tuple:
+    return (p.column, p.op, repr(p.value), repr(p.value2))
+
+
+def mav_rewrite(logical: LogicalPlan,
+                mav: MaterializedAggView) -> Optional[Dict[str, Any]]:
+    """Match an aggregate query onto a MAV definition.  Sound iff:
+
+    * the group-by tuples are identical (one container group per result
+      row — no re-aggregation needed);
+    * every non-group-column predicate of the query matches the MAV's
+      definition predicates *exactly* (the container was built over rows
+      passing those predicates, nothing more, nothing less); predicates
+      over group columns become residual filters applied to container
+      rows;
+    * every query aggregate is readable from a container column — a
+      same-(op, column) ``AggSpec``, ``count(*)`` from ``count_star``, or
+      ``avg`` derived from a stored sum/count pair.
+
+    Returns ``{'residual': preds, 'emit': [(alias, kind, src), ...]}`` or
+    None when the query does not subsume the definition."""
+    defn = mav.defn
+    if not logical.aggs or logical.project:
+        return None
+    if tuple(defn.group_by) != logical.group_by:
+        return None
+    gset = set(defn.group_by)
+    residual = tuple(p for p in logical.preds if p.column in gset)
+    rest = [p for p in logical.preds if p.column not in gset]
+    if {_pred_key(p) for p in rest} != {_pred_key(p) for p in defn.preds}:
+        return None
+    stored: Dict[Tuple[str, Optional[str]], str] = {}
+    for a in defn.aggs:
+        op = "count" if a.op == "count_star" else a.op
+        col = None if a.op == "count_star" else a.column
+        stored[(op, col)] = a.alias
+    emit: List[Tuple[str, str, Any]] = []
+    for a in logical.aggs:
+        alias = stored.get((a.op, a.column))
+        if alias is not None:
+            emit.append((a.alias, a.op, alias))
+            continue
+        if a.op == "avg" and a.column is not None:
+            s = stored.get(("sum", a.column))
+            c = stored.get(("count", a.column))
+            if s is not None and c is not None:
+                emit.append((a.alias, "avg_ratio", (s, c)))
+                continue
+        return None
+    return {"residual": residual, "emit": emit}
+
+
+def _mav_pending(mav: MaterializedAggView,
+                 stale_rows: int) -> Optional[int]:
+    """Delta freshness through the MLog: the number of pending (unapplied)
+    mlog rows the realtime merge would fold in, or None when the rewrite
+    must not run — the tail was purged (``MLogPurged``: the merge would be
+    silently incomplete), the tail is past the staleness horizon (the
+    Python row-at-a-time merge would cost more than a vectorized base
+    scan), or the MAV has no mlog and its container predates the base."""
+    if mav.mlog is None:
+        return 0 if mav.last_refresh_ts >= mav.base.current_ts else None
+    try:
+        pending = mav.mlog.since(mav.last_refresh_ts)
+    except MLogPurged:
+        return None
+    if len(pending) > stale_rows:
+        return None
+    return len(pending)
+
+
+def plan_physical(logical: LogicalPlan, est: cost.ScanEstimate,
+                  cal: cost.TableCalibration,
+                  views: Sequence[MaterializedAggView] = (), *,
+                  table: str = "", pinned_engine: Optional[str] = None,
+                  n_shards: Optional[int] = None,
+                  device_route: Optional[str] = None,
+                  max_workers: Optional[int] = None,
+                  mv_stale_rows: int = DEFAULT_MV_STALE_ROWS) -> Plan:
+    """Choose the physical route for a normalized query: transparent MAV
+    rewrite first (freshness-checked through the mlog), then cost-routed
+    scan fan-out vs single-shard pushdown from the sketch estimate.
+    Explicit pins (``pinned_engine`` / ``n_shards`` / ``device_route``)
+    override the corresponding decision."""
+    plan = Plan(route="pushdown", table=table, logical=logical,
+                est_rows=est.est_rows, n_rows=est.n_rows,
+                selectivity=est.selectivity)
+    # the estimate carries the applied feedback factor (raw -> calibrated);
+    # ``cal`` supplies the observation count behind it for the plan reason
+    factor = est.est_rows / est.raw_rows \
+        if est.calibrated and est.raw_rows > 0 else 1.0
+    cal_note = (f", calibration x{factor:.2f} "
+                f"({cal.n_obs.get(est.cal_key, 0)} obs)"
+                if factor != 1.0 else "")
+    if pinned_engine is not None:
+        if pinned_engine not in ("scalar", "vectorized", "pushdown",
+                                 "sharded"):
+            raise ValueError(f"unknown engine {pinned_engine!r}")
+        plan.route = pinned_engine
+        plan.pinned = True
+        plan.reason = f"engine={pinned_engine!r} pinned by caller"
+        if pinned_engine == "sharded":
+            plan.n_shards = n_shards or cost.choose_shards(est, max_workers)
+            if device_route is not None:
+                plan.device, plan.device_route = True, device_route
+        return plan
+    for mav in views:
+        if n_shards is not None or device_route is not None:
+            break                     # scan-knob pins demand a scan route:
+                                      # the rewrite must not swallow them
+        rw = mav_rewrite(logical, mav)
+        if rw is None:
+            continue
+        pending = _mav_pending(mav, mv_stale_rows)
+        if pending is None:
+            continue                  # purged / stale: base-table routes
+        plan.route, plan.mv, plan.mv_pending = "mav", mav.name, pending
+        plan.rewrite = rw
+        plan.reason = (f"rewritten onto MAV {mav.name!r} "
+                       f"({pending} pending mlog rows merged at read)")
+        return plan
+    plan.n_shards = n_shards or cost.choose_shards(est, max_workers)
+    if device_route is not None:
+        plan.route, plan.device, plan.device_route = \
+            "sharded", True, device_route
+        plan.pinned = True
+        plan.reason = f"device_route={device_route!r} pinned by caller"
+        return plan
+    if plan.n_shards > 1:
+        plan.route = "sharded"
+        plan.reason = (f"est {est.est_rows:.0f} of {est.n_rows} rows survive"
+                       f"{cal_note}: fan out to {plan.n_shards} shards")
+    else:
+        plan.route = "pushdown"
+        plan.reason = (f"est {est.est_rows:.0f} of {est.n_rows} rows survive"
+                       f" (selectivity {est.selectivity:.4f}{cal_note}): "
+                       f"single-shard pushdown")
+    plan.pinned = n_shards is not None
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Typed results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResultSet:
+    """Typed query result: named columns in output order, result rows, and
+    provenance — the executed ``Plan`` plus the executor's ``ScanStats``."""
+
+    columns: Tuple[str, ...]
+    rows: List[Dict[str, Any]]
+    plan: Plan
+    stats: Optional[ScanStats] = None
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        return iter(self.rows)
+
+    def __getitem__(self, i):
+        return self.rows[i]
+
+    def column(self, name: str) -> List[Any]:
+        if name not in self.columns:
+            raise KeyError(name)
+        return [r.get(name) for r in self.rows]
+
+    def __repr__(self) -> str:
+        return (f"ResultSet({len(self.rows)} rows, columns={self.columns}, "
+                f"route={self.plan.route!r})")
+
+
+# ---------------------------------------------------------------------------
+# The session façade
+# ---------------------------------------------------------------------------
+
+
+class TableHandle:
+    """One table inside a ``Database``: the LSM store plus its registered
+    view and mlog state.  DML and storage maintenance delegate straight to
+    the underlying ``LSMStore`` (``insert`` / ``update`` / ``delete`` /
+    ``bulk_insert`` / ``major_compact`` / ...)."""
+
+    def __init__(self, name: str, store: LSMStore, db: "Database"):
+        self.name = name
+        self.store = store
+        self._db = db
+        self.mavs: Dict[str, MaterializedAggView] = {}
+        self.mjvs: Dict[str, MaterializedJoinView] = {}
+        self._mlog: Optional[MLog] = None
+
+    @property
+    def schema(self) -> Schema:
+        return self.store.schema
+
+    def mlog(self) -> MLog:
+        """The table's change log, created on first use (DAS: every DML on
+        the store is recorded from that point on)."""
+        if self._mlog is None:
+            self._mlog = MLog(self.store)
+        return self._mlog
+
+    def query(self, q: Query, **hints) -> ResultSet:
+        return self._db.query(q, table=self.name, **hints)
+
+    def explain(self, q: Query, **hints) -> Plan:
+        return self._db.explain(q, table=self.name, **hints)
+
+    def __getattr__(self, attr):
+        return getattr(self.store, attr)       # DML / maintenance passthrough
+
+    def __repr__(self) -> str:
+        return (f"TableHandle({self.name!r}, rows={self.store.baseline.nrows}"
+                f"+{self.store.incremental_fraction():.2f} incr, "
+                f"mavs={sorted(self.mavs)})")
+
+
+class Database:
+    """The unified session: attach or create tables, register materialized
+    views, and run every query through the two-stage compiler.  See the
+    module docstring for the routing rules."""
+
+    def __init__(self, store: Optional[LSMStore] = None, name: str = "main",
+                 mv_stale_rows: int = DEFAULT_MV_STALE_ROWS,
+                 max_workers: Optional[int] = None):
+        self._tables: Dict[str, TableHandle] = {}
+        self.mv_stale_rows = mv_stale_rows
+        self.max_workers = max_workers
+        if store is not None:
+            self.attach(name, store)
+
+    # -------------------------------------------------------------- tables
+    def attach(self, name: str, store: LSMStore) -> TableHandle:
+        if name in self._tables:
+            raise ValueError(f"table {name!r} already attached")
+        h = TableHandle(name, store, self)
+        self._tables[name] = h
+        return h
+
+    def create_table(self, name: str, schema: Schema, **kw) -> TableHandle:
+        return self.attach(name, LSMStore(schema, **kw))
+
+    def table(self, name: Optional[str] = None) -> TableHandle:
+        if name is None:
+            if len(self._tables) == 1:
+                return next(iter(self._tables.values()))
+            raise ValueError(
+                f"table name required (attached: {sorted(self._tables)})")
+        if name not in self._tables:
+            raise KeyError(f"unknown table {name!r} "
+                           f"(attached: {sorted(self._tables)})")
+        return self._tables[name]
+
+    @property
+    def tables(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._tables))
+
+    # --------------------------------------------------------------- views
+    def create_mav(self, name: str, definition: MAVDefinition,
+                   table: Optional[str] = None, container_mode: str = "row",
+                   refresh_mode: str = "incremental") -> MaterializedAggView:
+        """Register a materialized aggregate view; matching aggregate
+        queries are transparently rewritten onto it from then on."""
+        h = self.table(table)
+        mav = MaterializedAggView(name, h.store, h.mlog(), definition,
+                                  container_mode, refresh_mode)
+        h.mavs[name] = mav
+        return mav
+
+    def create_mjv(self, name: str, definition: MJVDefinition,
+                   left: str, right: str) -> MaterializedJoinView:
+        lh, rh = self.table(left), self.table(right)
+        mjv = MaterializedJoinView(name, lh.store, rh.store, lh.mlog(),
+                                   rh.mlog(), definition)
+        lh.mjvs[name] = mjv
+        rh.mjvs[name] = mjv
+        return mjv
+
+    # ------------------------------------------------------------ planning
+    def _plan(self, h: TableHandle, q: Query, engine: Optional[str],
+              n_shards: Optional[int], device_route: Optional[str],
+              ts: Optional[int], use_mv: bool) -> Plan:
+        logical = plan_logical(q, h.store.schema)
+        verdicts = cost.prune_verdicts(h.store, logical.preds) \
+            if h.store.baseline.n_blocks and logical.preds else None
+        est = cost.estimate_scan(h.store, logical.preds, verdicts)
+        # A snapshot read (ts=) pins the query to the scan paths: the MV
+        # container only answers at current freshness.
+        views = tuple(h.mavs.values()) \
+            if use_mv and engine is None and ts is None else ()
+        plan = plan_physical(logical, est, cost.calibration(h.store), views,
+                             table=h.name, pinned_engine=engine,
+                             n_shards=n_shards, device_route=device_route,
+                             max_workers=self.max_workers,
+                             mv_stale_rows=self.mv_stale_rows)
+        return plan
+
+    def explain(self, q: Query, table: Optional[str] = None, *,
+                engine: Optional[str] = None, n_shards: Optional[int] = None,
+                device_route: Optional[str] = None, ts: Optional[int] = None,
+                use_mv: bool = True) -> Plan:
+        """The plan ``query`` would execute, without executing it."""
+        return self._plan(self.table(table), q, engine, n_shards,
+                          device_route, ts, use_mv)
+
+    # ----------------------------------------------------------- execution
+    def query(self, q: Query, table: Optional[str] = None, *,
+              engine: Optional[str] = None, n_shards: Optional[int] = None,
+              device_route: Optional[str] = None, ts: Optional[int] = None,
+              use_mv: bool = True) -> ResultSet:
+        """Plan and run ``q``; returns a typed ``ResultSet`` whose ``plan``
+        and ``stats`` record how it was answered.  ``engine=`` pins one of
+        'scalar' | 'vectorized' | 'pushdown' | 'sharded'; ``n_shards=`` and
+        ``device_route=`` pin the fan-out knobs; ``use_mv=False`` disables
+        the transparent MAV rewrite; ``ts=`` reads a snapshot (scan routes
+        only)."""
+        h = self.table(table)
+        plan = self._plan(h, q, engine, n_shards, device_route, ts, use_mv)
+        qq = plan.logical.to_query()
+        if plan.route == "mav":
+            rows, stats = self._execute_mav(h, plan)
+        else:
+            rows, stats = self._execute_scan(h, qq, plan, ts)
+        return ResultSet(plan.logical.output_names(h.store.schema.names),
+                         rows, plan, stats)
+
+    def _execute_scan(self, h: TableHandle, q: Query, plan: Plan,
+                      ts: Optional[int]
+                      ) -> Tuple[List[Dict[str, Any]], ScanStats]:
+        store = h.store
+        if plan.route == "pushdown":
+            return PushdownExecutor().execute_stats(store, q, ts)
+        if plan.route == "sharded":
+            ex = ShardedScanExecutor(n_shards=plan.n_shards,
+                                     device=plan.device,
+                                     device_route=plan.device_route or None,
+                                     max_workers=self.max_workers)
+            rows, stats = ex.execute_stats(store, q, ts)
+            plan.n_shards = stats.n_shards
+            return rows, stats
+        # full-decode baselines ('scalar' / 'vectorized'): the engine does
+        # the filtering, the store only materializes the needed columns
+        needed = sorted(VectorEngine.columns_needed(q, store.schema.names))
+        tbl, stats = store.scan(columns=needed, ts=ts)
+        eng = ScalarEngine() if plan.route == "scalar" else VectorEngine()
+        return eng.execute(tbl, q), stats
+
+    def _execute_mav(self, h: TableHandle, plan: Plan
+                     ) -> Tuple[List[Dict[str, Any]], ScanStats]:
+        """Answer from the MAV container ⊕ pending-mlog merge, then apply
+        the residual group-column predicates and emit the query's aliases.
+        ``mav.query(realtime=True)`` itself falls back to a full container
+        rebuild if the tail is purged between planning and here."""
+        mav = h.mavs[plan.mv]
+        logical, rw = plan.logical, plan.rewrite
+        tbl = mav.query(realtime=True)
+        if rw["residual"] and len(tbl):
+            mask = np.ones(len(tbl), bool)
+            for p in rw["residual"]:
+                mask &= p.eval(tbl.col(p.column))
+            tbl = tbl.take(np.nonzero(mask)[0])
+        rows: List[Dict[str, Any]] = []
+        for r in tbl.rows():
+            out = {g: r[g] for g in logical.group_by}
+            for alias, kind, src in rw["emit"]:
+                if kind == "avg_ratio":
+                    s, c = src
+                    out[alias] = (r[s] / r[c]) if r[c] else None
+                elif kind == "sum":
+                    out[alias] = r[src] if r[src] is not None else 0
+                else:
+                    out[alias] = r[src]
+            rows.append(out)
+        if not logical.group_by and not rows:
+            # flat aggregate over an empty container: engine conventions
+            # (count → 0, sum → 0, min/max/avg → None)
+            rows = [{alias: 0 if kind in ("count", "sum") else None
+                     for alias, kind, _ in rw["emit"]}]
+        if logical.sort_by:
+            rows = VectorEngine._sort(rows, logical.sort_by)
+        if logical.limit is not None:
+            rows = rows[: logical.limit]
+        stats = ScanStats(used_pushdown=False)
+        stats.rows_merged_incremental = plan.mv_pending
+        stats.actual_rows = len(rows)
+        return rows, stats
+
+    def __repr__(self) -> str:
+        return f"Database(tables={self.tables})"

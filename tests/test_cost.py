@@ -92,8 +92,11 @@ def test_choose_shards_scales_with_surviving_rows():
     sel = _est(1 << 22, 256, 2, 1000.0)
     assert cost.choose_shards(sel, max_workers=8) == 1
     assert cost.choose_shards(full, max_workers=8) == 8    # capped by workers
-    mid = _est(1 << 22, 256, 256, float(cost.ROWS_PER_SHARD * 3))
-    assert cost.choose_shards(mid, max_workers=8) == 3     # rows-driven
+    # below the amortization floor: thread fan-out costs more than it saves
+    low = _est(1 << 22, 256, 256, float(cost.MIN_FANOUT_ROWS - 1))
+    assert cost.choose_shards(low, max_workers=8) == 1
+    mid = _est(1 << 22, 256, 256, float(cost.ROWS_PER_SHARD * 5))
+    assert cost.choose_shards(mid, max_workers=8) == 5     # rows-driven
     assert cost.choose_shards(full, max_workers=1) == 1
 
 
@@ -215,14 +218,14 @@ def test_auto_shard_count_from_cost_model():
     sch = schema(("k", ColType.INT), ("g", ColType.INT),
                  ("v", ColType.FLOAT))
     store = LSMStore(sch, block_rows=2048)
-    n = cost.ROWS_PER_SHARD * 3
+    n = cost.ROWS_PER_SHARD * 6              # well past the fan-out floor
     store.bulk_insert({"k": np.arange(n), "g": rng.integers(0, 4, n),
                       "v": rng.normal(size=n)})
     q_full = Query(group_by=("g",), aggs=(QAgg("count", None, "n"),
                                           QAgg("sum", "v", "sv")))
     auto = ShardedScanExecutor(max_workers=4)
     rows, st = auto.execute_stats(store, q_full)
-    assert st.n_shards == 3                   # rows-driven, no caller constant
+    assert st.n_shards == 6                   # rows-driven (6x ROWS_PER_SHARD)
     assert norm(rows) == norm(ShardedScanExecutor(n_shards=2)
                               .execute(store, q_full))
     q_sel = Query(preds=(Predicate("k", PredOp.BETWEEN, 10, 500),),

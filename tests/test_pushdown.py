@@ -177,8 +177,8 @@ def test_null_blocks_absorbed_from_sketches():
 
 def test_null_heavy_grouped_and_projection_parity():
     """Grouped queries and projections over NULL-bearing stores: pushdown ≡
-    VectorEngine over the scan (group keys keep the engine-wide fill
-    convention; projections emit None)."""
+    VectorEngine over the scan (NULL group keys emit as one None group via
+    the sentinel code slot; projections emit None)."""
     rng = np.random.default_rng(91)
     store = make_null_store(rng)
     table, _ = store.scan()

@@ -1,0 +1,533 @@
+"""Unified ``Database`` session API: logical normalization, cost-routed
+physical plans, explicit pins, transparent MAV rewrite (freshness-checked
+through the mlog), typed ``ResultSet``s — plus the NULL group-*key*
+sentinel story across every engine."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_mod
+from repro.core.engine import QAgg, Query, ScalarEngine, VectorEngine
+from repro.core.lsm import LSMStore
+from repro.core.mview import AggSpec, MAVDefinition, MJVDefinition
+from repro.core.partition import ShardedScanExecutor
+from repro.core.pushdown import PushdownExecutor, plan_device
+from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.session import (Database, LogicalPlan, Plan, ResultSet,
+                                mav_rewrite, plan_logical)
+
+
+def norm(rows):
+    return sorted((tuple(sorted((k, round(v, 6) if isinstance(v, float)
+                                 else v) for k, v in r.items()))
+                   for r in rows), key=repr)
+
+
+def make_store(n=2000, block_rows=64, seed=0, nullable_g=False):
+    sch = schema(("k", ColType.INT), ("g", ColType.INT), ("d", ColType.INT),
+                 ("v", ColType.FLOAT))
+    st = LSMStore(sch, block_rows=block_rows, memtable_limit=10**6)
+    rng = np.random.default_rng(seed)
+    if nullable_g:
+        for i in range(n):
+            st.insert({"k": i,
+                       "g": None if rng.random() < 0.25
+                       else int(rng.integers(0, 4)),
+                       "d": int(rng.integers(0, 100)),
+                       "v": None if rng.random() < 0.2
+                       else float(rng.normal())})
+        st.major_compact()
+    else:
+        st.bulk_insert({"k": np.arange(n),
+                        "g": rng.integers(0, 4, n),
+                        "d": rng.integers(0, 100, n),
+                        "v": rng.normal(size=n)})
+    return st
+
+
+Q_GROUPED = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+                  group_by=("g",),
+                  aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"),
+                        QAgg("avg", "v", "av")))
+
+
+# ---------------------------------------------------------------------------
+# Logical plan normalization
+# ---------------------------------------------------------------------------
+
+
+def test_plan_logical_normalizes_ge_le_to_between():
+    st = make_store(100)
+    lp = plan_logical(Query(preds=(Predicate("d", PredOp.GE, 10),
+                                   Predicate("d", PredOp.LE, 60))),
+                      st.schema)
+    assert len(lp.preds) == 1
+    p = lp.preds[0]
+    assert (p.op, p.value, p.value2) == (PredOp.BETWEEN, 10, 60)
+
+
+def test_plan_logical_dedups_and_orders_preds():
+    lp = plan_logical(Query(preds=(Predicate("v", PredOp.GT, 0.0),
+                                   Predicate("d", PredOp.EQ, 5),
+                                   Predicate("v", PredOp.GT, 0.0))))
+    assert [p.column for p in lp.preds] == ["d", "v"]     # canonical order
+    assert len(lp.preds) == 2                             # duplicate dropped
+
+
+def test_plan_logical_validates():
+    st = make_store(50)
+    with pytest.raises(KeyError):
+        plan_logical(Query(preds=(Predicate("nope", PredOp.EQ, 1),)),
+                     st.schema)
+    with pytest.raises(ValueError):
+        plan_logical(Query(aggs=(QAgg("median", "v", "m"),)))
+    with pytest.raises(ValueError):
+        plan_logical(Query(aggs=(QAgg("sum", "v", "a"),
+                                 QAgg("count", None, "a"))))
+    with pytest.raises(KeyError):
+        plan_logical(Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),),
+                           sort_by=("not_out",)), st.schema)
+    # GE+LE normalization keeps answers identical through the session
+    db = Database(st)
+    a = db.query(Query(preds=(Predicate("d", PredOp.GE, 10),
+                              Predicate("d", PredOp.LE, 60)),
+                       aggs=(QAgg("count", None, "n"),)))
+    b = db.query(Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+                       aggs=(QAgg("count", None, "n"),)))
+    assert a.rows == b.rows
+
+
+# ---------------------------------------------------------------------------
+# Router decisions + pins
+# ---------------------------------------------------------------------------
+
+
+def test_explain_routes_selective_to_pushdown():
+    db = Database(make_store(), max_workers=4)
+    q = Query(preds=(Predicate("k", PredOp.BETWEEN, 100, 120),),
+              aggs=(QAgg("count", None, "n"),))
+    plan = db.explain(q)
+    assert plan.route == "pushdown" and plan.n_shards == 1
+    assert not plan.pinned
+    assert plan.est_rows < 1000
+
+
+def test_explain_routes_wide_scan_to_sharded():
+    # past the fan-out floor with >= 2 worker slots: fan out
+    from repro.core import cost
+    st = make_store(n=cost.MIN_FANOUT_ROWS + 50_000, block_rows=16_384)
+    db = Database(st, max_workers=4)
+    plan = db.explain(Query(group_by=("g",),
+                            aggs=(QAgg("count", None, "n"),)))
+    assert plan.route == "sharded" and plan.n_shards >= 2
+    res = db.query(Query(group_by=("g",), aggs=(QAgg("count", None, "n"),)))
+    assert res.plan.route == "sharded"
+    assert res.stats is not None and res.stats.n_shards == res.plan.n_shards
+    want = norm(PushdownExecutor().execute(st, Query(
+        group_by=("g",), aggs=(QAgg("count", None, "n"),))))
+    assert norm(res.rows) == want
+
+
+def test_engine_pins_override_router():
+    st = make_store()
+    db = Database(st, max_workers=4)
+    want = norm(PushdownExecutor().execute(st, Q_GROUPED))
+    for kind in ("scalar", "vectorized", "pushdown", "sharded"):
+        res = db.query(Q_GROUPED, engine=kind)
+        assert res.plan.route == kind and res.plan.pinned
+        assert norm(res.rows) == want
+    with pytest.raises(ValueError):
+        db.query(Q_GROUPED, engine="volcano")
+
+
+def test_n_shards_pin():
+    st = make_store()
+    db = Database(st)
+    res = db.query(Q_GROUPED, n_shards=3)
+    assert res.plan.route == "sharded" and res.plan.pinned
+    assert res.stats.n_shards == 3
+    assert norm(res.rows) == norm(PushdownExecutor().execute(st, Q_GROUPED))
+
+
+@pytest.mark.device
+def test_device_route_pin():
+    st = make_store(n=1000, block_rows=64)
+    db = Database(st)
+    q = Query(preds=(Predicate("k", PredOp.BETWEEN, 0, 900),),
+              group_by=("g",), aggs=(QAgg("count", None, "n"),
+                                     QAgg("sum", "v", "sv")))
+    res = db.query(q, device_route="host", n_shards=2)
+    assert res.plan.device and res.plan.device_route == "host"
+    assert res.stats.used_device and res.stats.device_route == "host"
+    want = norm(PushdownExecutor().execute(st, q))
+    got = [{k: (round(v, 2) if isinstance(v, float) else v)
+            for k, v in r.items()} for r in res.rows]
+    wnt = [{k: (round(v, 2) if isinstance(v, float) else v)
+            for k, v in dict(r).items()} for r in
+           PushdownExecutor().execute(st, q)]
+    assert norm(got) == norm(wnt)
+
+
+def test_resultset_shape_and_provenance():
+    db = Database(make_store())
+    res = db.query(Q_GROUPED)
+    assert isinstance(res, ResultSet)
+    assert res.columns == ("g", "n", "sv", "av")
+    assert len(res) == len(res.rows) and list(iter(res)) == res.rows
+    assert res.column("n") == [r["n"] for r in res.rows]
+    with pytest.raises(KeyError):
+        res.column("nope")
+    assert isinstance(res.plan, Plan) and res.plan.logical is not None
+    assert res.stats is not None and res.stats.blocks_total > 0
+    # projection column order
+    proj = db.query(Query(preds=(Predicate("k", PredOp.LT, 5),),
+                          project=("v", "k"), sort_by=("k",)))
+    assert proj.columns == ("v", "k") and len(proj) == 5
+
+
+def test_multi_table_database():
+    db = Database()
+    sch = schema(("id", ColType.INT), ("x", ColType.INT))
+    a = db.create_table("a", sch, block_rows=32)
+    b = db.create_table("b", sch, block_rows=32)
+    a.bulk_insert({"id": np.arange(10), "x": np.arange(10) * 2})
+    b.bulk_insert({"id": np.arange(5), "x": np.arange(5)})
+    with pytest.raises(ValueError):
+        db.table()                       # ambiguous: two tables attached
+    assert len(db.query(Query(), table="a")) == 10
+    assert len(b.query(Query())) == 5
+    with pytest.raises(KeyError):
+        db.table("c")
+    with pytest.raises(ValueError):
+        db.attach("a", LSMStore(sch))
+
+
+# ---------------------------------------------------------------------------
+# Transparent MAV rewrite
+# ---------------------------------------------------------------------------
+
+
+MAV_DEFN = MAVDefinition(
+    group_by=("g",),
+    aggs=(AggSpec("count_star", None, "cnt"), AggSpec("count", "v", "cv"),
+          AggSpec("sum", "v", "sv"), AggSpec("min", "v", "mn")),
+    preds=(Predicate("d", PredOp.BETWEEN, 10, 60),))
+
+
+def _mav_db(nullable_g=False):
+    st = make_store(nullable_g=nullable_g)
+    db = Database(st)
+    db.create_mav("g_view", MAV_DEFN)
+    return db, st
+
+
+def test_mav_rewrite_routes_and_matches_base_scan():
+    db, st = _mav_db()
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+              group_by=("g",),
+              aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"),
+                    QAgg("avg", "v", "av"),       # derived from sv/cv
+                    QAgg("min", "v", "mn")))
+    plan = db.explain(q)
+    assert plan.route == "mav" and plan.mv == "g_view"
+    res = db.query(q)
+    assert res.plan.route == "mav"
+    base = db.query(q, use_mv=False)
+    assert base.plan.route != "mav"
+    assert norm(res.rows) == norm(base.rows)
+
+
+def test_mav_rewrite_parity_under_concurrent_dml():
+    """The acceptance-criteria case: DML lands after the MAV refresh; the
+    rewritten answer (container ⊕ pending mlog merge) must equal the
+    base-table scan at every step."""
+    db, st = _mav_db()
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+              group_by=("g",),
+              aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"),
+                    QAgg("min", "v", "mn")))
+    rng = np.random.default_rng(11)
+    for step in range(4):
+        for _ in range(30):              # inserts / updates / deletes
+            st.insert({"k": 10_000 + step * 100 + _,
+                       "g": int(rng.integers(0, 4)),
+                       "d": int(rng.integers(0, 100)),
+                       "v": float(rng.normal())})
+        for _ in range(10):
+            st.update(int(rng.integers(0, 2000)),
+                      {"d": int(rng.integers(0, 100)),
+                       "v": float(rng.normal())})
+        st.delete(int(rng.integers(0, 2000)))
+        res = db.query(q)
+        assert res.plan.route == "mav" and res.plan.mv_pending > 0
+        want = db.query(q, use_mv=False)
+        assert norm(res.rows) == norm(want.rows), f"diverged at step {step}"
+        if step == 1:
+            db.table().mavs["g_view"].refresh()   # mid-stream refresh
+
+
+def test_mav_rewrite_residual_group_pred_and_sort_limit():
+    db, st = _mav_db()
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),
+                     Predicate("g", PredOp.IN, (1, 2, 3))),
+              group_by=("g",), aggs=(QAgg("sum", "v", "sv"),),
+              sort_by=("g",), limit=2)
+    plan = db.explain(q)
+    assert plan.route == "mav"          # group-col pred is residual
+    res = db.query(q)
+    assert norm(res.rows) == norm(db.query(q, use_mv=False).rows)
+    assert [r["g"] for r in res.rows] == [1, 2]
+
+
+def test_mav_rewrite_skipped_when_preds_do_not_subsume():
+    db, st = _mav_db()
+    base = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    # missing the definition predicate entirely
+    assert db.explain(base).route != "mav"
+    # different range than the definition
+    q2 = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 61),),
+               group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    assert db.explain(q2).route != "mav"
+    # extra non-group-column predicate the container cannot apply
+    q3 = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),
+                      Predicate("v", PredOp.GT, 0.0)),
+               group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    assert db.explain(q3).route != "mav"
+    # group-by mismatch
+    q4 = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+               group_by=("d",), aggs=(QAgg("sum", "v", "sv"),))
+    assert db.explain(q4).route != "mav"
+    # aggregate not derivable from the container (max not stored)
+    q5 = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+               group_by=("g",), aggs=(QAgg("max", "v", "mx"),))
+    assert db.explain(q5).route != "mav"
+    # all still answer correctly via the scan routes
+    for q in (base, q2, q3, q4, q5):
+        assert norm(db.query(q).rows) == \
+            norm(PushdownExecutor().execute(st, q))
+
+
+def test_mav_rewrite_mlog_purged_falls_back_to_scan():
+    db, st = _mav_db()
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+              group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    assert db.explain(q).route == "mav"
+    st.insert({"k": 99_999, "g": 0, "d": 20, "v": 1.0})
+    h = db.table()
+    h.mlog().purge_upto(st.current_ts)   # TTL overtakes the refresh horizon
+    plan = db.explain(q)
+    assert plan.route != "mav", "purged mlog tail must fall back to scan"
+    res = db.query(q)
+    assert norm(res.rows) == norm(PushdownExecutor().execute(st, q))
+
+
+def test_mav_rewrite_stale_horizon_falls_back():
+    st = make_store()
+    db = Database(st, mv_stale_rows=5)
+    db.create_mav("g_view", MAV_DEFN)
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+              group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    assert db.explain(q).route == "mav"
+    for i in range(10):                  # pending tail beyond the horizon
+        st.insert({"k": 50_000 + i, "g": 1, "d": 30, "v": 1.0})
+    assert db.explain(q).route != "mav"
+    db.table().mavs["g_view"].refresh()  # tail applied: fresh again
+    assert db.explain(q).route == "mav"
+    assert norm(db.query(q).rows) == norm(db.query(q, use_mv=False).rows)
+
+
+def test_scan_knob_pins_suppress_mav_rewrite():
+    """n_shards= / device_route= / engine= pins demand a scan route: the
+    transparent rewrite must not swallow them."""
+    db, st = _mav_db()
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 60),),
+              group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    assert db.explain(q).route == "mav"
+    plan = db.explain(q, n_shards=3)
+    assert plan.route == "sharded" and plan.n_shards == 3
+    plan = db.explain(q, device_route="host")
+    assert plan.route == "sharded" and plan.device_route == "host"
+    assert db.explain(q, engine="pushdown").route == "pushdown"
+    res = db.query(q, n_shards=3)
+    assert res.plan.route == "sharded" and res.stats.n_shards == 3
+    assert norm(res.rows) == norm(db.query(q).rows)
+
+
+def test_mav_rewrite_flat_and_snapshot_reads():
+    st = make_store()
+    db = Database(st)
+    db.create_mav("flat", MAVDefinition(
+        group_by=(), aggs=(AggSpec("count_star", None, "cnt"),
+                           AggSpec("sum", "v", "sv"))))
+    q = Query(aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+    assert db.explain(q).route == "mav"
+    assert norm(db.query(q).rows) == norm(db.query(q, use_mv=False).rows)
+    # a snapshot read can never come from the (current-freshness) container
+    assert db.explain(q, ts=st.current_ts).route != "mav"
+
+
+def test_mjv_registration():
+    db = Database()
+    db.create_table("l", schema(("id", ColType.INT), ("fk", ColType.INT)),
+                    memtable_limit=10**6)
+    db.create_table("r", schema(("rid", ColType.INT), ("w", ColType.INT)),
+                    memtable_limit=10**6)
+    for i in range(20):
+        db.table("l").insert({"id": i, "fk": i % 5})
+    for j in range(5):
+        db.table("r").insert({"rid": j, "w": j * 10})
+    mjv = db.create_mjv("lr", MJVDefinition(lkey="fk", rkey="rid",
+                                            rcols=("w",)), "l", "r")
+    assert len(mjv.rows()) == 20
+    db.table("l").insert({"id": 100, "fk": 2})
+    mjv.incremental_refresh()
+    assert len(mjv.rows()) == 21
+
+
+# ---------------------------------------------------------------------------
+# NULL group keys (sentinel slot) across every engine
+# ---------------------------------------------------------------------------
+
+
+def test_null_group_keys_parity_all_engines():
+    """NULL group keys emit one ``None`` group, identical across Scalar /
+    Vector / pushdown / sharded — including merge-on-read incremental
+    rows and multi-key group-bys."""
+    st = make_store(n=400, block_rows=32, seed=7, nullable_g=True)
+    for j in range(400, 430):            # NULL keys in incremental rows too
+        st.insert({"k": j, "g": None if j % 4 == 0 else int(j % 3),
+                   "d": int(j % 100), "v": float(j)})
+    tbl, _ = st.scan()
+    queries = (
+        Query(group_by=("g",),
+              aggs=(QAgg("count", None, "n"), QAgg("count", "v", "cv"),
+                    QAgg("sum", "v", "sv"), QAgg("min", "v", "mn"),
+                    QAgg("avg", "v", "av"))),
+        Query(preds=(Predicate("d", PredOp.LT, 60),), group_by=("g", "d"),
+              aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"))),
+        Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),),
+              sort_by=("g",), limit=3),
+    )
+    for q in queries:
+        want = norm(ScalarEngine().execute(tbl, q))
+        assert norm(VectorEngine().execute(tbl, q)) == want
+        assert norm(PushdownExecutor().execute(st, q)) == want
+        for shards in (1, 3):
+            assert norm(ShardedScanExecutor(n_shards=shards)
+                        .execute(st, q)) == want
+    rows = VectorEngine().execute(tbl, queries[0])
+    assert any(r["g"] is None for r in rows), "None key group must exist"
+
+
+def test_null_group_keys_sort_none_last():
+    """ORDER BY a nullable key: every engine places the NULL key last
+    (matching the sentinel being the largest packed code)."""
+    st = make_store(n=300, block_rows=32, seed=9, nullable_g=True)
+    q = Query(group_by=("g",), aggs=(QAgg("count", None, "n"),),
+              sort_by=("g",))
+    tbl, _ = st.scan()
+    for rows in (ScalarEngine().execute(tbl, q),
+                 VectorEngine().execute(tbl, q),
+                 PushdownExecutor().execute(st, q),
+                 ShardedScanExecutor(n_shards=2).execute(st, q)):
+        keys = [r["g"] for r in rows]
+        assert keys[-1] is None and None not in keys[:-1], keys
+
+
+def test_null_group_keys_topk_pushdown_parity():
+    """Limit-aware top-k over a nullable group key: the per-shard heap
+    truncation must agree with the full merge (None ordered last)."""
+    st = make_store(n=500, block_rows=32, seed=13, nullable_g=True)
+    q = Query(group_by=("g", "d"), aggs=(QAgg("count", None, "n"),),
+              sort_by=("g",), limit=7)
+    push = ShardedScanExecutor(n_shards=3)
+    full = ShardedScanExecutor(n_shards=3, limit_pushdown=False)
+    got, stats = push.execute_stats(st, q)
+    assert stats.topk_pushdown
+    assert norm(got) == norm(full.execute(st, q))
+
+
+@pytest.mark.device
+def test_null_group_keys_device_sentinel():
+    """The device route stages NULL keys into the reserved sentinel slot
+    of the packed code domain and emits None host-side."""
+    st = make_store(n=300, block_rows=32, seed=5, nullable_g=True)
+    # device path needs clean value columns: aggregate over d (never NULL)
+    q = Query(preds=(Predicate("k", PredOp.BETWEEN, 10, 250),),
+              group_by=("g",),
+              aggs=(QAgg("count", None, "n"), QAgg("sum", "d", "sd")))
+    assert plan_device(st, q) is not None
+    ex = PushdownExecutor(device=True)
+    rows, stats = ex.execute_stats(st, q)
+    assert stats.used_device
+    got = norm([{k: (int(v) if isinstance(v, float) and k != "g" else v)
+                 for k, v in r.items()} for r in rows])
+    want = norm(ScalarEngine().execute(st.scan()[0], q))
+    assert got == want
+    assert any(r["g"] is None for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# make_engine deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_make_engine_warns_exactly_once_per_process():
+    engine_mod._make_engine_warned = False       # fresh process state
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e1 = engine_mod.make_engine("vectorized")
+        e2 = engine_mod.make_engine("pushdown")
+        e3 = engine_mod.make_engine("sharded", n_shards=2)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "make_engine" in str(x.message)]
+    assert len(deps) == 1, "must warn exactly once per process"
+    assert "Database" in str(deps[0].message)
+    assert e1.name == "vectorized" and e2.name == "pushdown" \
+        and e3.name == "sharded"
+
+
+# ---------------------------------------------------------------------------
+# Calibration flows through the session (closed loop survives the facade)
+# ---------------------------------------------------------------------------
+
+
+def test_bench_guard_ratio_rules():
+    """scripts/bench_guard.py: guarded ratios fail below 0.9x committed;
+    parity-range ratios, retired keys, and host diagnostics are exempt."""
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parents[1] / "scripts" \
+        / "bench_guard.py"
+    spec = importlib.util.spec_from_file_location("bench_guard", path)
+    bg = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bg)
+    committed = {"suite": {
+        "pushdown_speedup": 20.0,          # guarded win
+        "collective": {"collective_vs_host_2x": 1.4},
+        "speedup_2x": 1.01,                # parity noise: below MIN_GUARDED
+        "parallel_headroom": 2.0,          # host diagnostic: no pattern hit
+        "retired_speedup": 5.0,            # gone in fresh: skipped
+        "n_rows": 1_200_000}}              # plain metric: not a ratio
+    ok = {"suite": {"pushdown_speedup": 18.5,
+                    "collective": {"collective_vs_host_2x": 1.27},
+                    "speedup_2x": 0.4, "parallel_headroom": 0.9,
+                    "n_rows": 5}}
+    assert bg.check(committed, ok) == []
+    bad = {"suite": {"pushdown_speedup": 17.0,   # < 0.9 * 20
+                     "collective": {"collective_vs_host_2x": 1.27}}}
+    fails = bg.check(committed, bad)
+    assert len(fails) == 1 and "pushdown_speedup" in fails[0]
+    assert bg.main(["bench_guard", "/nope.json"]) == 1
+
+
+def test_session_feeds_cost_calibration():
+    st = make_store(n=4000, block_rows=64)
+    db = Database(st)
+    q = Query(preds=(Predicate("d", PredOp.BETWEEN, 20, 40),),
+              aggs=(QAgg("count", None, "n"),))
+    from repro.core import cost
+    db.query(q)
+    cal = cost.calibration(st)
+    assert cal.n_obs, "executors behind the session must observe scans"
