@@ -15,6 +15,11 @@ value is wall-clock noise on a shared host, not recorded wins, and a hard
 are never guarded.  Keys present on only one side are skipped (new metrics
 appear, old ones retire, across PRs).
 
+Keys matching ``overhead_pct`` (e.g. ``fault_hook_overhead_pct``) are held
+to an *absolute* ceiling instead: the fresh value must stay <= 2.0 —
+the clean-path budget the fault-injection layer promises — regardless of
+the committed value.
+
 Exit status: 0 when every guarded ratio holds, 1 with a per-key report
 otherwise (also 1 on unreadable input).
 """
@@ -28,6 +33,25 @@ from typing import Dict, Iterator, Tuple
 THRESHOLD = 0.9          # fresh must be >= THRESHOLD * committed
 MIN_GUARDED = 1.2        # committed ratios below this are parity noise
 PATTERN = re.compile(r"(speedup|_vs_|_vs$)")
+
+# Absolute ceilings (fresh-side only, independent of the committed value):
+# keys naming an overhead percentage must stay under the budget the fault
+# layer promises — the clean path pays <= 2% for the injection hooks and
+# the futures-based shard scheduler.
+OVERHEAD_PATTERN = re.compile(r"overhead_pct")
+OVERHEAD_CEILING = 2.0
+
+
+def overhead_leaves(node, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    """Yield (dotted-path, value) for every overhead-percentage leaf."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}.{k}" if prefix else k
+            if isinstance(v, dict):
+                yield from overhead_leaves(v, path)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and OVERHEAD_PATTERN.search(k):
+                yield path, float(v)
 
 
 def ratio_leaves(node, prefix: str = "") -> Iterator[Tuple[str, float]]:
@@ -56,6 +80,11 @@ def check(baseline: Dict, fresh: Dict) -> list:
             failures.append(
                 f"  {path}: {now:.3f} < {THRESHOLD} * committed "
                 f"{committed:.3f} (= {THRESHOLD * committed:.3f})")
+    for path, now in overhead_leaves(fresh):
+        if now > OVERHEAD_CEILING:
+            failures.append(
+                f"  {path}: {now:.3f}% overhead exceeds the absolute "
+                f"{OVERHEAD_CEILING}% ceiling")
     return failures
 
 

@@ -6,6 +6,13 @@
 #
 #   scripts/check.sh           # fast lane + bench smoke + guard (~2 min)
 #   scripts/check.sh --full    # full tier-1 gate instead of the fast lane
+#   scripts/check.sh --faults  # fault lane: the fault-matrix parity suite
+#                              # (tests/test_faults.py), then the distributed
+#                              # smoke — whose "faults" section injects a
+#                              # straggler, asserts the hedge beats the delay,
+#                              # and records the clean-path hook overhead in
+#                              # BENCH_distributed.json (bench_guard.py holds
+#                              # every *_overhead_pct key to <= 2% absolute)
 #
 # The smoke suites self-check their perf guards and rewrite BENCH_*.json in
 # the repo root, so a green run leaves the recorded trajectory up to date.
@@ -13,8 +20,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAULTS_ONLY=0
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
+elif [[ "${1:-}" == "--faults" ]]; then
+    FAULTS_ONLY=1
+    python -m pytest -q tests/test_faults.py
 else
     python -m pytest -q -m "not device and not slow"
 fi
@@ -33,11 +44,14 @@ for f in BENCH_distributed.json BENCH_vectorized.json; do
 done
 
 python -m benchmarks.run --suite distributed --json BENCH_distributed.json
-python -m benchmarks.run --suite vectorized  --json BENCH_vectorized.json
+if [[ "$FAULTS_ONLY" == 0 ]]; then
+    python -m benchmarks.run --suite vectorized  --json BENCH_vectorized.json
+fi
 
 # regression guard: recorded ratios must hold >= 0.9x the committed values
+# (and *_overhead_pct keys must stay under the 2% absolute ceiling)
 for f in BENCH_distributed.json BENCH_vectorized.json; do
-    [[ -f "$BASELINES/$f" ]] && python scripts/bench_guard.py "$BASELINES/$f" "$f"
+    [[ -f "$f" && -f "$BASELINES/$f" ]] && python scripts/bench_guard.py "$BASELINES/$f" "$f"
 done
 
 echo "check.sh: all green"

@@ -14,6 +14,10 @@ db.query(q)`` routes each query through the cost model (pushdown vs
 sharded fan-out vs registered materialized views); ``engine.make_engine``
 remains as a deprecated shim for hand-picking one executor.
 """
+from .errors import (BlockCorruption, Deadline, KernelLaunchError,
+                     KeyPackError, MLogPurged, QueryError, QueryTimeout,
+                     RouteExhausted, ShardFailure)
+from .faultinject import FaultPlan, corrupt_block, inject
 from .relation import (And, Column, ColumnSpec, ColType, PredOp, Predicate,
                        Schema, Table, schema)
 from .encoding import (ConstEncoded, DeltaFOREncoded, DictEncoded,

@@ -76,6 +76,31 @@ class EncodedColumn:
         return None
 
 
+def payload_checksum(enc: EncodedColumn) -> int:
+    """CRC32 over an encoded block's payload — every dataclass field, with
+    ndarray fields hashed by raw bytes and scalars by repr.  Computed once
+    at baseline build time and re-checked (memoized) on first decode/view,
+    so a bit flip in any encoded buffer surfaces as ``BlockCorruption``
+    instead of a silently wrong answer."""
+    crc = zlib.crc32(enc.kind.encode())
+
+    def fold(crc: int, v) -> int:
+        if isinstance(v, np.ndarray):
+            return zlib.crc32(np.ascontiguousarray(v).tobytes(), crc)
+        if isinstance(v, (list, tuple)):
+            for x in v:
+                crc = fold(crc, x)
+            return crc
+        if isinstance(v, EncodedColumn):
+            return zlib.crc32(str(payload_checksum(v)).encode(), crc)
+        return zlib.crc32(repr(v).encode(), crc)
+
+    for f in dataclasses.fields(enc):
+        crc = zlib.crc32(f.name.encode(), crc)
+        crc = fold(crc, getattr(enc, f.name))
+    return crc
+
+
 def _pack_codes(codes: np.ndarray) -> np.ndarray:
     """Narrow integer codes to the smallest unsigned dtype that fits."""
     if codes.size == 0:

@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .errors import KeyPackError
 from .relation import Column, ColumnSpec, ColType, Predicate, Schema, Table
 
 
@@ -187,15 +188,15 @@ def pack_sort_keys(cols: Sequence[np.ndarray]) -> np.ndarray:
     uint64 whose natural order equals the lexicographic column order."""
     assert 1 <= len(cols) <= 4
     for c in cols:
-        if c.dtype.kind not in "iub":   # ValueError (not a ufunc TypeError)
-            raise ValueError(f"cannot pack non-integer sort key {c.dtype}")
+        if c.dtype.kind not in "iub":
+            raise KeyPackError(f"cannot pack non-integer sort key {c.dtype}")
     bits = 64 // len(cols)
     out = np.zeros(cols[0].shape[0], np.uint64)
     for c in cols:
         lo = int(c.min()) if c.size else 0
         width = int(c.max()) - lo + 1 if c.size else 1
         if width > (1 << bits):
-            raise ValueError("key range too wide to pack")
+            raise KeyPackError("key range too wide to pack")
         out = (out << np.uint64(bits)) | (c.astype(np.int64) - lo).astype(np.uint64)
     return out
 
@@ -358,7 +359,7 @@ class VectorEngine:
                 uniq, first, codes = np.unique(packed, return_index=True,
                                                return_inverse=True)
                 key_rows = [tuple(_item(k[i]) for k in keys) for i in first]
-            except ValueError:
+            except KeyPackError:
                 stacked = np.rec.fromarrays(keys)
                 uniq, codes = np.unique(stacked, return_inverse=True)
                 key_rows = [tuple(_item(x) for x in u) for u in uniq]
@@ -438,7 +439,7 @@ class VectorEngine:
                 order = np.argsort(packed, kind="stable")
             else:
                 order = np.lexsort(list(reversed(cols)))
-        except ValueError:
+        except KeyPackError:
             order = np.lexsort(list(reversed(cols)))
         return [rows[int(i)] for i in order]
 

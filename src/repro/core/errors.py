@@ -1,0 +1,156 @@
+"""Typed query-layer error taxonomy + the per-query deadline primitive.
+
+The paper's headline enterprise claim is "continuous availability": a
+distributed scan must survive a failed shard, a slow replica, a corrupted
+block — and when it cannot, it must fail with a *diagnosable* error, never
+a raw traceback or (worse) a silently wrong answer.  Every executor layer
+(session → router → fan-out → kernels → storage) raises subclasses of
+:class:`QueryError` so callers can pattern-match on exactly what went
+wrong:
+
+* :class:`ShardFailure`      — one shard of the fan-out exhausted its retries
+* :class:`BlockCorruption`   — an encoded block failed checksum verification
+* :class:`KernelLaunchError` — a device kernel launch failed (degradable)
+* :class:`QueryTimeout`      — the per-query deadline expired mid-scan
+* :class:`RouteExhausted`    — every degradation step failed in turn
+* :class:`MLogPurged`        — an MV delta window was purged (recoverable
+  by full refresh; kept a ``RuntimeError`` subclass for back-compat)
+* :class:`KeyPackError`      — sort keys cannot pack into one uint64 word
+  (an internal fallback signal, kept a ``ValueError`` subclass)
+
+The degradation ladder the fan-out walks on these errors — device
+collective → per-shard device launches → host pushdown → single-shard
+vectorized — is recorded step-by-step in ``ScanStats.degraded`` /
+``Plan.degraded`` so a ``ResultSet`` always shows what degraded and why.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Sequence
+
+
+class QueryError(Exception):
+    """Root of the query-layer error taxonomy."""
+
+
+class ShardFailure(QueryError):
+    """One shard of the fan-out failed after exhausting its retry budget."""
+
+    def __init__(self, shard_id: int, attempts: int,
+                 cause: Optional[BaseException] = None):
+        super().__init__(f"shard {shard_id} failed after {attempts} "
+                         f"attempt(s): {cause!r}")
+        self.shard_id = shard_id
+        self.attempts = attempts
+        self.cause = cause
+
+
+class BlockCorruption(QueryError):
+    """An encoded block's payload no longer matches its build-time checksum.
+
+    The block is quarantined (excluded from MAV rewrite eligibility) and the
+    query fails naming the block — never a silently wrong answer."""
+
+    def __init__(self, column: str, block: int, expected: int, actual: int):
+        super().__init__(
+            f"checksum mismatch in column {column!r} block {block}: "
+            f"expected {expected:#010x}, got {actual:#010x} — "
+            f"block quarantined")
+        self.column = column
+        self.block = block
+        self.expected = expected
+        self.actual = actual
+
+
+class KernelLaunchError(QueryError):
+    """A device kernel launch failed.  The fan-out degrades the route
+    (collective → per-shard launches → host pushdown) before giving up."""
+
+    def __init__(self, route: str, cause: Any = None):
+        super().__init__(f"device kernel launch failed on route "
+                         f"{route!r}: {cause!r}")
+        self.route = route
+        self.cause = cause
+
+
+class QueryTimeout(QueryError):
+    """The per-query deadline (``db.query(..., deadline_s=)``) expired.
+    Carries partial-progress stats: how many shards completed and the
+    query-level ``ScanStats`` accumulated so far."""
+
+    def __init__(self, deadline_s: float, elapsed_s: float,
+                 completed: Optional[int] = None, total: Optional[int] = None,
+                 stats: Any = None):
+        progress = (f"; {completed}/{total} shards completed"
+                    if completed is not None and total is not None else "")
+        super().__init__(f"query exceeded deadline {deadline_s:.3f}s "
+                         f"(elapsed {elapsed_s:.3f}s{progress})")
+        self.deadline_s = deadline_s
+        self.elapsed_s = elapsed_s
+        self.completed = completed
+        self.total = total
+        self.stats = stats
+
+
+class RouteExhausted(QueryError):
+    """Every route in the degradation ladder failed.  ``steps`` is the
+    provenance trail of what degraded (and why) before the final failure."""
+
+    def __init__(self, steps: Sequence[str],
+                 cause: Optional[BaseException] = None):
+        trail = " | ".join(steps) if steps else "(no degradation recorded)"
+        super().__init__(f"all execution routes exhausted after: {trail}; "
+                         f"final error: {cause!r}")
+        self.steps = list(steps)
+        self.cause = cause
+
+
+class MLogPurged(QueryError, RuntimeError):
+    """The requested delta window reaches below the mlog's purge horizon:
+    entries in (ts_exclusive, purged_below] are gone, so any delta computed
+    from the surviving tail would be silently incomplete.  Consumers must
+    fall back to a full refresh (which re-reads the base table and purges
+    up to its own snapshot).
+
+    Kept a ``RuntimeError`` subclass: the class predates the taxonomy and
+    existing callers catch it under that contract."""
+
+    def __init__(self, ts_exclusive: int, purged_below: int):
+        super().__init__(
+            f"mlog delta since ts={ts_exclusive} unavailable: entries at or "
+            f"below ts={purged_below} were purged — full refresh required")
+        self.ts_exclusive = ts_exclusive
+        self.purged_below = purged_below
+
+
+class KeyPackError(QueryError, ValueError):
+    """``pack_sort_keys`` cannot pack the key columns into one uint64 word
+    (non-integer dtype or a too-wide value range).  Engines catch exactly
+    this and fall back to record-array / lexsort key handling — a typed
+    signal, so genuine bugs in the packed path no longer hide behind a
+    broad ``except ValueError``.  Kept a ``ValueError`` subclass for any
+    caller still catching the old contract."""
+
+
+class Deadline:
+    """Monotonic per-query deadline.  ``Deadline.start(None)`` returns None
+    so the no-deadline hot path stays a single ``is not None`` check."""
+
+    __slots__ = ("seconds", "_t0")
+
+    def __init__(self, seconds: float):
+        self.seconds = float(seconds)
+        self._t0 = time.monotonic()
+
+    @classmethod
+    def start(cls, seconds: Optional[float]) -> Optional["Deadline"]:
+        return None if seconds is None else cls(seconds)
+
+    def elapsed(self) -> float:
+        return time.monotonic() - self._t0
+
+    def remaining(self) -> float:
+        return self.seconds - self.elapsed()
+
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0

@@ -1,0 +1,152 @@
+"""Deterministic fault-injection harness for the fault-tolerant executors.
+
+A :class:`FaultPlan` describes single-fault scenarios — fail shard N on its
+first K attempts, delay shard N (a straggler), fail the first K device
+kernel launches, fail the first K ``MLog.since`` calls, purge the mlog
+mid-query — and :func:`inject` installs it for the duration of a ``with``
+block.  The executors consult :func:`active` at well-defined points; with
+no plan installed every hook is a single ``is None`` check (zero-cost on
+the clean path, guarded ≤2% by the committed bench smokes).
+
+Determinism: every fault is keyed on explicit counters (shard id, attempt
+number, call ordinal) held inside the plan, never on wall clock or
+randomness, so a scenario replays identically — the property the
+route-degradation parity suite (tests/test_faults.py) is built on.
+
+:func:`corrupt_block` is the storage-level fault: it flips one byte of an
+encoded baseline block's payload (and clears its memoized verification
+bit), which the build-time checksums must catch as
+:class:`~.errors.BlockCorruption` on the next read.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from .errors import KernelLaunchError, MLogPurged
+
+_ACTIVE: Optional["FaultPlan"] = None
+
+
+def active() -> Optional["FaultPlan"]:
+    """The installed plan, or None (the hot-path guard)."""
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(plan: "FaultPlan") -> Iterator["FaultPlan"]:
+    """Install ``plan`` for the duration of the block (re-entrant: the
+    previous plan is restored on exit)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = prev
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One deterministic single-fault scenario.
+
+    * ``fail_shard[s] = k`` — shard ``s`` raises on its first ``k``
+      attempts (attempt numbers 0..k-1); attempt ``k`` succeeds.  With
+      ``k >= max_attempts`` the shard's retry budget exhausts and the
+      executor degrades the route.
+    * ``delay_shard[s] = seconds`` — shard ``s`` sleeps on attempt 0 only
+      (a straggler the hedging path should race past).
+    * ``kernel_failures = k`` — the first ``k`` device kernel launches
+      raise :class:`KernelLaunchError` (collective → per-shard → host
+      pushdown degradation).
+    * ``mlog_since_failures = k`` — the first ``k`` ``MLog.since`` calls
+      raise a transient :class:`MLogPurged` (exercises the bounded retry).
+    * ``purge_mlog_before_read`` — genuinely purge the MAV's mlog tail
+      right before the realtime read (the mid-query purge scenario: the
+      bounded retry cannot help, the purge-fallback full refresh must).
+
+    ``events`` logs every fired fault in order, so tests assert the
+    degradation provenance matches exactly what was injected.
+    """
+
+    fail_shard: Dict[int, int] = dataclasses.field(default_factory=dict)
+    delay_shard: Dict[int, float] = dataclasses.field(default_factory=dict)
+    kernel_failures: int = 0
+    mlog_since_failures: int = 0
+    purge_mlog_before_read: bool = False
+    events: List[str] = dataclasses.field(default_factory=list)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    _kernel_calls: int = dataclasses.field(default=0, repr=False)
+    _mlog_calls: int = dataclasses.field(default=0, repr=False)
+    _purged: bool = dataclasses.field(default=False, repr=False)
+
+    def _record(self, msg: str) -> None:
+        with self._lock:
+            self.events.append(msg)
+
+    # ------------------------------------------------------------- hooks
+    def on_shard_attempt(self, shard_id: int, attempt: int) -> None:
+        """Called at the start of every shard attempt.  Hedge dispatches
+        pass ``attempt=-1``: a hedge races the original straggler, so
+        neither the attempt-0 delay nor the attempt-counted failures
+        re-fire on it."""
+        if attempt < 0:
+            return
+        d = self.delay_shard.get(shard_id)
+        if d and attempt == 0:
+            self._record(f"delay shard {shard_id} by {d:.3f}s")
+            time.sleep(d)
+        if attempt < self.fail_shard.get(shard_id, 0):
+            self._record(f"fail shard {shard_id} attempt {attempt}")
+            raise RuntimeError(
+                f"injected fault: shard {shard_id} attempt {attempt}")
+
+    def on_kernel_launch(self, route: str) -> None:
+        with self._lock:
+            self._kernel_calls += 1
+            n = self._kernel_calls
+        if n <= self.kernel_failures:
+            self._record(f"kernel fault on {route!r} launch #{n}")
+            raise KernelLaunchError(route, f"injected kernel fault #{n}")
+
+    def on_mlog_since(self, ts_exclusive: int) -> None:
+        with self._lock:
+            self._mlog_calls += 1
+            n = self._mlog_calls
+        if n <= self.mlog_since_failures:
+            self._record(f"transient mlog purge on since() call #{n}")
+            raise MLogPurged(ts_exclusive, ts_exclusive + 1)
+
+    def on_mav_read(self, mav) -> None:
+        """Mid-query purge: fires once, right before the MAV realtime read
+        merges the pending tail (i.e. after planning chose the mav route)."""
+        if self.purge_mlog_before_read and not self._purged \
+                and mav.mlog is not None:
+            self._purged = True
+            n = mav.mlog.purge_upto(mav.base.current_ts)
+            self._record(f"purged mlog mid-query ({n} entries)")
+
+
+def corrupt_block(store, column: str, block: int = 0) -> str:
+    """Flip one byte in the payload of one encoded baseline block —
+    storage-level corruption the build-time checksum must catch on the next
+    decode/view.  Clears the block's memoized verification bit so detection
+    is deterministic even if the block was already read.  Returns the name
+    of the corrupted payload field."""
+    cst = store.baseline.cols[column]
+    enc = cst.blocks[block]
+    for f in dataclasses.fields(enc):
+        v = getattr(enc, f.name)
+        if isinstance(v, np.ndarray) and v.size:
+            w = np.ascontiguousarray(v).copy()
+            w.view(np.uint8).reshape(-1)[0] ^= 0x5A
+            setattr(enc, f.name, w)
+            cst.mark_unverified(block)
+            return f.name
+    raise ValueError(
+        f"block {block} of column {column!r} has no array payload to corrupt")

@@ -25,7 +25,8 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .encoding import EncodedColumn, choose_encoding
+from .encoding import EncodedColumn, choose_encoding, payload_checksum
+from .errors import BlockCorruption
 from .relation import And, Column, ColType, PredOp, Predicate, Schema, Table
 from .skipping import Sketch, SkippingIndex, Verdict, DEFAULT_BLOCK_ROWS
 from .vec import BatchAttrs
@@ -140,11 +141,43 @@ class ColumnSSTable:
     block_rows: int
     nrows: int
     null_blocks: Optional[List[np.ndarray]] = None
+    # build-time CRC32 per block (None: pre-checksum SSTable, verification
+    # disabled); ``quarantined`` collects block ids that failed verification
+    # — the store excludes itself from MAV rewrites while any block is
+    # quarantined, and the failed read raises ``BlockCorruption``.
+    checksums: Optional[List[int]] = None
+    quarantined: set = dataclasses.field(default_factory=set)
+    _verified: Optional[List[bool]] = dataclasses.field(
+        default=None, repr=False)
 
     def nbytes(self) -> int:
         return sum(b.nbytes() for b in self.blocks) + self.index.nbytes()
 
+    def verify_block(self, b: int) -> None:
+        """Checksum-verify block ``b`` against its build-time CRC, memoized
+        (one CRC pass per block per SSTable lifetime, so the clean-path
+        overhead is a list lookup).  Raises ``BlockCorruption`` and
+        quarantines the block on mismatch."""
+        if self.checksums is None:
+            return
+        if self._verified is None:
+            self._verified = [False] * len(self.blocks)
+        if self._verified[b]:
+            return
+        got = payload_checksum(self.blocks[b])
+        if got != self.checksums[b]:
+            self.quarantined.add(b)
+            raise BlockCorruption(self.name, b, self.checksums[b], got)
+        self._verified[b] = True
+
+    def mark_unverified(self, b: int) -> None:
+        """Drop block ``b``'s memoized verification (fault injection: a
+        just-corrupted block must be re-checked on its next read)."""
+        if self._verified is not None:
+            self._verified[b] = False
+
     def decode_block(self, b: int) -> np.ndarray:
+        self.verify_block(b)
         return self.blocks[b].decode()
 
     def block_nulls(self, b: int) -> Optional[np.ndarray]:
@@ -157,7 +190,8 @@ class ColumnSSTable:
     def decode_all(self) -> np.ndarray:
         if not self.blocks:
             return np.empty((0,))
-        return np.concatenate([b.decode() for b in self.blocks])
+        return np.concatenate([self.decode_block(b)
+                               for b in range(len(self.blocks))])
 
 
 @dataclasses.dataclass
@@ -211,6 +245,8 @@ class VirtualSSTable:
 
     def block_view(self, b: int, columns: Sequence[str]) -> BlockView:
         lo, hi = self.block_bounds(b)
+        for c in columns:
+            self.cols[c].verify_block(b)
         encoded = {c: self.cols[c].blocks[b] for c in columns}
         sketches = {c: self.cols[c].index.leaf_sketch(b) for c in columns}
         nulls = {c: self.cols[c].block_nulls(b) for c in columns}
@@ -267,7 +303,9 @@ class VirtualSSTable:
                 null_blocks = [np.ascontiguousarray(nulls[s:s + block_rows])
                                for s in range(0, n, block_rows)]
             cols[spec.name] = ColumnSSTable(spec.name, blocks, index,
-                                            block_rows, n, null_blocks)
+                                            block_rows, n, null_blocks,
+                                            checksums=[payload_checksum(b)
+                                                       for b in blocks])
             decoded_peers[spec.name] = vals
         return VirtualSSTable(schema, version, sorted_tbl.col(pk_name).values,
                               cols, block_rows)
@@ -296,6 +334,14 @@ class ScanStats:
     device_route: str = ""             # 'collective' | 'host' when used_device
     n_devices: int = 0                 # scan-mesh size the device fan-out saw
     topk_pushdown: bool = False        # per-shard limit-aware top-k ran
+    # --- fault-tolerance provenance ------------------------------------
+    degraded: List[str] = dataclasses.field(default_factory=list)
+    #                                  # route-degradation ladder steps, in
+    #                                  # order, each "from->to: why"
+    shard_retries: int = 0             # shard attempts beyond the first
+    hedges: int = 0                    # straggler back-up dispatches
+    purge_fallback: bool = False       # MAV read fell back to full refresh
+    mlog_retries: int = 0              # bounded MLog.since retries that ran
 
     def absorb(self, other: "ScanStats") -> None:
         """Fold one shard's counters into the query-level stats (the
@@ -741,6 +787,12 @@ class LSMStore:
         raise ValueError(agg)
 
     # --- introspection ------------------------------------------------------
+
+    def has_quarantined_blocks(self) -> bool:
+        """True when any baseline block failed checksum verification —
+        such a store is excluded from MAV rewrite eligibility (a container
+        built over corrupted blocks cannot be trusted)."""
+        return any(c.quarantined for c in self.baseline.cols.values())
 
     def incremental_fraction(self) -> float:
         inc = len(self.memtable) + sum(len(m) for m in self.minors)

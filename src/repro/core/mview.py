@@ -41,6 +41,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import faultinject
+from .errors import MLogPurged
 from .lsm import DmlType, LSMStore
 from .relation import Column, ColumnSpec, ColType, Predicate, Schema, Table
 
@@ -58,19 +60,8 @@ class MLogEntry:
     row: Dict[str, Any]
 
 
-class MLogPurged(RuntimeError):
-    """The requested delta window reaches below the mlog's purge horizon:
-    entries in (ts_exclusive, purged_below] are gone, so any delta computed
-    from the surviving tail would be silently incomplete.  Consumers must
-    fall back to a full refresh (which re-reads the base table and purges
-    up to its own snapshot)."""
-
-    def __init__(self, ts_exclusive: int, purged_below: int):
-        super().__init__(
-            f"mlog delta since ts={ts_exclusive} unavailable: entries at or "
-            f"below ts={purged_below} were purged — full refresh required")
-        self.ts_exclusive = ts_exclusive
-        self.purged_below = purged_below
+# MLogPurged lives in core/errors.py (part of the QueryError taxonomy) and
+# stays importable from here, where its consumers historically find it.
 
 
 class MLog:
@@ -98,6 +89,9 @@ class MLog:
         :class:`MLogPurged` when ``purge_upto`` already trimmed entries
         above ``ts_exclusive`` — the surviving tail would be an incomplete
         delta, which previously was returned silently."""
+        fp = faultinject.active()
+        if fp is not None:
+            fp.on_mlog_since(ts_exclusive)
         if ts_exclusive < self.purged_below:
             raise MLogPurged(ts_exclusive, self.purged_below)
         hi = math.inf if ts_inclusive is None else ts_inclusive
@@ -180,8 +174,24 @@ class MaterializedAggView:
         self._col_container: Optional[Dict[str, np.ndarray]] = None
         self.stats = {"full_refreshes": 0, "incr_refreshes": 0,
                       "rows_processed": 0, "groups_recomputed": 0,
-                      "mlog_purged": 0, "purge_full_refreshes": 0}
+                      "mlog_purged": 0, "purge_full_refreshes": 0,
+                      "mlog_retries": 0}
         self.full_refresh()
+
+    def _since_with_retry(self, ts_exclusive: int,
+                          ts_inclusive: Optional[int] = None,
+                          retries: int = 1) -> List[MLogEntry]:
+        """``MLog.since`` with one bounded retry before the purge fallback:
+        a transiently failing read (fault injection, or a purge racing the
+        first call) gets a second chance; a genuine purge raises on both
+        attempts and the caller full-refreshes."""
+        for attempt in range(retries + 1):
+            try:
+                return self.mlog.since(ts_exclusive, ts_inclusive)
+            except MLogPurged:
+                if attempt >= retries:
+                    raise
+                self.stats["mlog_retries"] += 1
 
     # ---- helpers ----------------------------------------------------------
 
@@ -329,7 +339,7 @@ class MaterializedAggView:
             return self.full_refresh(ts)
         ts = self.base.current_ts if ts is None else ts
         try:
-            entries = self.mlog.since(self.last_refresh_ts, ts)
+            entries = self._since_with_retry(self.last_refresh_ts, ts)
         except MLogPurged:
             # TTL purge overtook our refresh horizon: the algebraic delta is
             # unrecoverable, rebuild the container from the base table.
@@ -422,8 +432,11 @@ class MaterializedAggView:
     def query(self, realtime: bool = True) -> Table:
         groups = self.groups
         if realtime and self.mlog is not None:
+            fp = faultinject.active()
+            if fp is not None:
+                fp.on_mav_read(self)
             try:
-                pending = self.mlog.since(self.last_refresh_ts)
+                pending = self._since_with_retry(self.last_refresh_ts)
             except MLogPurged:
                 # The not-yet-applied tail was purged out from under us:
                 # the container + tail merge cannot be trusted, so rebuild

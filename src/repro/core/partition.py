@@ -51,18 +51,26 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from concurrent.futures import ThreadPoolExecutor
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import cost
+from . import faultinject
 from . import pushdown as _pd
 from .engine import (Query, VectorEngine, _item, null_aware_key_codes,
                      null_last_key, pack_sort_keys)
+from .errors import (BlockCorruption, Deadline, KeyPackError, QueryTimeout,
+                     RouteExhausted, ShardFailure)
 from .lsm import LSMStore, ScanStats, VirtualSSTable
 from .relation import ColType, Column
 from .skipping import Verdict
+
+#: sentinel distinguishing "shard not finished" from a legitimate None result
+_PENDING = object()
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +196,7 @@ class GroupedPartial:
                                                 return_inverse=True)
                     keys = [tuple(_item(k[i]) for k in keyarrs)
                             for i in first]
-                except ValueError:
+                except KeyPackError:
                     stacked = np.rec.fromarrays(keyarrs)
                     uniq, codes = np.unique(stacked, return_inverse=True)
                     keys = [tuple(_item(x) for x in u) for u in uniq]
@@ -451,7 +459,10 @@ class ShardedScanExecutor:
                  engine: Optional[VectorEngine] = None,
                  max_workers: Optional[int] = None,
                  device_route: Optional[str] = None,
-                 limit_pushdown: bool = True):
+                 limit_pushdown: bool = True,
+                 max_attempts: int = 3,
+                 retry_backoff_s: float = 0.02,
+                 hedge: bool = True):
         # n_shards None == cost-based: the planner picks the fan-out width
         # per query from the estimated surviving-row count (a selective
         # probe stays single-shard, a full scan fans out to the cores).
@@ -469,6 +480,14 @@ class ShardedScanExecutor:
         # limit_pushdown False pins the full-merge-then-sort baseline even
         # for pushable top-k shapes (benchmarks measure the heap win).
         self.limit_pushdown = limit_pushdown
+        # Fault-tolerance knobs: transient per-shard failures retry up to
+        # max_attempts with exponential backoff; hedge=True re-dispatches
+        # the slowest outstanding shard once when it runs past ~p95 of the
+        # completed shard times (first finisher wins, merge order is still
+        # by shard position so results stay bit-identical).
+        self.max_attempts = max(int(max_attempts), 1)
+        self.retry_backoff_s = retry_backoff_s
+        self.hedge = hedge
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -478,11 +497,13 @@ class ShardedScanExecutor:
         return rows
 
     def execute_stats(self, store: LSMStore, q: Query,
-                      ts: Optional[int] = None
+                      ts: Optional[int] = None, *,
+                      deadline_s: Optional[float] = None
                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         ts = store.current_ts if ts is None else ts
         stats = ScanStats(used_pushdown=True)
         self.last_stats = stats
+        deadline = Deadline.start(deadline_s)
 
         # -- stages 0–1 shared with PushdownExecutor: merge-on-read
         # bookkeeping + global zone-map prune (verdicts sliced per shard)
@@ -508,28 +529,170 @@ class ShardedScanExecutor:
 
         str_aggs = any(store.schema.spec(a.column).ctype == ColType.STR
                        for a in q.aggs if a.column)
-        if q.aggs and not str_aggs:
-            rows = self._execute_partials(store, q, needed, shards, verdicts,
-                                          over, inc_rows, stats, coalesce)
-        else:
-            rows = self._execute_gather(store, q, needed, shards, verdicts,
-                                        over, inc_rows, stats, coalesce)
+        try:
+            if q.aggs and not str_aggs:
+                rows = self._execute_partials(store, q, needed, shards,
+                                              verdicts, over, inc_rows, stats,
+                                              coalesce, deadline)
+            else:
+                rows = self._execute_gather(store, q, needed, shards,
+                                            verdicts, over, inc_rows, stats,
+                                            coalesce, deadline)
+        except (QueryTimeout, BlockCorruption):
+            raise                   # deterministic: retrying cannot help
+        except Exception as e:
+            # Last rung of the degradation ladder: a shard failed even
+            # after retries (or the merge itself blew up), so fall back to
+            # one unsharded full-decode scan through VectorEngine.
+            stats.degraded.append(
+                f"sharded->vectorized: {type(e).__name__}: {e}")
+            return self._vectorized_fallback(store, q, ts, stats, e), stats
         cost.observe_scan(store, est, stats.actual_rows)
         return rows, stats
 
+    def _vectorized_fallback(self, store, q, ts, stats, cause
+                             ) -> List[Dict[str, Any]]:
+        try:
+            needed = sorted(VectorEngine.columns_needed(q,
+                                                        store.schema.names))
+            tbl, _ = store.scan(columns=list(needed), ts=ts)
+            return self.engine.execute(tbl, q)
+        except (QueryTimeout, BlockCorruption):
+            raise
+        except Exception as e:
+            raise RouteExhausted(stats.degraded, e) from cause
+
     # -------------------------------------------------- shard scheduling
-    def _map_shards(self, fn, shards: Sequence[BlockShard]) -> List[Any]:
+    def _map_shards(self, fn, shards: Sequence[BlockShard],
+                    stats: Optional[ScanStats] = None,
+                    deadline: Optional[Deadline] = None) -> List[Any]:
+        """Fault-tolerant shard fan-out.
+
+        Each shard runs through a per-shard retry loop (transient errors
+        back off exponentially up to ``max_attempts``; corruption and
+        timeouts are deterministic and propagate immediately).  The pool
+        path completes futures as they finish, enforces the per-query
+        deadline with partial-progress accounting, and hedges the slowest
+        outstanding shard once when it runs past ~p95 of the completed
+        shard times.  Results are indexed by shard *position*, so the
+        downstream merge order — and therefore float aggregation — is
+        bit-identical whether the primary or the hedge twin wins."""
         active = [s for s in shards if s.n_blocks]
+        if not active:
+            return []
+        if stats is None:
+            stats = ScanStats()
+        fp = faultinject.active()
+        lock = threading.Lock()
+
+        def run(shard: BlockShard, attempt: int):
+            if fp is not None:
+                fp.on_shard_attempt(shard.shard_id, attempt)
+            return fn(shard)
+
+        def run_retry(shard: BlockShard):
+            last: Optional[BaseException] = None
+            for attempt in range(self.max_attempts):
+                if deadline is not None and deadline.expired():
+                    raise QueryTimeout(deadline.seconds, deadline.elapsed(),
+                                       stats=stats)
+                try:
+                    return run(shard, attempt)
+                except (QueryTimeout, BlockCorruption):
+                    raise           # deterministic: a retry cannot help
+                except Exception as e:
+                    last = e
+                    if attempt + 1 >= self.max_attempts:
+                        break
+                    with lock:
+                        stats.shard_retries += 1
+                    if self.retry_backoff_s:
+                        time.sleep(self.retry_backoff_s * (2 ** attempt))
+            raise ShardFailure(shard.shard_id, self.max_attempts, last)
+
+        def run_hedge(shard: BlockShard):
+            # attempt=-1: injected attempt-0 delays/failures must not
+            # re-fire on the hedge twin, or hedging could never win
+            return run(shard, -1)
+
         workers = min(len(active),
                       self.max_workers or os.cpu_count() or 1)
         if workers <= 1:
-            return [fn(s) for s in active]
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            return list(pool.map(fn, active))
+            return [run_retry(s) for s in active]
+
+        results: List[Any] = [_PENDING] * len(active)
+        errors: Dict[int, BaseException] = {}
+        done_times: List[float] = []
+        hedged: Optional[int] = None
+        t0 = time.monotonic()
+        # one spare slot so the hedge twin never queues behind a straggler
+        pool = ThreadPoolExecutor(max_workers=workers + 1)
+        try:
+            futs = {pool.submit(run_retry, s): i
+                    for i, s in enumerate(active)}
+            pending = set(futs)
+            while any(r is _PENDING for r in results):
+                if not pending:
+                    # every future resolved yet a slot is unfilled: its
+                    # primary (and hedge, if any) both failed
+                    raise next(iter(errors.values()))
+                timeout = (max(deadline.remaining(), 0.0)
+                           if deadline is not None else None)
+                if self.hedge and hedged is None and len(done_times) >= 2:
+                    # poll so the straggler check below runs periodically
+                    timeout = (0.02 if timeout is None
+                               else min(timeout, 0.02))
+                done, pending = wait(pending, timeout=timeout,
+                                     return_when=FIRST_COMPLETED)
+                now = time.monotonic()
+                for f in done:
+                    i = futs[f]
+                    exc = f.exception()
+                    if results[i] is not _PENDING:
+                        continue        # hedge twin already resolved it
+                    if exc is None:
+                        results[i] = f.result()
+                        done_times.append(now - t0)
+                        continue
+                    if isinstance(exc, (QueryTimeout, BlockCorruption)):
+                        raise exc       # deterministic across twins
+                    errors.setdefault(i, exc)
+                    if any(futs[p] == i for p in pending):
+                        continue        # the twin may still rescue it
+                    e = errors[i]
+                    if not isinstance(e, ShardFailure):
+                        e = ShardFailure(active[i].shard_id, 1, e)
+                    raise e
+                if (deadline is not None and deadline.expired()
+                        and any(r is _PENDING for r in results)):
+                    n_done = sum(r is not _PENDING for r in results)
+                    raise QueryTimeout(deadline.seconds, deadline.elapsed(),
+                                       completed=n_done, total=len(active),
+                                       stats=stats)
+                if (self.hedge and hedged is None and pending
+                        and len(done_times) >= 2):
+                    p95 = float(np.percentile(done_times, 95))
+                    if now - t0 > max(2.0 * p95, p95 + 0.05):
+                        # all primaries started together, so every
+                        # outstanding shard is a straggler; re-dispatch
+                        # the lowest position for determinism
+                        i = min(futs[p] for p in pending
+                                if results[futs[p]] is _PENDING)
+                        hf = pool.submit(run_hedge, active[i])
+                        futs[hf] = i
+                        pending.add(hf)
+                        hedged = i
+                        with lock:
+                            stats.hedges += 1
+            return results
+        finally:
+            # wait=False: a straggler sleeping in an injected delay must
+            # not block the query that already has its answer
+            pool.shutdown(wait=False, cancel_futures=True)
 
     # ------------------------------------------------- partial-agg path
     def _execute_partials(self, store, q, needed, shards, verdicts, over,
-                          inc_rows, stats, coalesce=1
+                          inc_rows, stats, coalesce=1, deadline=None
                           ) -> List[Dict[str, Any]]:
         mat_cols = sorted(set(q.group_by)
                           | {a.column for a in q.aggs if a.column})
@@ -548,7 +711,7 @@ class ShardedScanExecutor:
             sketch = _pd._SketchAgg(q) if flat else None
             filtered = _pd.filter_blocks(store, q, needed, verdicts, over,
                                          shard.block_ids(), sstats, sketch,
-                                         coalesce)
+                                         coalesce, deadline=deadline)
             cols, masks = _pd.PushdownExecutor._materialize(
                 store, mat_cols, filtered, (), with_nulls=True)
             n = sum(fb.n_selected for fb in filtered)
@@ -562,7 +725,7 @@ class ShardedScanExecutor:
                 partial = partial.topk(q, k)
             return partial, sstats
 
-        results = self._map_shards(scan_shard, shards)
+        results = self._map_shards(scan_shard, shards, stats, deadline)
         partials = [p for p, _ in results]
         for _, sstats in results:
             stats.absorb(sstats)
@@ -582,7 +745,8 @@ class ShardedScanExecutor:
 
     # ---------------------------------------------- gather (projection)
     def _execute_gather(self, store, q, needed, shards, verdicts, over,
-                        inc_rows, stats, coalesce=1) -> List[Dict[str, Any]]:
+                        inc_rows, stats, coalesce=1, deadline=None
+                        ) -> List[Dict[str, Any]]:
         # Projection top-k pushdown: with sort columns materialized per
         # shard, each shard keeps only its limit-first rows (stable order
         # preserved, so cross-shard ties break exactly as the unsharded
@@ -597,7 +761,7 @@ class ShardedScanExecutor:
             sstats = ScanStats()
             filtered = _pd.filter_blocks(store, q, needed, verdicts, over,
                                          shard.block_ids(), sstats, None,
-                                         coalesce)
+                                         coalesce, deadline=deadline)
             cols, masks = _pd.PushdownExecutor._materialize(
                 store, needed, filtered, (), with_nulls=True)
             n = sum(fb.n_selected for fb in filtered)
@@ -606,7 +770,7 @@ class ShardedScanExecutor:
                 cols, masks, n = _topk_rows(cols, masks, n, q.sort_by, k)
             return cols, masks, n, sstats
 
-        results = self._map_shards(scan_shard, shards)
+        results = self._map_shards(scan_shard, shards, stats, deadline)
         for _, _, _, sstats in results:
             stats.absorb(sstats)
         parts = {name: [c[name] for c, _, n, _ in results if n]
@@ -664,15 +828,47 @@ class ShardedScanExecutor:
         route = self.device_route or cost.choose_device_route(
             est, stats.n_devices, len(active))
         stats.device_route = route
+        fp = faultinject.active()
+        out = None
         if route == "collective":
-            out = self._device_collective(q, plan, stage, active, block_mask,
-                                          mesh, tile, stats, ops)
-        else:
-            devices = scan_shard_devices(len(shards), mesh)
-            launched = launch_shard_kernels(plan, stage, active, block_mask,
-                                            devices, tile)
-            partials = [tuple(np.asarray(x) for x in o) for o in launched]
-            out = tree_reduce(partials, device_partial_combine) + (None,)
+            try:
+                if fp is not None:
+                    fp.on_kernel_launch("collective")
+                out = self._device_collective(q, plan, stage, active,
+                                              block_mask, mesh, tile, stats,
+                                              ops)
+            except (QueryTimeout, BlockCorruption):
+                raise
+            except Exception as e:
+                # rung 1: the single-launch collective failed — fall back
+                # to per-shard device launches with a host-side merge
+                stats.degraded.append(
+                    "device-collective->per-shard-device: "
+                    f"{type(e).__name__}: {e}")
+                stats.device_route = route = "host"
+        if out is None:
+            try:
+                devices = scan_shard_devices(len(shards), mesh)
+                launched = launch_shard_kernels(plan, stage, active,
+                                                block_mask, devices, tile)
+                partials = [tuple(np.asarray(x) for x in o)
+                            for o in launched]
+                out = tree_reduce(partials, device_partial_combine) + (None,)
+            except (QueryTimeout, BlockCorruption):
+                raise
+            except Exception as e:
+                # rung 2: per-shard kernel launches failed too — undo the
+                # device accounting (the host pushdown path re-counts with
+                # += as it scans) and hand the query back to the caller
+                stats.degraded.append(
+                    "per-shard-device->host-pushdown: "
+                    f"{type(e).__name__}: {e}")
+                stats.used_device = False
+                stats.device_route = ""
+                stats.blocks_skipped = 0
+                stats.blocks_scanned = 0
+                stats.n_devices = 0
+                return None
         g_cnt, g_sums, g_mins, g_maxs, g_ids = out
         if g_ids is None:          # top-k-sliced runs record total already
             stats.actual_rows = int(np.asarray(g_cnt).sum())
@@ -778,8 +974,11 @@ def launch_shard_kernels(plan, stage, shards: Sequence[BlockShard],
     runs."""
     import jax
     from ..kernels import ops
+    fp = faultinject.active()
     outs = []
     for shard in shards:
+        if fp is not None:
+            fp.on_kernel_launch("host")
         sl = slice(shard.lo_block, shard.hi_block)
         dev = devices[shard.shard_id % len(devices)]
         ins = [stage.deltas[sl], stage.bases[sl], stage.counts[sl],
@@ -829,7 +1028,7 @@ def _topk_rows(cols: Dict[str, np.ndarray],
                 keep = np.sort(cand[order[:k]])
             else:
                 keep = np.sort(np.argsort(packed, kind="stable")[:k])
-    except ValueError:
+    except KeyPackError:
         pass
     if keep is None:
         keep = np.sort(np.lexsort(list(reversed(keys)))[:k])

@@ -60,8 +60,10 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import cost
+from . import faultinject
 from .encoding import DeltaFOREncoded, DictEncoded, PlainEncoded
 from .engine import Query, VectorEngine, _item
+from .errors import BlockCorruption, Deadline, QueryTimeout
 from .lsm import BlockView, LSMStore, ScanStats, eval_block_pred
 from .relation import ColType, Column, PredOp
 from .skipping import Sketch, Verdict
@@ -198,7 +200,9 @@ def filter_blocks(store: LSMStore, q: Query, needed: Sequence[str],
                   block_ids: Iterable[int], stats: ScanStats,
                   sketch: Optional[_SketchAgg] = None,
                   coalesce: int = 1,
-                  sub_block: bool = True) -> List["_FilteredBlock"]:
+                  sub_block: bool = True,
+                  deadline: Optional[Deadline] = None
+                  ) -> List["_FilteredBlock"]:
     """Stage 2 of the pushdown pipeline over an arbitrary block subset:
     zone-map verdict dispatch, null-aware encoded-domain predicate
     evaluation, merge-on-read exclusion of overridden baseline rows.
@@ -256,6 +260,9 @@ def filter_blocks(store: LSMStore, q: Query, needed: Sequence[str],
     # granularity stays block-at-a-time, the sweep baseline)
     single_pred = (q.preds[0] if sub_block and len(q.preds) == 1 else None)
     for b in live:
+        if deadline is not None and deadline.expired():
+            raise QueryTimeout(deadline.seconds, deadline.elapsed(),
+                               stats=stats)
         b = int(b)
         lo, hi = base.block_bounds(b)
         excl = over[(over >= lo) & (over < hi)] - lo if over.size else None
@@ -331,11 +338,14 @@ class PushdownExecutor:
         rows, stats = self.execute_stats(store, q, ts)
         return rows
 
-    def execute_stats(self, store: LSMStore, q: Query, ts: Optional[int] = None
+    def execute_stats(self, store: LSMStore, q: Query,
+                      ts: Optional[int] = None, *,
+                      deadline_s: Optional[float] = None
                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         ts = store.current_ts if ts is None else ts
         stats = ScanStats(used_pushdown=True)
         self.last_stats = stats
+        deadline = Deadline.start(deadline_s)
 
         # -- stages 0–1: merge-on-read bookkeeping + zone-map prune ------
         needed, over, inc_rows, verdicts = scan_preamble(store, q, ts, stats)
@@ -366,7 +376,7 @@ class PushdownExecutor:
         # -- stage 2: encoded-domain filter ------------------------------
         filtered = filter_blocks(store, q, needed, verdicts, over,
                                  range(nb), stats, sketch, coalesce,
-                                 sub_block=adaptive)
+                                 sub_block=adaptive, deadline=deadline)
         stats.actual_rows = (sum(fb.n_selected for fb in filtered)
                              + (sketch.n_rows if sketch is not None else 0))
         cost.observe_scan(store, est, stats.actual_rows)
@@ -525,10 +535,25 @@ class PushdownExecutor:
             tile = cost.choose_device_tile(est, store.baseline.block_rows)
         stats.device_tile_blocks = tile
         from ..kernels import ops
-        g_cnt, g_sums, g_mins, g_maxs = ops.fused_scan_agg(
-            stage.deltas, stage.bases, stage.counts, plan.lo, plan.hi,
-            stage.codes, stage.values, ndv=stage.ndv, block_mask=block_mask,
-            coalesce=tile)
+        try:
+            fp = faultinject.active()
+            if fp is not None:
+                fp.on_kernel_launch("pushdown")
+            g_cnt, g_sums, g_mins, g_maxs = ops.fused_scan_agg(
+                stage.deltas, stage.bases, stage.counts, plan.lo, plan.hi,
+                stage.codes, stage.values, ndv=stage.ndv,
+                block_mask=block_mask, coalesce=tile)
+        except (QueryTimeout, BlockCorruption):
+            raise
+        except Exception as e:
+            # degrade to the host pushdown scan: undo the device accounting
+            # (filter_blocks re-counts with += as it scans)
+            stats.degraded.append(
+                f"device->host-pushdown: {type(e).__name__}: {e}")
+            stats.used_device = False
+            stats.blocks_skipped = 0
+            stats.blocks_scanned = 0
+            return None
         g_cnt = np.asarray(g_cnt)
         stats.actual_rows = int(g_cnt.sum())
         return emit_device_groups(
@@ -682,13 +707,16 @@ def stage_device(store: LSMStore, plan: DevicePlan) -> Optional[DeviceStage]:
         n = bhi - blo
         counts[b] = n
         if plan.pred_col is not None:
-            enc = base.cols[plan.pred_col].blocks[b]
+            cst = base.cols[plan.pred_col]
+            cst.verify_block(b)        # raw payload access skips decode_block
+            enc = cst.blocks[b]
             if isinstance(enc, DeltaFOREncoded):   # already in offset domain
                 deltas[b, :n] = enc.deltas
                 bases[b] = enc.base
             else:
                 deltas[b, :n] = enc.decode()
         for k, g in enumerate(plan.group_cols):
+            base.cols[g].verify_block(b)
             genc = base.cols[g].blocks[b]
             if isinstance(genc, DictEncoded):      # map codes, never decode
                 remap = remaps[k].get(id(genc))

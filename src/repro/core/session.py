@@ -195,6 +195,11 @@ class Plan:
     logical: Optional[LogicalPlan] = None
     rewrite: Optional[Dict[str, Any]] = dataclasses.field(
         default=None, repr=False)      # MV emit mapping (execution detail)
+    # Fault provenance: every degradation step the query took, in order
+    # ("from->to: why" strings — plan-time entries first, then the
+    # executor's ScanStats.degraded), plus bounded MLog.since retries.
+    degraded: List[str] = dataclasses.field(default_factory=list)
+    mlog_retries: int = 0
 
     def describe(self) -> str:
         bits = [f"route={self.route}"]
@@ -207,6 +212,8 @@ class Plan:
         bits.append(f"est_rows={self.est_rows:.0f}/{self.n_rows}")
         if self.pinned:
             bits.append("pinned")
+        if self.degraded:
+            bits.append("degraded=[" + "; ".join(self.degraded) + "]")
         return f"Plan({', '.join(bits)}: {self.reason})"
 
 
@@ -262,20 +269,36 @@ def mav_rewrite(logical: LogicalPlan,
     return {"residual": residual, "emit": emit}
 
 
-def _mav_pending(mav: MaterializedAggView,
-                 stale_rows: int) -> Optional[int]:
+def _mav_pending(mav: MaterializedAggView, stale_rows: int,
+                 plan: Optional["Plan"] = None) -> Optional[int]:
     """Delta freshness through the MLog: the number of pending (unapplied)
     mlog rows the realtime merge would fold in, or None when the rewrite
     must not run — the tail was purged (``MLogPurged``: the merge would be
     silently incomplete), the tail is past the staleness horizon (the
     Python row-at-a-time merge would cost more than a vectorized base
-    scan), or the MAV has no mlog and its container predates the base."""
+    scan), or the MAV has no mlog and its container predates the base.
+
+    A purged tail gets one bounded retry (a concurrent purge may race a
+    refresh that advances ``last_refresh_ts`` past it); when a ``plan`` is
+    supplied the retry and the final purge fallback are recorded in its
+    provenance."""
     if mav.mlog is None:
         return 0 if mav.last_refresh_ts >= mav.base.current_ts else None
-    try:
-        pending = mav.mlog.since(mav.last_refresh_ts)
-    except MLogPurged:
-        return None
+    pending = None
+    for attempt in range(2):
+        try:
+            pending = mav.mlog.since(mav.last_refresh_ts)
+            break
+        except MLogPurged as e:
+            if attempt == 0:
+                if plan is not None:
+                    plan.mlog_retries += 1
+                continue
+            if plan is not None:
+                plan.degraded.append(
+                    f"mav({mav.name})->scan: purge_fallback at plan time: "
+                    f"{e}")
+            return None
     if len(pending) > stale_rows:
         return None
     return len(pending)
@@ -323,7 +346,7 @@ def plan_physical(logical: LogicalPlan, est: cost.ScanEstimate,
         rw = mav_rewrite(logical, mav)
         if rw is None:
             continue
-        pending = _mav_pending(mav, mv_stale_rows)
+        pending = _mav_pending(mav, mv_stale_rows, plan)
         if pending is None:
             continue                  # purged / stale: base-table routes
         plan.route, plan.mv, plan.mv_pending = "mav", mav.name, pending
@@ -381,8 +404,10 @@ class ResultSet:
         return [r.get(name) for r in self.rows]
 
     def __repr__(self) -> str:
+        deg = (f", degraded={self.plan.degraded!r}"
+               if self.plan.degraded else "")
         return (f"ResultSet({len(self.rows)} rows, columns={self.columns}, "
-                f"route={self.plan.route!r})")
+                f"route={self.plan.route!r}{deg})")
 
 
 # ---------------------------------------------------------------------------
@@ -500,9 +525,13 @@ class Database:
             if h.store.baseline.n_blocks and logical.preds else None
         est = cost.estimate_scan(h.store, logical.preds, verdicts)
         # A snapshot read (ts=) pins the query to the scan paths: the MV
-        # container only answers at current freshness.
+        # container only answers at current freshness.  A quarantined
+        # (checksum-failed) block also disqualifies the rewrite: the
+        # container may have absorbed the corrupt rows, so the scan path —
+        # which raises BlockCorruption on touch — must answer instead.
         views = tuple(h.mavs.values()) \
-            if use_mv and engine is None and ts is None else ()
+            if use_mv and engine is None and ts is None \
+            and not h.store.has_quarantined_blocks() else ()
         plan = plan_physical(logical, est, cost.calibration(h.store), views,
                              table=h.name, pinned_engine=engine,
                              n_shards=n_shards, device_route=device_route,
@@ -522,35 +551,45 @@ class Database:
     def query(self, q: Query, table: Optional[str] = None, *,
               engine: Optional[str] = None, n_shards: Optional[int] = None,
               device_route: Optional[str] = None, ts: Optional[int] = None,
-              use_mv: bool = True) -> ResultSet:
+              use_mv: bool = True,
+              deadline_s: Optional[float] = None) -> ResultSet:
         """Plan and run ``q``; returns a typed ``ResultSet`` whose ``plan``
         and ``stats`` record how it was answered.  ``engine=`` pins one of
         'scalar' | 'vectorized' | 'pushdown' | 'sharded'; ``n_shards=`` and
         ``device_route=`` pin the fan-out knobs; ``use_mv=False`` disables
         the transparent MAV rewrite; ``ts=`` reads a snapshot (scan routes
-        only)."""
+        only); ``deadline_s=`` bounds scan-route wall time — past it the
+        query raises ``QueryTimeout`` carrying partial-progress stats."""
         h = self.table(table)
         plan = self._plan(h, q, engine, n_shards, device_route, ts, use_mv)
         qq = plan.logical.to_query()
         if plan.route == "mav":
             rows, stats = self._execute_mav(h, plan)
         else:
-            rows, stats = self._execute_scan(h, qq, plan, ts)
+            rows, stats = self._execute_scan(h, qq, plan, ts, deadline_s)
+        if stats is not None:
+            # execution-time degradation joins the plan-time entries so
+            # ResultSet provenance shows the full ladder in order
+            plan.degraded.extend(stats.degraded)
+            plan.mlog_retries += stats.mlog_retries
         return ResultSet(plan.logical.output_names(h.store.schema.names),
                          rows, plan, stats)
 
     def _execute_scan(self, h: TableHandle, q: Query, plan: Plan,
-                      ts: Optional[int]
+                      ts: Optional[int],
+                      deadline_s: Optional[float] = None
                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         store = h.store
         if plan.route == "pushdown":
-            return PushdownExecutor().execute_stats(store, q, ts)
+            return PushdownExecutor().execute_stats(store, q, ts,
+                                                    deadline_s=deadline_s)
         if plan.route == "sharded":
             ex = ShardedScanExecutor(n_shards=plan.n_shards,
                                      device=plan.device,
                                      device_route=plan.device_route or None,
                                      max_workers=self.max_workers)
-            rows, stats = ex.execute_stats(store, q, ts)
+            rows, stats = ex.execute_stats(store, q, ts,
+                                           deadline_s=deadline_s)
             plan.n_shards = stats.n_shards
             return rows, stats
         # full-decode baselines ('scalar' / 'vectorized'): the engine does
@@ -568,6 +607,8 @@ class Database:
         rebuild if the tail is purged between planning and here."""
         mav = h.mavs[plan.mv]
         logical, rw = plan.logical, plan.rewrite
+        purges0 = mav.stats.get("purge_full_refreshes", 0)
+        retries0 = mav.stats.get("mlog_retries", 0)
         tbl = mav.query(realtime=True)
         if rw["residual"] and len(tbl):
             mask = np.ones(len(tbl), bool)
@@ -598,6 +639,14 @@ class Database:
         stats = ScanStats(used_pushdown=False)
         stats.rows_merged_incremental = plan.mv_pending
         stats.actual_rows = len(rows)
+        stats.mlog_retries = mav.stats.get("mlog_retries", 0) - retries0
+        if mav.stats.get("purge_full_refreshes", 0) > purges0:
+            # the tail was purged between planning and the realtime read:
+            # the MAV answered from a full container rebuild instead
+            stats.purge_fallback = True
+            stats.degraded.append(
+                f"mav({mav.name}) incremental->full-refresh: purge_fallback "
+                f"(mlog tail purged mid-query)")
         return rows, stats
 
     def __repr__(self) -> str:

@@ -1,0 +1,431 @@
+"""Fault-tolerant execution: taxonomy, retry/hedging/deadlines, block
+corruption, and the route-degradation parity matrix.
+
+The contract under test (the "continuous availability" claim): under every
+injected single-fault scenario a query either
+
+* returns results identical to the clean run, with the degradation step
+  recorded in ``ScanStats.degraded`` / ``Plan.degraded`` provenance, or
+* raises the matching typed :class:`~repro.core.errors.QueryError` —
+  never a silently wrong answer, never a bare ``RuntimeError``.
+
+Every scenario is driven by a deterministic :class:`FaultPlan` (faults key
+on shard ids / attempt numbers / call ordinals, never wall clock), so the
+matrix replays identically run to run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faultinject
+from repro.core.engine import QAgg, Query, VectorEngine
+from repro.core.errors import (BlockCorruption, Deadline, KernelLaunchError,
+                               KeyPackError, MLogPurged, QueryError,
+                               QueryTimeout, RouteExhausted, ShardFailure)
+from repro.core.faultinject import FaultPlan, corrupt_block, inject
+from repro.core.lsm import LSMStore
+from repro.core.mview import AggSpec, MAVDefinition
+from repro.core.partition import ShardedScanExecutor
+from repro.core.pushdown import PushdownExecutor
+from repro.core.relation import ColType, Predicate, PredOp
+from repro.core.session import Database
+
+from tests.test_pushdown import QUERIES, make_store, norm
+
+GROUPED_Q = Query(preds=(Predicate("d", PredOp.BETWEEN, 50, 300),),
+                  group_by=("g",),
+                  aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+DEVICE_Q = Query(preds=(Predicate("d", PredOp.BETWEEN, 50, 250),),
+                 group_by=("g",),
+                 aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+
+
+def sharded(**kw):
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("max_workers", 4)
+    kw.setdefault("retry_backoff_s", 0.001)
+    return ShardedScanExecutor(**kw)
+
+
+# ---------------------------------------------------------------------------
+# taxonomy
+# ---------------------------------------------------------------------------
+
+
+def test_error_taxonomy():
+    for cls in (ShardFailure, BlockCorruption, KernelLaunchError,
+                QueryTimeout, RouteExhausted, MLogPurged, KeyPackError):
+        assert issubclass(cls, QueryError)
+    # back-compat contracts: callers catching the pre-taxonomy types
+    assert issubclass(MLogPurged, RuntimeError)
+    assert issubclass(KeyPackError, ValueError)
+    e = ShardFailure(3, 2, RuntimeError("boom"))
+    assert e.shard_id == 3 and "after 2 attempt(s)" in str(e)
+    t = QueryTimeout(0.5, 0.7, completed=2, total=4)
+    assert "2/4 shards" in str(t) and t.deadline_s == 0.5
+    r = RouteExhausted(["a->b: x"], ValueError("y"))
+    assert r.steps == ["a->b: x"] and "a->b: x" in str(r)
+
+
+def test_mlog_purged_importable_from_legacy_homes():
+    from repro.core import MLogPurged as a
+    from repro.core.mview import MLogPurged as b
+    assert a is b is MLogPurged
+
+
+def test_deadline_primitive():
+    assert Deadline.start(None) is None
+    d = Deadline.start(30.0)
+    assert not d.expired() and 0 < d.elapsed() < d.seconds
+    assert Deadline.start(0.0).expired()
+
+
+# ---------------------------------------------------------------------------
+# clean path: an installed-but-empty plan changes nothing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+def test_empty_fault_plan_is_transparent(qi):
+    rng = np.random.default_rng(31 + qi)
+    store = make_store(rng)
+    q = QUERIES[qi]
+    for ex in (PushdownExecutor(), sharded()):
+        clean, cstats = ex.execute_stats(store, q)
+        with inject(FaultPlan()) as fp:
+            rows, stats = ex.execute_stats(store, q)
+        assert rows == clean
+        assert fp.events == []
+        assert stats.degraded == [] and cstats.degraded == []
+        assert stats.shard_retries == 0 and stats.hedges == 0
+
+
+def test_inject_restores_previous_plan():
+    assert faultinject.active() is None
+    with inject(FaultPlan()) as outer:
+        assert faultinject.active() is outer
+        with inject(FaultPlan()) as inner:
+            assert faultinject.active() is inner
+        assert faultinject.active() is outer
+    assert faultinject.active() is None
+
+
+# ---------------------------------------------------------------------------
+# shard retry / hedging / deadlines (host fan-out)
+# ---------------------------------------------------------------------------
+
+
+def test_transient_shard_fault_retries_to_identical_result():
+    rng = np.random.default_rng(41)
+    store = make_store(rng)
+    ex = sharded()
+    clean, _ = ex.execute_stats(store, GROUPED_Q)
+    with inject(FaultPlan(fail_shard={1: 1})) as fp:
+        rows, stats = ex.execute_stats(store, GROUPED_Q)
+    assert rows == clean                      # bit-identical: same merge order
+    assert stats.shard_retries >= 1
+    assert stats.degraded == []               # retry absorbed the fault
+    assert fp.events == ["fail shard 1 attempt 0"]
+
+
+def test_transient_shard_fault_serial_path():
+    rng = np.random.default_rng(42)
+    store = make_store(rng)
+    ex = sharded(max_workers=1)
+    clean, _ = ex.execute_stats(store, GROUPED_Q)
+    with inject(FaultPlan(fail_shard={2: 2})):
+        rows, stats = ex.execute_stats(store, GROUPED_Q)
+    assert rows == clean and stats.shard_retries == 2
+
+
+def test_exhausted_shard_degrades_to_vectorized():
+    rng = np.random.default_rng(43)
+    store = make_store(rng)
+    ex = sharded(max_attempts=2)
+    clean, _ = ex.execute_stats(store, GROUPED_Q)
+    with inject(FaultPlan(fail_shard={1: 99})) as fp:
+        rows, stats = ex.execute_stats(store, GROUPED_Q)
+    assert norm(rows) == norm(clean)          # cross-engine: float tolerance
+    assert len(stats.degraded) == 1
+    assert stats.degraded[0].startswith("sharded->vectorized: ShardFailure")
+    assert "shard 1" in stats.degraded[0]
+    assert fp.events == ["fail shard 1 attempt 0", "fail shard 1 attempt 1"]
+
+
+def test_straggler_hedge_wins_with_identical_result():
+    rng = np.random.default_rng(44)
+    store = make_store(rng)
+    ex = sharded()
+    clean, _ = ex.execute_stats(store, GROUPED_Q)
+    with inject(FaultPlan(delay_shard={0: 1.5})) as fp:
+        rows, stats = ex.execute_stats(store, GROUPED_Q)
+    assert rows == clean                      # position-indexed merge order
+    assert stats.hedges == 1
+    assert stats.degraded == []               # hedging is not a degradation
+    assert fp.events == ["delay shard 0 by 1.500s"]
+
+
+def test_deadline_raises_query_timeout_with_partial_progress():
+    rng = np.random.default_rng(45)
+    store = make_store(rng)
+    ex = sharded(hedge=False)
+    delays = {i: 0.8 for i in range(4)}
+    with inject(FaultPlan(delay_shard=delays)):
+        with pytest.raises(QueryTimeout) as ei:
+            ex.execute_stats(store, GROUPED_Q, deadline_s=0.15)
+    e = ei.value
+    assert e.deadline_s == pytest.approx(0.15)
+    assert e.elapsed_s >= 0.15
+    assert e.total == 4 and 0 <= e.completed < 4
+    assert e.stats is not None               # partial-progress ScanStats
+
+
+def test_deadline_via_database_session():
+    rng = np.random.default_rng(46)
+    db = Database(make_store(rng), max_workers=4)
+    with inject(FaultPlan(delay_shard={i: 0.8 for i in range(4)})):
+        with pytest.raises(QueryTimeout):
+            db.query(GROUPED_Q, engine="sharded", n_shards=4,
+                     deadline_s=0.15)
+    # no deadline: the same query completes
+    rs = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert len(rs) > 0
+
+
+def test_generous_deadline_is_harmless():
+    rng = np.random.default_rng(47)
+    store = make_store(rng)
+    for ex in (PushdownExecutor(), sharded()):
+        clean, _ = ex.execute_stats(store, GROUPED_Q)
+        rows, stats = ex.execute_stats(store, GROUPED_Q, deadline_s=60.0)
+        assert rows == clean and stats.degraded == []
+
+
+# ---------------------------------------------------------------------------
+# block corruption: checksums, quarantine, MAV exclusion
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_block_raises_block_corruption_and_quarantines():
+    rng = np.random.default_rng(51)
+    store = make_store(rng, dml=False)
+    corrupt_block(store, "v", block=1)
+    # a grouped aggregate must decode 'v' — flat sketches would mask it
+    with pytest.raises(BlockCorruption) as ei:
+        PushdownExecutor().execute(store, GROUPED_Q)
+    e = ei.value
+    assert e.column == "v" and e.block == 1
+    assert e.expected != e.actual
+    assert 1 in store.baseline.cols["v"].quarantined
+    assert store.has_quarantined_blocks()
+
+
+def test_corruption_is_never_retried_on_sharded_route():
+    rng = np.random.default_rng(52)
+    store = make_store(rng, dml=False)
+    corrupt_block(store, "v", block=0)
+    ex = sharded()
+    with pytest.raises(BlockCorruption):
+        ex.execute_stats(store, GROUPED_Q)
+    assert ex.last_stats.shard_retries == 0   # deterministic: no retry
+    assert ex.last_stats.degraded == []       # and no vectorized fallback
+
+
+def test_clean_blocks_still_readable_after_quarantine():
+    rng = np.random.default_rng(53)
+    store = make_store(rng, dml=False)
+    corrupt_block(store, "v", block=0)
+    cst = store.baseline.cols["v"]
+    with pytest.raises(BlockCorruption):
+        cst.decode_block(0)
+    # the fault is per-block: every other block still verifies
+    for b in range(1, len(cst.blocks)):
+        cst.decode_block(b)
+    assert cst.quarantined == {0}
+
+
+def test_quarantine_excludes_mav_rewrite():
+    rng = np.random.default_rng(54)
+    db = Database(make_store(rng, dml=False))
+    q = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),)))
+    assert db.explain(q).route == "mav"
+    corrupt_block(db.table().store, "v", block=0)
+    with pytest.raises(BlockCorruption):      # detection quarantines...
+        db.query(q, use_mv=False)
+    plan = db.explain(q)
+    assert plan.route != "mav"                # ...which revokes the rewrite
+    with pytest.raises(BlockCorruption):      # and the scan names the block
+        db.query(q)
+
+
+# ---------------------------------------------------------------------------
+# mlog faults: bounded retry + purge fallback provenance
+# ---------------------------------------------------------------------------
+
+
+def _mav_db(rng):
+    db = Database(make_store(rng, dml=False))
+    h = db.table()
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),
+                               AggSpec("count_star", None, "n"))))
+    for j in range(5000, 5020):               # pending mlog tail
+        h.insert({"k": j, "g": int(rng.integers(0, 6)),
+                  "d": int(rng.integers(0, 365)), "v": 1.0, "s": "beta"})
+    return db
+
+
+def test_transient_mlog_fault_survived_by_bounded_retry():
+    rng = np.random.default_rng(61)
+    db = _mav_db(rng)
+    q = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    clean = db.query(q)
+    assert clean.plan.route == "mav"
+    with inject(FaultPlan(mlog_since_failures=1)) as fp:
+        rs = db.query(q)
+    assert rs.plan.route == "mav"
+    assert norm(rs.rows) == norm(clean.rows)
+    assert rs.plan.mlog_retries >= 1          # the retry is provenance
+    assert not any("purge_fallback" in d for d in rs.plan.degraded)
+    assert fp.events == ["transient mlog purge on since() call #1"]
+
+
+def test_mid_query_purge_falls_back_with_provenance():
+    rng = np.random.default_rng(62)
+    db = _mav_db(rng)
+    q = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    clean = db.query(q, use_mv=False)
+    with inject(FaultPlan(purge_mlog_before_read=True)) as fp:
+        rs = db.query(q)
+    assert rs.plan.route == "mav"             # planned before the purge
+    assert norm(rs.rows) == norm(clean.rows)  # full refresh kept it right
+    assert rs.stats.purge_fallback
+    assert any("purge_fallback" in d for d in rs.plan.degraded)
+    assert any(e.startswith("purged mlog mid-query") for e in fp.events)
+
+
+# ---------------------------------------------------------------------------
+# route-degradation parity matrix: scenario × route
+# ---------------------------------------------------------------------------
+
+SCENARIOS = [
+    ("none", lambda: FaultPlan(), []),
+    ("shard-transient", lambda: FaultPlan(fail_shard={1: 1}), []),
+    ("shard-exhausted", lambda: FaultPlan(fail_shard={1: 99}),
+     ["sharded->vectorized"]),
+    ("straggler", lambda: FaultPlan(delay_shard={0: 1.5}), []),
+]
+
+
+@pytest.mark.parametrize("name,mkplan,want_deg",
+                         SCENARIOS, ids=[s[0] for s in SCENARIOS])
+@pytest.mark.parametrize("route", ["pushdown", "sharded-host"])
+def test_fault_matrix_host_routes(route, name, mkplan, want_deg):
+    """Single-fault scenarios over the host routes: results match the clean
+    run and the degradation trail matches exactly what was injected.  Shard
+    faults cannot fire on the single-shard pushdown route — the scenario
+    then asserts full transparency."""
+    rng = np.random.default_rng(71)
+    store = make_store(rng)
+    ex = (PushdownExecutor() if route == "pushdown"
+          else sharded(max_attempts=2))
+    clean, _ = ex.execute_stats(store, GROUPED_Q)
+    with inject(mkplan()):
+        rows, stats = ex.execute_stats(store, GROUPED_Q)
+    if route == "pushdown":
+        want_deg = []                         # no shards → nothing fires
+    assert norm(rows) == norm(clean)
+    assert len(stats.degraded) == len(want_deg)
+    for got, want in zip(stats.degraded, want_deg):
+        assert got.startswith(want)
+    if not want_deg and route == "sharded-host":
+        # undegraded runs feed the cost model; degraded ones must not
+        assert stats.degraded == []
+
+
+@pytest.mark.device
+@pytest.mark.parametrize("kernel_failures,want_deg", [
+    (0, []),
+    (1, ["device-collective->per-shard-device"]),
+    (99, ["device-collective->per-shard-device",
+          "per-shard-device->host-pushdown"]),
+], ids=["clean", "collective-fails", "all-kernels-fail"])
+def test_fault_matrix_device_collective(kernel_failures, want_deg):
+    """The device ladder: collective → per-shard launches → host pushdown,
+    one recorded step per injected kernel failure level."""
+    rng = np.random.default_rng(72)
+    store = make_store(rng, n=256, block_rows=64, dml=False)
+    host = ShardedScanExecutor(n_shards=2).execute(store, DEVICE_Q)
+    ex = ShardedScanExecutor(n_shards=2, device=True,
+                             device_route="collective")
+    with inject(FaultPlan(kernel_failures=kernel_failures)):
+        rows, stats = ex.execute_stats(store, DEVICE_Q)
+    assert len(stats.degraded) == len(want_deg)
+    for got, want in zip(stats.degraded, want_deg):
+        assert got.startswith(want)
+    assert stats.used_device == (kernel_failures < 99)
+    h = {r["g"]: r for r in host}
+    d = {r["g"]: r for r in rows}
+    assert h.keys() == d.keys()
+    for g in h:
+        assert h[g]["n"] == d[g]["n"]
+        np.testing.assert_allclose(d[g]["sv"], h[g]["sv"],
+                                   atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.device
+def test_fault_matrix_pushdown_device_degrades_to_host():
+    rng = np.random.default_rng(73)
+    store = make_store(rng, n=256, block_rows=64, dml=False)
+    ex = PushdownExecutor(device=True)
+    clean, cstats = ex.execute_stats(store, DEVICE_Q)
+    assert cstats.used_device
+    with inject(FaultPlan(kernel_failures=1)):
+        rows, stats = ex.execute_stats(store, DEVICE_Q)
+    assert len(stats.degraded) == 1
+    assert stats.degraded[0].startswith("device->host-pushdown")
+    assert not stats.used_device
+    h = {r["g"]: r for r in clean}
+    d = {r["g"]: r for r in rows}
+    assert h.keys() == d.keys()
+    for g in h:
+        assert h[g]["n"] == d[g]["n"]
+        np.testing.assert_allclose(d[g]["sv"], h[g]["sv"],
+                                   atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# provenance surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_recorded_in_resultset_provenance():
+    rng = np.random.default_rng(81)
+    db = Database(make_store(rng), max_workers=4)
+    with inject(FaultPlan(fail_shard={1: 99})):
+        rs = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert any(d.startswith("sharded->vectorized") for d in rs.plan.degraded)
+    assert "degraded" in repr(rs)
+    assert "degraded=[" in rs.plan.describe()
+    # clean runs stay silent
+    rs2 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert rs2.plan.degraded == [] and "degraded" not in repr(rs2)
+
+
+def test_route_exhausted_when_fallback_also_fails():
+    rng = np.random.default_rng(82)
+    store = make_store(rng)
+    ex = sharded(max_attempts=1)
+
+    class BoomEngine(VectorEngine):
+        def execute(self, table, q):
+            raise RuntimeError("fallback engine down")
+
+    ex.engine = BoomEngine()
+    with inject(FaultPlan(fail_shard={0: 99, 1: 99, 2: 99, 3: 99})):
+        with pytest.raises(RouteExhausted) as ei:
+            ex.execute_stats(store, GROUPED_Q)
+    e = ei.value
+    assert any(s.startswith("sharded->vectorized") for s in e.steps)
+    assert isinstance(e.cause, RuntimeError)

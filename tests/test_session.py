@@ -519,6 +519,13 @@ def test_bench_guard_ratio_rules():
                      "collective": {"collective_vs_host_2x": 1.27}}}
     fails = bg.check(committed, bad)
     assert len(fails) == 1 and "pushdown_speedup" in fails[0]
+    # *_overhead_pct keys are held to the 2% absolute ceiling, fresh-side
+    # only (the committed value never relaxes the budget)
+    hot = {"suite": {"faults": {"fault_hook_overhead_pct": 2.4}}}
+    fails = bg.check(committed, hot)
+    assert len(fails) == 1 and "ceiling" in fails[0]
+    cool = {"suite": {"faults": {"fault_hook_overhead_pct": 1.9}}}
+    assert bg.check(committed, cool) == []
     assert bg.main(["bench_guard", "/nope.json"]) == 1
 
 
