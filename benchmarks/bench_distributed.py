@@ -36,6 +36,14 @@ same-or-faster route as the best hand-picked engine on the full-scan,
 0.1%-selective, group-by, and top-k shapes, with the ``db.explain`` route
 recorded next to each ratio.
 
+The **self-healing** section measures the recovery layers: replica sets
+must cost storage but not latency on the clean path
+(``replica_overhead_pct`` <= 2%), a corrupted block must be healed in
+place mid-query with the answer identical to clean, and the cross-query
+health registry + breaker consults must stay under the same 2% session
+clean-path budget (``health_overhead_pct``) — both percentages are held
+to the absolute ceiling by scripts/bench_guard.py.
+
 Smoke mode (``benchmarks/run.py --suite distributed --json
 BENCH_distributed.json``) records shard scaling, the adaptive-vs-fixed
 granularity ratios, the cost-chosen shard counts, the collective-vs-host
@@ -471,6 +479,87 @@ def fault_tolerance(store, repeat: int = 5) -> dict:
     return out
 
 
+SH_N = 300_000
+SH_BLOCK_ROWS = 16_384
+
+
+def _paired_min(f_a, f_b, repeat: int = 7):
+    """Best-of timing for two closures with the samples interleaved
+    (A/B order alternating per round), so slow host drift lands on both
+    sides equally instead of masquerading as overhead of whichever side
+    was timed second.  Returns the per-side minimums in seconds."""
+    t_a = t_b = float("inf")
+    for i in range(repeat):
+        for f in ((f_a, f_b) if i % 2 == 0 else (f_b, f_a)):
+            t0 = time.perf_counter()
+            f()
+            dt = time.perf_counter() - t0
+            if f is f_a:
+                t_a = min(t_a, dt)
+            else:
+                t_b = min(t_b, dt)
+    return t_a, t_b
+
+
+def self_healing(n: int = SH_N, block_rows: int = SH_BLOCK_ROWS,
+                 repeat: int = 7) -> dict:
+    """The PR 7 self-healing layer's costs, measured where they live:
+
+    * **replica clean path** — the same pushdown query over the same data
+      with and without a 2-way replica set attached.  Replica copies are
+      only ever read inside the repair path, so the steady-state price of
+      replication must be storage (recorded as ``replica_storage_x``), not
+      latency (``replica_overhead_pct``, guarded <= 2% absolute by
+      bench_guard.py).
+    * **repair in action** — one corrupted block healed in place mid-query
+      (answer asserted identical to clean; the repair event is provenance).
+    * **health/breaker clean path** — ``Database.query`` end-to-end with
+      the health registry on (EWMAs + breaker consult per query) vs
+      ``health=False``: ``health_overhead_pct``, same <= 2% guard."""
+    from repro.core.faultinject import corrupt_block
+    from repro.core.replica import enable_replication
+    q = _query()
+    plain = make_store(np.random.default_rng(11), n, block_rows)
+    repl = make_store(np.random.default_rng(11), n, block_rows)
+    sr = enable_replication(repl, k=2)
+    base_bytes = sum(enc.nbytes() for cst in repl.baseline.cols.values()
+                     for enc in cst.blocks)
+    ex = PushdownExecutor()
+    want = _norm(ex.execute(plain, q))
+    assert _norm(ex.execute(repl, q)) == want, "replicated store diverged"
+    t_plain, t_repl = _paired_min(lambda: ex.execute(plain, q),
+                                  lambda: ex.execute(repl, q), repeat=repeat)
+    # -- repair in action: corrupt one block, the next read heals it ------
+    corrupt_block(repl, "total", block=3)
+    t0 = time.perf_counter()
+    rows, stats = ex.execute_stats(repl, q)
+    t_repair = time.perf_counter() - t0
+    assert _norm(rows) == want, "repaired run diverged from clean run"
+    assert stats.repaired and not repl.has_quarantined_blocks(), \
+        f"block was not repaired in place: {stats.repaired}"
+    # -- health registry + breaker consult on the session clean path ------
+    db_on = Database(plain)
+    db_off = Database(plain, health=False)
+    r_on, r_off = db_on.query(q), db_off.query(q)          # warm both
+    assert _norm(r_on.rows) == _norm(r_off.rows) == want
+    t_on, t_off = _paired_min(lambda: db_on.query(q),
+                              lambda: db_off.query(q), repeat=repeat)
+    return {
+        "n_rows": n,
+        "replica_k": sr.k,
+        "replica_storage_bytes": sr.nbytes(),
+        "replica_storage_x": sr.nbytes() / base_bytes,
+        "plain_clean_ms": t_plain * 1e3,
+        "replica_clean_ms": t_repl * 1e3,
+        "replica_overhead_pct": max(t_repl / t_plain - 1.0, 0.0) * 100,
+        "repair_query_ms": t_repair * 1e3,
+        "repaired_events": list(stats.repaired),
+        "health_on_ms": t_on * 1e3,
+        "health_off_ms": t_off * 1e3,
+        "health_overhead_pct": max(t_on / t_off - 1.0, 0.0) * 100,
+    }
+
+
 def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
     """CI mode: record shard-scaling + granularity + device-route + top-k
     numbers to BENCH_distributed.json and assert (a) the 4-shard fan-out
@@ -497,6 +586,7 @@ def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
         if out["speedup_4x"] >= 1.5:
             break
     out["parallel_headroom"] = parallel_headroom()
+    out["host_cpus"] = os.cpu_count()   # baseline shifts attributable to host
     # The host flips between a turbo/single-memory-channel regime where no
     # memory-bound scan can parallelize (observed: PR2's executor shows the
     # same 0.9x there; the recorded headroom probe documents which regime
@@ -624,6 +714,24 @@ def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
         f"fault-injection hooks cost > 2% on the clean path: {faults}")
     assert faults["straggler_recovery_factor"] > 1.0, (
         f"hedging failed to beat the injected straggler delay: {faults}")
+
+    # -- self-healing layer: replica + health clean-path budgets ----------
+    heal = None
+    for _ in range(attempts):
+        cur = self_healing()
+        if heal is None or max(cur["replica_overhead_pct"],
+                               cur["health_overhead_pct"]) < \
+                max(heal["replica_overhead_pct"],
+                    heal["health_overhead_pct"]):
+            heal = cur
+        if max(heal["replica_overhead_pct"],
+               heal["health_overhead_pct"]) <= 2.0:
+            break
+    out["self_healing"] = heal
+    assert heal["replica_overhead_pct"] <= 2.0, (
+        f"replica set costs > 2% latency on the clean path: {heal}")
+    assert heal["health_overhead_pct"] <= 2.0, (
+        f"health registry costs > 2% on the session clean path: {heal}")
     return out
 
 
@@ -671,6 +779,16 @@ def run() -> str:
     rep.add(config="straggler_hedge_recovery", shards=4,
             ms=f"{faults['straggler_recovered_ms']:.1f}",
             speedup=f"{faults['straggler_recovery_factor']:.2f}x_vs_delay")
+    heal = self_healing()
+    rep.add(config=f"replica_clean_path_k{heal['replica_k']}", shards="-",
+            ms=f"{heal['replica_clean_ms']:.1f}",
+            speedup=f"{heal['replica_overhead_pct']:.2f}%")
+    rep.add(config="block_repair_in_place", shards="-",
+            ms=f"{heal['repair_query_ms']:.1f}",
+            speedup=f"storage_{heal['replica_storage_x']:.2f}x")
+    rep.add(config="health_registry_clean_path", shards="-",
+            ms=f"{heal['health_on_ms']:.1f}",
+            speedup=f"{heal['health_overhead_pct']:.2f}%")
     return rep.emit()
 
 

@@ -7,6 +7,13 @@ the unified ``Database`` session: the dashboard aggregate is transparently
 rewritten onto the registered MAV (container ⊕ pending-mlog merge), and the
 ad-hoc filtered scan is cost-routed with plan/stats provenance.
 
+The epilogue demos the self-healing layers: a baseline block is corrupted
+and the next query repairs it in place from a replica (``plan.repaired``
+provenance), then a persistently failing fan-out opens a circuit breaker —
+the following queries show the breaker pre-degrade, the half-open probe,
+and the recovered route, all visible in ``plan.degraded`` and
+``db.health_report()``.
+
   PYTHONPATH=src python examples/olap_dashboard.py
 """
 import time
@@ -14,6 +21,7 @@ import time
 import numpy as np
 
 from repro.core.engine import QAgg, Query
+from repro.core.faultinject import FaultPlan, corrupt_block, inject
 from repro.core.mview import AggSpec, MAVDefinition
 from repro.core.relation import ColType, Predicate, PredOp, schema
 from repro.core.session import Database
@@ -23,7 +31,8 @@ def main():
     db = Database()
     orders = db.create_table(
         "orders", schema(("order_id", ColType.INT), ("shop", ColType.INT),
-                         ("amount", ColType.FLOAT), ("status", ColType.INT)))
+                         ("amount", ColType.FLOAT), ("status", ColType.INT)),
+        replication=2)                       # k-way block replicas (PR 7)
     db.create_mav(
         "shop_dashboard",
         MAVDefinition(group_by=("shop",),
@@ -73,6 +82,27 @@ def main():
             orders.major_compact()               # daily compaction analogue
             print(f"   compacted → incremental fraction "
                   f"{orders.incremental_fraction():.3f}")
+
+    # -- self-healing: a corrupted block is repaired mid-query --------------
+    orders.major_compact()
+    corrupt_block(orders.store, "amount", block=1)   # storage bit-rot
+    scan = db.query(Query(preds=(Predicate("amount", PredOp.GT, 100.0),),
+                          project=("order_id", "amount")))
+    print(f"corruption: amount/block 1 flipped → query healed it in place, "
+          f"repaired={scan.plan.repaired}")
+
+    # -- self-healing: a failing fan-out opens a breaker, then recovers -----
+    agg_q = Query(preds=(Predicate("amount", PredOp.GT, 100.0),),
+                  group_by=("shop",), aggs=(QAgg("count", None, "n"),))
+    with inject(FaultPlan(fail_shard={i: 99 for i in range(8)})):
+        r = db.query(agg_q, engine="sharded", n_shards=2)
+    print(f"fan-out down   : degraded={r.plan.degraded}")
+    for tag in ("breaker open   ", "half-open probe", "recovered      "):
+        r = db.query(agg_q, engine="sharded", n_shards=2)
+        print(f"{tag}: " + (f"degraded={r.plan.degraded}" if r.plan.degraded
+                            else f"route={r.plan.route} (clean)"))
+    for line in db.health_report("orders"):
+        print(f"health: {line}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,191 @@
+"""Seeded randomized fault sweep — "chaos mode" (scripts/check.sh --chaos).
+
+Builds one replicated store behind a ``Database`` session, then drives a
+randomized sequence of single-fault scenarios drawn from the deterministic
+:class:`FaultPlan` vocabulary — transient / exhausted shard failures,
+stragglers, block corruption (healed from a replica), every-copy corruption
+(typed failure), transient mlog purges, zero deadlines — and asserts the
+continuous-availability contract after every round:
+
+* the query returns the clean-run answer, with any degradation / breaker
+  pre-degrade / repair recorded in ``Plan`` provenance, or
+* it raises the matching *typed* :class:`QueryError` — never a silently
+  wrong answer, never a bare ``RuntimeError``.
+
+Scenario choice is randomized but the faults themselves stay deterministic
+(FaultPlan keys on shard ids / call ordinals, never wall clock), so a
+failing sweep replays exactly from its seed:
+
+  python scripts/chaos_sweep.py [--seed S] [--rounds N]
+
+The seed is printed first, before anything can fail.  The long-lived
+session deliberately accumulates cross-query health state, so breaker
+opens / half-open probes fire at random points mid-sweep and recovered
+routes must keep producing the reference answer.
+"""
+from __future__ import annotations
+
+import argparse
+import secrets
+import sys
+
+import numpy as np
+
+from repro.core import faultinject as fi
+from repro.core.engine import QAgg, Query
+from repro.core.errors import BlockCorruption, QueryError, QueryTimeout
+from repro.core.faultinject import FaultPlan, inject
+from repro.core.lsm import LSMStore
+from repro.core.mview import AggSpec, MAVDefinition
+from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.session import Database
+
+SCH = schema(("k", ColType.INT), ("g", ColType.INT), ("d", ColType.INT),
+             ("v", ColType.FLOAT), ("s", ColType.STR))
+
+GROUPED_Q = Query(preds=(Predicate("d", PredOp.BETWEEN, 50, 300),),
+                  group_by=("g",),
+                  aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+FLAT_Q = Query(group_by=(), aggs=(QAgg("count", None, "n"),
+                                  QAgg("sum", "v", "sv"),
+                                  QAgg("min", "d", "md")))
+MAV_Q = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+
+
+def build_store(rng, n=2000, block_rows=64, replication=2) -> LSMStore:
+    store = LSMStore(SCH, block_rows=block_rows, memtable_limit=256,
+                     replication=replication)
+    for i in range(n):
+        store.insert({"k": i, "g": int(rng.integers(0, 6)),
+                      "d": int(rng.integers(0, 365)),
+                      "v": float(rng.normal()),
+                      "s": ["alpha", "beta", "gamma"][int(rng.integers(0, 3))]})
+    store.major_compact()
+    return store
+
+
+def norm(rows):
+    return sorted(
+        tuple(sorted((k, round(v, 9) if isinstance(v, float) else v)
+                     for k, v in r.items())) for r in rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=40)
+    args = ap.parse_args(argv)
+    seed = args.seed if args.seed is not None else secrets.randbelow(2**31)
+    print(f"chaos_sweep: seed={seed} rounds={args.rounds}", flush=True)
+    rng = np.random.default_rng(seed)
+
+    store = build_store(rng)
+    db = Database(store, max_workers=4)
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),
+                               AggSpec("count_star", None, "n"))))
+    for i in rng.choice(2000, 20, replace=False):   # pending mlog tail +
+        store.update(int(i), {"v": float(rng.normal())})  # merge-on-read rows
+
+    # clean references, computed once before any fault is installed
+    ref = {name: norm(db.query(q, use_mv=False).rows)
+           for name, q in (("grouped", GROUPED_Q), ("flat", FLAT_Q),
+                           ("mav", MAV_Q))}
+    engines = [None, "sharded", "pushdown"]
+    scenarios = ("shard_transient", "shard_exhausted", "all_shards_down",
+                 "straggler", "corrupt_block_repaired",
+                 "corrupt_all_copies", "mlog_transient", "zero_deadline")
+    counts = {s: 0 for s in scenarios}
+    provenance_hits = {"degraded": 0, "breaker": 0, "repaired": 0}
+
+    for round_no in range(args.rounds):
+        scen = scenarios[int(rng.integers(0, len(scenarios)))]
+        counts[scen] += 1
+        rs = None
+        engine = engines[int(rng.integers(0, len(engines)))]
+        kw = dict(engine=engine, use_mv=False)
+        if engine == "sharded":
+            kw["n_shards"] = int(rng.integers(2, 5))
+        try:
+            if scen == "shard_transient":
+                with inject(FaultPlan(
+                        fail_shard={int(rng.integers(0, 4)): 1})):
+                    rs = db.query(GROUPED_Q, **kw)
+                assert norm(rs.rows) == ref["grouped"], scen
+            elif scen == "shard_exhausted":
+                with inject(FaultPlan(
+                        fail_shard={int(rng.integers(0, 4)): 99})):
+                    rs = db.query(GROUPED_Q, **kw)
+                assert norm(rs.rows) == ref["grouped"], scen
+            elif scen == "all_shards_down":
+                with inject(FaultPlan(
+                        fail_shard={i: 99 for i in range(8)})):
+                    rs = db.query(GROUPED_Q, **kw)
+                assert norm(rs.rows) == ref["grouped"], scen
+            elif scen == "straggler":
+                with inject(FaultPlan(
+                        delay_shard={int(rng.integers(0, 4)): 0.15})):
+                    rs = db.query(GROUPED_Q, **kw)
+                assert norm(rs.rows) == ref["grouped"], scen
+            elif scen == "corrupt_block_repaired":
+                col = ("d", "v")[int(rng.integers(0, 2))]  # cols FLAT_Q reads
+                nblocks = len(store.baseline.cols[col].blocks)
+                fi.corrupt_block(store, col,
+                                 block=int(rng.integers(0, nblocks)))
+                rs = db.query(FLAT_Q, **kw)     # no preds: reads every block
+                assert norm(rs.rows) == ref["flat"], scen
+                assert rs.plan.repaired, f"{scen}: repair left no provenance"
+                assert not store.has_quarantined_blocks(), scen
+            elif scen == "corrupt_all_copies":
+                # throwaway store: with every copy gone the block is
+                # permanently quarantined — the contract is a typed failure
+                s2 = build_store(np.random.default_rng(int(rng.integers(
+                    0, 2**31))), n=500, replication=2)
+                db2 = Database(s2)
+                fi.corrupt_block(s2, "v", block=1)
+                fi.corrupt_replica(s2, "v", block=1, replica=0)
+                try:
+                    db2.query(FLAT_Q, use_mv=False)
+                    raise AssertionError(
+                        f"{scen}: unrepairable block returned rows")
+                except BlockCorruption:
+                    pass
+                assert s2.has_quarantined_blocks(), scen
+            elif scen == "mlog_transient":
+                with inject(FaultPlan(mlog_since_failures=1)):
+                    rs = db.query(MAV_Q)        # MAV route: bounded retry
+                assert norm(rs.rows) == ref["mav"], scen
+                assert rs.plan.route != "mav" or rs.plan.mlog_retries >= 1
+            elif scen == "zero_deadline":
+                try:
+                    db.query(GROUPED_Q, deadline_s=0.0, **kw)
+                    raise AssertionError(f"{scen}: deadline did not bind")
+                except QueryTimeout:
+                    pass
+                rs = db.query(GROUPED_Q, **kw)  # and the session recovers
+                assert norm(rs.rows) == ref["grouped"], scen
+            if rs is not None:
+                for d in rs.plan.degraded:
+                    provenance_hits[
+                        "breaker" if d.startswith("breaker(")
+                        else "degraded"] += 1
+                provenance_hits["repaired"] += len(rs.plan.repaired)
+        except QueryError:
+            raise   # typed errors are only expected where caught above
+        except AssertionError:
+            print(f"chaos_sweep: FAILED at round {round_no} "
+                  f"scenario={scen} engine={engine} (seed={seed})")
+            raise
+
+    print(f"chaos_sweep: {args.rounds} rounds green (seed={seed})")
+    print(f"  scenarios: " + ", ".join(f"{k}={v}"
+                                       for k, v in counts.items() if v))
+    print(f"  provenance: " + ", ".join(f"{k}={v}"
+                                        for k, v in provenance_hits.items()))
+    for line in db.health_report():
+        print(f"  health: {line}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

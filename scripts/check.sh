@@ -13,6 +13,12 @@
 #                              # and records the clean-path hook overhead in
 #                              # BENCH_distributed.json (bench_guard.py holds
 #                              # every *_overhead_pct key to <= 2% absolute)
+#   scripts/check.sh --chaos   # fault lane plus the seeded randomized fault
+#                              # sweep (scripts/chaos_sweep.py): random
+#                              # single-fault scenarios against one session,
+#                              # every answer checked against the clean run
+#                              # or a typed error — the seed is printed first
+#                              # so any failure replays exactly
 #
 # The smoke suites self-check their perf guards and rewrite BENCH_*.json in
 # the repo root, so a green run leaves the recorded trajectory up to date.
@@ -26,6 +32,10 @@ if [[ "${1:-}" == "--full" ]]; then
 elif [[ "${1:-}" == "--faults" ]]; then
     FAULTS_ONLY=1
     python -m pytest -q tests/test_faults.py
+elif [[ "${1:-}" == "--chaos" ]]; then
+    FAULTS_ONLY=1
+    python -m pytest -q tests/test_faults.py
+    python scripts/chaos_sweep.py
 else
     python -m pytest -q -m "not device and not slow"
 fi

@@ -361,6 +361,16 @@ def choose_device_route(est: Optional[ScanEstimate], n_devices: int,
     return "collective"
 
 
+def breaker_note(rung: str, verdict: str, action: str) -> str:
+    """Canonical circuit-breaker provenance line for ``Plan.degraded`` /
+    ``ScanStats.degraded``.  Deliberately *not* in the ``"from->to: why"``
+    rung-failure grammar — the health registry detects fresh rung failures
+    by the ``"<rung>->"`` prefix, and a pre-degrade note must never read
+    as one (an open breaker would then feed itself forever)."""
+    state = {"skip": "open", "probe": "half-open"}.get(verdict, verdict)
+    return f"breaker({rung}) {state}: {action}"
+
+
 def choose_batch_rows(n_rows: int, max_batch: int = 1 << 16) -> int:
     """Adaptive vectorization granularity for the in-memory engine: one
     batch when the input fits, cache-sized chunks (~512 KiB per int64

@@ -101,6 +101,30 @@ def payload_checksum(enc: EncodedColumn) -> int:
     return crc
 
 
+def clone_block(enc: EncodedColumn) -> EncodedColumn:
+    """Deep, independent copy of an encoded block: every ndarray payload is
+    materialized into fresh memory (no aliasing with the source), nested
+    encodings recurse, scalars copy by value.  This is the replica-copy
+    primitive of ``core/replica.py`` — a clone must keep verifying against
+    the source's build-time ``payload_checksum`` while staying immune to
+    corruption of the source's buffers (and vice versa)."""
+
+    def dup(v):
+        if isinstance(v, np.ndarray):
+            return np.ascontiguousarray(v).copy()
+        if isinstance(v, list):
+            return [dup(x) for x in v]
+        if isinstance(v, tuple):
+            return tuple(dup(x) for x in v)
+        if isinstance(v, EncodedColumn):
+            return clone_block(v)
+        return v
+
+    return dataclasses.replace(
+        enc, **{f.name: dup(getattr(enc, f.name))
+                for f in dataclasses.fields(enc)})
+
+
 def _pack_codes(codes: np.ndarray) -> np.ndarray:
     """Narrow integer codes to the smallest unsigned dtype that fits."""
     if codes.size == 0:

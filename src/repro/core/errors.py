@@ -22,6 +22,12 @@ The degradation ladder the fan-out walks on these errors — device
 collective → per-shard device launches → host pushdown → single-shard
 vectorized — is recorded step-by-step in ``ScanStats.degraded`` /
 ``Plan.degraded`` so a ``ResultSet`` always shows what degraded and why.
+Recovery layers on top (PR 7): a transient ``KernelLaunchError`` on the
+collective retries in-route before a rung drops, ``BlockCorruption`` is
+repaired in place from block replicas (``core/replica.py``) when one holds
+a verified copy, and repeat rung failures open cross-query circuit
+breakers (``core/health.py``) so the planner pre-degrades instead of
+re-walking the ladder.
 """
 from __future__ import annotations
 
@@ -154,3 +160,12 @@ class Deadline:
 
     def expired(self) -> bool:
         return self.remaining() <= 0.0
+
+    def check(self, stats: Any = None, completed: Optional[int] = None,
+              total: Optional[int] = None) -> None:
+        """Raise :class:`QueryTimeout` when expired — the one-line guard the
+        executors drop between blocks, merge-on-read stages and per-shard
+        kernel launches so ``deadline_s`` binds on every route."""
+        if self.expired():
+            raise QueryTimeout(self.seconds, self.elapsed(),
+                               completed=completed, total=total, stats=stats)

@@ -24,7 +24,7 @@ import contextlib
 import dataclasses
 import threading
 import time
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,6 +63,15 @@ class FaultPlan:
     * ``kernel_failures = k`` — the first ``k`` device kernel launches
       raise :class:`KernelLaunchError` (collective → per-shard → host
       pushdown degradation).
+    * ``fail_route[route] = k`` — the first ``k`` launches *on that route*
+      (``"collective"`` / ``"host"`` / ``"pushdown"``) raise, counted
+      per-route: a transient collective fault the in-route retry should
+      absorb is ``{"collective": 1}``.
+    * ``fail_route_persistent = ("collective", ...)`` — *every* launch on
+      the named routes raises, for as long as the plan is installed: the
+      persistently-broken-route scenario circuit breakers exist for
+      (breaker opens, later queries pre-degrade, a half-open probe after
+      the plan is uninstalled restores the route).
     * ``mlog_since_failures = k`` — the first ``k`` ``MLog.since`` calls
       raise a transient :class:`MLogPurged` (exercises the bounded retry).
     * ``purge_mlog_before_read`` — genuinely purge the MAV's mlog tail
@@ -76,12 +85,16 @@ class FaultPlan:
     fail_shard: Dict[int, int] = dataclasses.field(default_factory=dict)
     delay_shard: Dict[int, float] = dataclasses.field(default_factory=dict)
     kernel_failures: int = 0
+    fail_route: Dict[str, int] = dataclasses.field(default_factory=dict)
+    fail_route_persistent: Tuple[str, ...] = ()
     mlog_since_failures: int = 0
     purge_mlog_before_read: bool = False
     events: List[str] = dataclasses.field(default_factory=list)
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
     _kernel_calls: int = dataclasses.field(default=0, repr=False)
+    _route_calls: Dict[str, int] = dataclasses.field(
+        default_factory=dict, repr=False)
     _mlog_calls: int = dataclasses.field(default=0, repr=False)
     _purged: bool = dataclasses.field(default=False, repr=False)
 
@@ -110,6 +123,16 @@ class FaultPlan:
         with self._lock:
             self._kernel_calls += 1
             n = self._kernel_calls
+            self._route_calls[route] = self._route_calls.get(route, 0) + 1
+            rn = self._route_calls[route]
+        if route in self.fail_route_persistent:
+            self._record(f"persistent kernel fault on {route!r} launch #{rn}")
+            raise KernelLaunchError(
+                route, f"injected persistent fault on {route!r} #{rn}")
+        if rn <= self.fail_route.get(route, 0):
+            self._record(f"kernel fault on {route!r} route launch #{rn}")
+            raise KernelLaunchError(
+                route, f"injected route fault on {route!r} #{rn}")
         if n <= self.kernel_failures:
             self._record(f"kernel fault on {route!r} launch #{n}")
             raise KernelLaunchError(route, f"injected kernel fault #{n}")
@@ -150,3 +173,28 @@ def corrupt_block(store, column: str, block: int = 0) -> str:
             return f.name
     raise ValueError(
         f"block {block} of column {column!r} has no array payload to corrupt")
+
+
+def corrupt_replica(store, column: str, block: int = 0,
+                    replica: int = 0) -> str:
+    """Flip one byte in *replica* copy ``replica`` of one encoded baseline
+    block (the store must run with ``replication >= 2``).  The replica's own
+    checksum catches the flip during repair, so a primary corruption can
+    only be healed from the remaining healthy copies — corrupting every
+    copy makes the block deterministically unrepairable.  Returns the name
+    of the corrupted payload field."""
+    from .replica import replica_set
+    sr = replica_set(store)
+    if sr is None:
+        raise ValueError("store has no attached replica set "
+                         "(LSMStore(replication=k>=2))")
+    enc = sr.columns[column].copies[replica][block]
+    for f in dataclasses.fields(enc):
+        v = getattr(enc, f.name)
+        if isinstance(v, np.ndarray) and v.size:
+            w = np.ascontiguousarray(v).copy()
+            w.view(np.uint8).reshape(-1)[0] ^= 0x5A
+            setattr(enc, f.name, w)
+            return f.name
+    raise ValueError(f"replica {replica} of {column!r}/block {block} has "
+                     f"no array payload to corrupt")

@@ -1,0 +1,247 @@
+"""Cross-query health registry + route circuit breakers (paper §II
+"continuous availability": route around repeat offenders, don't rediscover
+them query by query).
+
+PR 6's degradation ladder is *stateless*: a persistently broken route —
+say every collective launch failing on a wedged mesh — is re-discovered by
+every single query, which pays the full walk (launch, fail, degrade,
+relaunch) before landing on the rung that works.  This module gives the
+``Database`` session memory across queries:
+
+* :class:`HealthRegistry` — one per ``Database``.  After every query the
+  session feeds it the executor's ``ScanStats`` plus wall latency;
+  it maintains EWMAs of per-table latency, per-rung failure rates and
+  shard-retry pressure (observability, surfaced by ``describe``), and a
+  :class:`Breaker` per (table, rung of the ladder).
+
+* :class:`Breaker` — the classic three-state circuit breaker, made fully
+  deterministic for tests: state advances on *query counts*, never wall
+  clock.  ``threshold`` consecutive failures of a rung open the breaker;
+  while open, ``consult`` tells the planner to **pre-degrade** (skip the
+  rung without attempting it — the ladder walk the paper's router avoids);
+  after ``cooldown`` consults the breaker goes half-open and the next
+  query becomes the **probe**: it attempts the rung normally, and its
+  outcome either closes the breaker (route re-admitted) or re-opens it
+  for another cool-down.  A query that doesn't exercise the rung leaves a
+  half-open breaker half-open (inconclusive probe).
+
+Breaker verdicts are recorded in ``Plan.degraded`` as
+``"breaker(<rung>) ..."`` notes — deliberately *not* in the
+``"from->to: why"`` rung-failure grammar, so provenance parsing (and the
+registry's own failure detection) never mistakes a pre-degrade for a
+fresh failure.
+
+The rungs a breaker can guard mirror the ladder:
+
+====================  ====================================================
+``device-collective``  single-launch collective kernel over the scan mesh
+``per-shard-device``   per-shard device launches + host tree-reduce
+``device``             the single-shard pushdown executor's device kernel
+``sharded``            the multi-shard fan-out itself
+====================  ====================================================
+
+Clean-path cost is one dict lookup per rung per query (no breakers exist
+until a failure is observed) — guarded ≤2% by the ``health_overhead_pct``
+key in BENCH_distributed.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+#: Ladder rungs a breaker can guard, in ladder order.
+RUNGS = ("device-collective", "per-shard-device", "device", "sharded")
+
+#: Default consecutive-failure count that opens a breaker.  1 is
+#: deliberately aggressive: a rung failure already survived the in-route
+#: retry (partition.py retries a transient collective once before the rung
+#: drops), so by the time a ``"rung->..."`` degradation is recorded the
+#: fault was not transient.
+DEFAULT_THRESHOLD = 1
+
+#: Default consults (queries planned against the table) an open breaker
+#: waits before going half-open and admitting a probe.
+DEFAULT_COOLDOWN = 2
+
+#: Default EWMA smoothing factor for the health metrics.
+DEFAULT_ALPHA = 0.25
+
+
+@dataclasses.dataclass
+class EWMA:
+    """One exponentially-weighted moving average (seeded by first sample)."""
+
+    value: float = 0.0
+    n: int = 0
+
+    def update(self, x: float, alpha: float) -> float:
+        self.value = x if self.n == 0 else alpha * x + (1 - alpha) * self.value
+        self.n += 1
+        return self.value
+
+
+@dataclasses.dataclass
+class Breaker:
+    """Deterministic circuit breaker for one (table, rung).
+
+    States: ``closed`` (rung runs normally) → ``open`` (rung pre-degraded,
+    after ``threshold`` consecutive failures) → ``half-open`` (after
+    ``cooldown`` consults; the next query probes the rung) → ``closed`` on
+    probe success / back to ``open`` on probe failure.  All transitions
+    count queries, never wall clock, so scenarios replay identically."""
+
+    rung: str
+    threshold: int = DEFAULT_THRESHOLD
+    cooldown: int = DEFAULT_COOLDOWN
+    state: str = "closed"
+    consecutive_failures: int = 0
+    open_consults: int = 0             # consults since the breaker opened
+    opened_total: int = 0              # times this breaker has opened
+
+    def consult(self, advance: bool = True) -> Optional[str]:
+        """The breaker's verdict for the query being planned: None (rung
+        runs normally), ``"skip"`` (open: pre-degrade the rung) or
+        ``"probe"`` (half-open: attempt the rung, outcome decides).  With
+        ``advance=False`` (``db.explain``) the verdict is reported without
+        consuming a cool-down tick or arming a probe."""
+        if self.state == "closed":
+            return None
+        if self.state == "open":
+            if advance:
+                self.open_consults += 1
+                if self.open_consults >= self.cooldown:
+                    self.state = "half-open"
+                    return "probe"
+            return "skip"
+        return "probe"                 # half-open: this query is the probe
+
+    def record_failure(self) -> None:
+        self.consecutive_failures += 1
+        if self.state == "half-open" or (
+                self.state == "closed"
+                and self.consecutive_failures >= self.threshold):
+            self.state = "open"
+            self.open_consults = 0
+            self.opened_total += 1
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+        if self.state == "half-open":
+            self.state = "closed"
+            self.open_consults = 0
+
+
+def rung_outcome(rung: str, stats: Any) -> Optional[bool]:
+    """Did ``rung`` fail (True), succeed (False), or not run (None) in this
+    query?  Failure is a ``"<rung>->..."`` entry in the degradation trail
+    (breaker notes use the ``"breaker(...)"`` grammar and never match);
+    success is the rung-specific evidence in ``ScanStats`` that the rung
+    produced the answer."""
+    if any(d.startswith(f"{rung}->") for d in stats.degraded):
+        return True
+    if rung == "device-collective":
+        if stats.used_device and stats.device_route == "collective":
+            return False
+    elif rung == "per-shard-device":
+        if stats.used_device and stats.n_shards > 0 \
+                and stats.device_route == "host":
+            return False
+    elif rung == "device":
+        if stats.used_device and stats.n_shards == 0:
+            return False
+    elif rung == "sharded":
+        if stats.n_shards > 0:
+            return False
+    return None
+
+
+class HealthRegistry:
+    """Per-``Database`` cross-query health state: EWMAs + breakers.
+
+    The session calls :meth:`consult` at plan time (the verdict dict rides
+    into the executors and ``Plan.degraded``) and :meth:`observe` after
+    execution (EWMAs update, breakers transition on the rung outcomes the
+    stats show)."""
+
+    def __init__(self, threshold: int = DEFAULT_THRESHOLD,
+                 cooldown: int = DEFAULT_COOLDOWN,
+                 alpha: float = DEFAULT_ALPHA):
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.alpha = alpha
+        self._breakers: Dict[Tuple[str, str], Breaker] = {}
+        self.latency_s: Dict[str, EWMA] = {}           # per table
+        self.failure_rate: Dict[Tuple[str, str], EWMA] = {}  # (table, rung)
+        self.shard_retries: Dict[str, EWMA] = {}       # per table
+        self.queries: Dict[str, int] = {}              # per table
+
+    # ----------------------------------------------------------- breakers
+    def breaker(self, table: str, rung: str) -> Breaker:
+        key = (table, rung)
+        if key not in self._breakers:
+            self._breakers[key] = Breaker(rung, self.threshold, self.cooldown)
+        return self._breakers[key]
+
+    def consult(self, table: str, advance: bool = True) -> Dict[str, str]:
+        """Breaker verdicts for a query being planned against ``table``:
+        ``{rung: "skip" | "probe"}`` for every non-closed breaker.  The
+        planner/executors pre-degrade the ``skip`` rungs and run ``probe``
+        rungs normally; ``advance=False`` (explain) reports without
+        consuming cool-down ticks."""
+        out: Dict[str, str] = {}
+        for rung in RUNGS:
+            br = self._breakers.get((table, rung))
+            if br is None:
+                continue
+            verdict = br.consult(advance)
+            if verdict is not None:
+                out[rung] = verdict
+        return out
+
+    # -------------------------------------------------------- observation
+    def observe(self, table: str, stats: Any,
+                latency_s: Optional[float] = None) -> None:
+        """Fold one finished query's ``ScanStats`` (+ wall latency) into the
+        table's health state.  Rungs the query exercised update their
+        failure EWMAs and drive their breakers; rungs it never touched are
+        left alone (an open breaker's skip must not read as recovery)."""
+        self.queries[table] = self.queries.get(table, 0) + 1
+        if latency_s is not None:
+            self.latency_s.setdefault(table, EWMA()).update(
+                latency_s, self.alpha)
+        self.shard_retries.setdefault(table, EWMA()).update(
+            float(getattr(stats, "shard_retries", 0)), self.alpha)
+        for rung in RUNGS:
+            failed = rung_outcome(rung, stats)
+            if failed is None:
+                continue
+            self.failure_rate.setdefault((table, rung), EWMA()).update(
+                1.0 if failed else 0.0, self.alpha)
+            br = self.breaker(table, rung)
+            if failed:
+                br.record_failure()
+            else:
+                br.record_success()
+
+    # ------------------------------------------------------ introspection
+    def describe(self, table: str) -> List[str]:
+        """Human-readable health lines for ``table`` (the dashboard /
+        explain surface): query count, latency EWMA, per-rung failure
+        EWMAs, and every non-closed (or previously-opened) breaker."""
+        out = [f"queries={self.queries.get(table, 0)}"]
+        lat = self.latency_s.get(table)
+        if lat is not None and lat.n:
+            out.append(f"latency_ewma={lat.value * 1e3:.2f}ms (n={lat.n})")
+        sr = self.shard_retries.get(table)
+        if sr is not None and sr.n and sr.value > 0:
+            out.append(f"shard_retry_ewma={sr.value:.2f}")
+        for rung in RUNGS:
+            fr = self.failure_rate.get((table, rung))
+            if fr is not None and fr.n:
+                out.append(f"{rung}: failure_ewma={fr.value:.2f} (n={fr.n})")
+            br = self._breakers.get((table, rung))
+            if br is not None and (br.state != "closed" or br.opened_total):
+                out.append(f"breaker({rung}): state={br.state} "
+                           f"consecutive_failures={br.consecutive_failures} "
+                           f"opened_total={br.opened_total}")
+        return out

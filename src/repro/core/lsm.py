@@ -27,6 +27,7 @@ import numpy as np
 
 from .encoding import EncodedColumn, choose_encoding, payload_checksum
 from .errors import BlockCorruption
+from .replica import collect as _collect_repairs, event_mark as _repair_mark
 from .relation import And, Column, ColType, PredOp, Predicate, Schema, Table
 from .skipping import Sketch, SkippingIndex, Verdict, DEFAULT_BLOCK_ROWS
 from .vec import BatchAttrs
@@ -149,6 +150,11 @@ class ColumnSSTable:
     quarantined: set = dataclasses.field(default_factory=set)
     _verified: Optional[List[bool]] = dataclasses.field(
         default=None, repr=False)
+    # attached ColumnReplicas handle (core/replica.py) when the store runs
+    # with replication — verify_block uses it to repair a corrupt block in
+    # place instead of failing the query
+    replicas: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def nbytes(self) -> int:
         return sum(b.nbytes() for b in self.blocks) + self.index.nbytes()
@@ -156,8 +162,11 @@ class ColumnSSTable:
     def verify_block(self, b: int) -> None:
         """Checksum-verify block ``b`` against its build-time CRC, memoized
         (one CRC pass per block per SSTable lifetime, so the clean-path
-        overhead is a list lookup).  Raises ``BlockCorruption`` and
-        quarantines the block on mismatch."""
+        overhead is a list lookup).  On mismatch, tries in-place repair from
+        an attached replica set (core/replica.py): a verified replica copy
+        replaces the corrupt payload, the quarantine is lifted and the read
+        proceeds bit-identically.  Only when no healthy copy exists does the
+        block stay quarantined and ``BlockCorruption`` raise."""
         if self.checksums is None:
             return
         if self._verified is None:
@@ -167,6 +176,10 @@ class ColumnSSTable:
         got = payload_checksum(self.blocks[b])
         if got != self.checksums[b]:
             self.quarantined.add(b)
+            if self.replicas is not None and self.replicas.repair(self, b):
+                self.quarantined.discard(b)
+                self._verified[b] = True
+                return
             raise BlockCorruption(self.name, b, self.checksums[b], got)
         self._verified[b] = True
 
@@ -342,6 +355,13 @@ class ScanStats:
     hedges: int = 0                    # straggler back-up dispatches
     purge_fallback: bool = False       # MAV read fell back to full refresh
     mlog_retries: int = 0              # bounded MLog.since retries that ran
+    kernel_retries: int = 0            # in-route collective retries (a
+                                       # transient launch failure retried
+                                       # without dropping a ladder rung)
+    repaired: List[str] = dataclasses.field(default_factory=list)
+    #                                  # block-repair events this query
+    #                                  # triggered ("repaired col/block b
+    #                                  # from replica r")
 
     def absorb(self, other: "ScanStats") -> None:
         """Fold one shard's counters into the query-level stats (the
@@ -362,10 +382,14 @@ class LSMStore:
     """
 
     def __init__(self, schema: Schema, block_rows: int = DEFAULT_BLOCK_ROWS,
-                 memtable_limit: int = 4096):
+                 memtable_limit: int = 4096, replication: int = 1):
         self.schema = schema
         self.block_rows = block_rows
         self.memtable_limit = memtable_limit
+        # replication >= 2: keep k-way replica copies of every baseline block
+        # (re-cloned after each compaction) so a corrupt block is repaired in
+        # place instead of quarantined for the store's lifetime
+        self.replication = replication
         self.memtable = MemTable(schema)
         self.minors: List[MinorSSTable] = []
         self.baseline: VirtualSSTable = VirtualSSTable.build(
@@ -373,6 +397,16 @@ class LSMStore:
         self._ts = 0
         self.redo_log: List[Tuple[int, DmlType, Any, Optional[Dict[str, Any]]]] = []
         self.mlog_sinks: List[Any] = []  # MLog observers (mview.py)
+        self._refresh_replicas()
+
+    def _refresh_replicas(self) -> None:
+        """(Re-)attach the replica set to the current baseline when the
+        store runs with replication (every new baseline invalidates the
+        previous clones — a replica is only a valid repair source for the
+        exact build it was cloned from)."""
+        if self.replication >= 2:
+            from .replica import enable_replication
+            enable_replication(self, self.replication)
 
     # --- write path ---------------------------------------------------------
 
@@ -453,6 +487,7 @@ class LSMStore:
         self.baseline = VirtualSSTable.build(self.schema, tbl, ts,
                                              self.block_rows)
         assert self.baseline.nrows == n
+        self._refresh_replicas()
         return ts
 
     def bulk_insert_rows(self, columns: Dict[str, Any]) -> int:
@@ -509,6 +544,7 @@ class LSMStore:
             if newer:
                 kept.append(MinorSSTable(self.schema, newer))
         self.minors = kept
+        self._refresh_replicas()
         return version
 
     # --- read path ------------------------------------------------------------
@@ -536,19 +572,27 @@ class LSMStore:
         return {pk: v for pk, v in out.items() if v.ts > self.baseline.version}
 
     def live_incremental_rows(self, inc: Dict[Any, Version],
-                              preds: Sequence[Predicate] = ()
+                              preds: Sequence[Predicate] = (),
+                              deadline: Optional[Any] = None,
                               ) -> List[Dict[str, Any]]:
         """Predicate filter over live (non-DELETE) incremental versions —
         the merge-on-read half shared by ``scan``, the pushdown executor and
         the sharded fan-out.  The live rows are batched into a row-format
         block (one materialized ``Column`` per predicate column) and run
         through the same vectorized ``Predicate.eval`` path as baseline
-        blocks, instead of row-at-a-time Python evaluation."""
+        blocks, instead of row-at-a-time Python evaluation.  Checks the
+        per-query ``deadline`` between materialization stages so a
+        write-heavy scan (large incremental set) can't blow past
+        ``deadline_s`` inside merge-on-read assembly."""
+        if deadline is not None:
+            deadline.check()
         live = [v.row for v in inc.values() if v.op != DmlType.DELETE]
         if not live or not preds:
             return live
         mask = np.ones(len(live), bool)
         for p in preds:
+            if deadline is not None:
+                deadline.check()
             col = Column.from_values(self.schema.spec(p.column),
                                      [r[p.column] for r in live])
             mask &= p.eval(col)
@@ -581,6 +625,7 @@ class LSMStore:
         ts = self._ts if ts is None else ts
         columns = list(columns or self.schema.names)
         stats = ScanStats(used_pushdown=bool(preds))
+        _rmark = _repair_mark(self)
         inc = self._incremental_effective(ts)
         stats.rows_merged_incremental = len(inc)
 
@@ -682,6 +727,7 @@ class LSMStore:
             out_cols[name] = Column(spec, merged,
                                     nmask if nmask.any() else None)
         tbl = Table(sub_schema, out_cols)
+        _collect_repairs(self, _rmark, stats)
         return tbl, stats
 
     # --- aggregate pushdown -----------------------------------------------------
@@ -694,6 +740,7 @@ class LSMStore:
         incremental data; falls back to merged scan otherwise."""
         ts = self._ts if ts is None else ts
         stats = ScanStats(used_pushdown=True)
+        _rmark = _repair_mark(self)
         inc = self._incremental_effective(ts)
         base = self.baseline
         col = column or self.schema.pk
@@ -774,6 +821,7 @@ class LSMStore:
                 if isinstance(v.row[col], (int, float)):
                     total_sum += v.row[col]
         stats.rows_merged_incremental = len(inc)
+        _collect_repairs(self, _rmark, stats)
         if agg == "count":
             return total_count, stats
         if agg == "sum":

@@ -61,6 +61,7 @@ import numpy as np
 from . import cost
 from . import faultinject
 from . import pushdown as _pd
+from . import replica as _replica
 from .engine import (Query, VectorEngine, _item, null_aware_key_codes,
                      null_last_key, pack_sort_keys)
 from .errors import (BlockCorruption, Deadline, KeyPackError, QueryTimeout,
@@ -462,7 +463,8 @@ class ShardedScanExecutor:
                  limit_pushdown: bool = True,
                  max_attempts: int = 3,
                  retry_backoff_s: float = 0.02,
-                 hedge: bool = True):
+                 hedge: bool = True,
+                 breaker: Optional[Dict[str, str]] = None):
         # n_shards None == cost-based: the planner picks the fan-out width
         # per query from the estimated surviving-row count (a selective
         # probe stays single-shard, a full scan fans out to the cores).
@@ -488,6 +490,13 @@ class ShardedScanExecutor:
         self.max_attempts = max(int(max_attempts), 1)
         self.retry_backoff_s = retry_backoff_s
         self.hedge = hedge
+        # Circuit-breaker verdicts from the session's HealthRegistry
+        # ({rung: "skip" | "probe"}): "skip" pre-degrades a known-bad device
+        # rung without attempting it (even past a device_route pin —
+        # availability wins over the pin, and the override is recorded in
+        # the degradation provenance); "probe" runs the rung normally as a
+        # half-open probe.
+        self.breaker = breaker or {}
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -504,11 +513,21 @@ class ShardedScanExecutor:
         stats = ScanStats(used_pushdown=True)
         self.last_stats = stats
         deadline = Deadline.start(deadline_s)
+        rmark = _replica.event_mark(store)
+        try:
+            return self._execute_stats(store, q, ts, stats, deadline)
+        finally:
+            # per-query repair provenance: every block healed while this
+            # query ran (any shard, any route) rides out in stats.repaired
+            _replica.collect(store, rmark, stats)
 
+    def _execute_stats(self, store: LSMStore, q: Query, ts: int,
+                       stats: ScanStats, deadline: Optional[Deadline]
+                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         # -- stages 0–1 shared with PushdownExecutor: merge-on-read
         # bookkeeping + global zone-map prune (verdicts sliced per shard)
-        needed, over, inc_rows, verdicts = _pd.scan_preamble(store, q, ts,
-                                                             stats)
+        needed, over, inc_rows, verdicts = _pd.scan_preamble(
+            store, q, ts, stats, deadline=deadline)
 
         # -- cost model: estimate surviving rows from the sketches, pick
         # the fan-out width and the per-shard scan granularity
@@ -522,7 +541,8 @@ class ShardedScanExecutor:
         shards = range_partition(store.baseline, n_shards)
 
         if self.device and not inc_rows and not over.size:
-            out = self._try_device(store, q, shards, verdicts, stats, est)
+            out = self._try_device(store, q, shards, verdicts, stats, est,
+                                   deadline)
             if out is not None:
                 cost.observe_scan(store, est, stats.actual_rows)
                 return out, stats
@@ -785,8 +805,8 @@ class ShardedScanExecutor:
                                     nulls=lambda nm: masks[nm])
 
     # ------------------------------------------------------- device path
-    def _try_device(self, store, q, shards, verdicts, stats, est=None
-                    ) -> Optional[List[Dict[str, Any]]]:
+    def _try_device(self, store, q, shards, verdicts, stats, est=None,
+                    deadline=None) -> Optional[List[Dict[str, Any]]]:
         """Stage the fused-kernel inputs once and fan the kernel out over
         the per-shard block slices, on the route the cost model picks (or
         ``self.device_route`` pins):
@@ -804,7 +824,25 @@ class ShardedScanExecutor:
           ``GroupedPartial.merge``.
 
         Either route launches with the cost-model tile height (blocks fused
-        per grid step) chosen from the selectivity estimate."""
+        per grid step) chosen from the selectivity estimate.
+
+        Self-healing (PR 7): the deadline is checked before staging and
+        between per-shard launches so ``deadline_s`` binds on the device
+        paths; a transient collective failure retries the collective once
+        in-route (``stats.kernel_retries``) before the rung drops; and an
+        open circuit breaker from the session's health registry
+        pre-degrades a known-bad rung without attempting it."""
+        if self.breaker.get("per-shard-device") == "skip" \
+                and (self.breaker.get("device-collective") == "skip"
+                     or self.device_route == "host"):
+            # both device rungs this executor could run are known-bad (or
+            # the collective one is pinned away): skip staging entirely
+            stats.degraded.append(cost.breaker_note(
+                "per-shard-device", "skip",
+                "pre-degraded to host-pushdown fan-out"))
+            return None
+        if deadline is not None:
+            deadline.check(stats)
         plan = _pd.plan_device(store, q)
         if plan is None:
             return None
@@ -827,30 +865,72 @@ class ShardedScanExecutor:
         stats.n_devices = int(mesh.devices.size)
         route = self.device_route or cost.choose_device_route(
             est, stats.n_devices, len(active))
+        if route == "collective":
+            verdict = self.breaker.get("device-collective")
+            if verdict == "skip":
+                # open breaker: pre-degrade the collective rung without
+                # attempting it — even past a device_route pin
+                # (availability over pin), recorded in the provenance
+                stats.degraded.append(cost.breaker_note(
+                    "device-collective", "skip",
+                    "pre-degraded to per-shard-device"))
+                route = "host"
+            elif verdict == "probe":
+                stats.degraded.append(cost.breaker_note(
+                    "device-collective", "probe",
+                    "attempting collective route"))
         stats.device_route = route
         fp = faultinject.active()
         out = None
         if route == "collective":
-            try:
-                if fp is not None:
-                    fp.on_kernel_launch("collective")
-                out = self._device_collective(q, plan, stage, active,
-                                              block_mask, mesh, tile, stats,
-                                              ops)
-            except (QueryTimeout, BlockCorruption):
-                raise
-            except Exception as e:
-                # rung 1: the single-launch collective failed — fall back
-                # to per-shard device launches with a host-side merge
-                stats.degraded.append(
-                    "device-collective->per-shard-device: "
-                    f"{type(e).__name__}: {e}")
-                stats.device_route = route = "host"
+            # In-route retry: one transient collective failure relaunches
+            # the collective before the rung drops (the first launch may
+            # have failed on a transient — a second failure is treated as
+            # persistent and degrades as before).
+            for rattempt in range(2):
+                try:
+                    if fp is not None:
+                        fp.on_kernel_launch("collective")
+                    out = self._device_collective(q, plan, stage, active,
+                                                  block_mask, mesh, tile,
+                                                  stats, ops)
+                    break
+                except (QueryTimeout, BlockCorruption):
+                    raise
+                except Exception as e:
+                    if rattempt == 0:
+                        stats.kernel_retries += 1
+                        if deadline is not None:
+                            deadline.check(stats)
+                        continue
+                    # rung 1: the collective failed twice — fall back to
+                    # per-shard device launches with a host-side merge
+                    stats.degraded.append(
+                        "device-collective->per-shard-device: "
+                        f"{type(e).__name__}: {e}")
+                    stats.device_route = route = "host"
         if out is None:
+            verdict = self.breaker.get("per-shard-device")
+            if verdict == "skip":
+                stats.degraded.append(cost.breaker_note(
+                    "per-shard-device", "skip",
+                    "pre-degraded to host-pushdown fan-out"))
+                stats.used_device = False
+                stats.device_route = ""
+                stats.blocks_skipped = 0
+                stats.blocks_scanned = 0
+                stats.n_devices = 0
+                return None
+            if verdict == "probe":
+                stats.degraded.append(cost.breaker_note(
+                    "per-shard-device", "probe",
+                    "attempting per-shard launches"))
             try:
                 devices = scan_shard_devices(len(shards), mesh)
                 launched = launch_shard_kernels(plan, stage, active,
-                                                block_mask, devices, tile)
+                                                block_mask, devices, tile,
+                                                deadline=deadline,
+                                                stats=stats)
                 partials = [tuple(np.asarray(x) for x in o)
                             for o in launched]
                 out = tree_reduce(partials, device_partial_combine) + (None,)
@@ -964,19 +1044,23 @@ def stack_device_stage(stage, shards: Sequence[BlockShard],
 
 
 def launch_shard_kernels(plan, stage, shards: Sequence[BlockShard],
-                         block_mask: np.ndarray, devices, tile: int = 1):
+                         block_mask: np.ndarray, devices, tile: int = 1,
+                         deadline=None, stats=None):
     """Per-shard-launch device route: dispatch the fused kernel for every
     shard's block slice (round-robin placement by shard id) and return the
     raw per-shard outputs.  Every kernel is launched before any result is
     blocked on — jax dispatch is async, so on a multi-device mesh the
-    shards overlap.  Shared by ``ShardedScanExecutor._try_device`` and the
-    route benchmark, so the bench always measures the loop the engine
-    runs."""
+    shards overlap.  The per-query ``deadline`` is checked between
+    launches so ``deadline_s`` binds on this route too.  Shared by
+    ``ShardedScanExecutor._try_device`` and the route benchmark, so the
+    bench always measures the loop the engine runs."""
     import jax
     from ..kernels import ops
     fp = faultinject.active()
     outs = []
     for shard in shards:
+        if deadline is not None:
+            deadline.check(stats, completed=len(outs), total=len(shards))
         if fp is not None:
             fp.on_kernel_launch("host")
         sl = slice(shard.lo_block, shard.hi_block)

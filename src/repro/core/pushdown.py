@@ -65,6 +65,8 @@ from .encoding import DeltaFOREncoded, DictEncoded, PlainEncoded
 from .engine import Query, VectorEngine, _item
 from .errors import BlockCorruption, Deadline, QueryTimeout
 from .lsm import BlockView, LSMStore, ScanStats, eval_block_pred
+from .replica import (collect as _collect_repairs,
+                      event_mark as _repair_mark)
 from .relation import ColType, Column, PredOp
 from .skipping import Sketch, Verdict
 
@@ -130,21 +132,26 @@ class _SketchAgg:
         return True
 
 
-def scan_preamble(store: LSMStore, q: Query, ts: int, stats: ScanStats
+def scan_preamble(store: LSMStore, q: Query, ts: int, stats: ScanStats,
+                  deadline: Optional[Deadline] = None
                   ) -> Tuple[List[str], np.ndarray, List[Dict[str, Any]],
                              np.ndarray]:
     """Stages 0–1, shared by the single-shard executor and the sharded
     fan-out: merge-on-read bookkeeping (incremental versions, overridden
     baseline rows, vectorized live-row filter) and the zone-map prune.
-    Returns (needed columns, overridden row ids, live incremental rows,
-    per-block verdicts)."""
+    The per-query ``deadline`` threads into the live-row filter so
+    write-heavy scans (large incremental sets) respect ``deadline_s``
+    inside merge-on-read assembly too.  Returns (needed columns,
+    overridden row ids, live incremental rows, per-block verdicts)."""
     base = store.baseline
     needed = sorted(VectorEngine.columns_needed(q, store.schema.names))
     inc = store._incremental_effective(ts)
     stats.rows_merged_incremental = len(inc)
+    if deadline is not None:
+        deadline.check(stats)
     over = np.asarray(sorted(i for i in (base.locate(pk) for pk in inc)
                              if i >= 0), np.int64)
-    inc_rows = store.live_incremental_rows(inc, q.preds)
+    inc_rows = store.live_incremental_rows(inc, q.preds, deadline=deadline)
     stats.blocks_total = base.n_blocks
     verdicts = cost.prune_verdicts(store, q.preds)
     return needed, over, inc_rows, verdicts
@@ -322,7 +329,8 @@ class PushdownExecutor:
 
     def __init__(self, engine: Optional[VectorEngine] = None,
                  device: bool = False,
-                 granularity: Optional[int] = None):
+                 granularity: Optional[int] = None,
+                 breaker: Optional[Dict[str, str]] = None):
         self.engine = engine or VectorEngine()
         self.device = device
         # granularity None == selectivity-adaptive (cost model chooses the
@@ -330,6 +338,10 @@ class PushdownExecutor:
         # an explicit int pins the coalescing factor (1 == legacy
         # block-at-a-time, used by the granularity-sweep benchmarks).
         self.granularity = granularity
+        # Circuit-breaker verdicts from the session's HealthRegistry:
+        # {"device": "skip"} pre-degrades the device kernel rung without
+        # attempting it; "probe" runs it normally as a half-open probe.
+        self.breaker = breaker or {}
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -346,9 +358,19 @@ class PushdownExecutor:
         stats = ScanStats(used_pushdown=True)
         self.last_stats = stats
         deadline = Deadline.start(deadline_s)
+        rmark = _repair_mark(store)
+        try:
+            return self._execute_stats(store, q, ts, stats, deadline)
+        finally:
+            # per-query repair provenance: blocks healed during this query
+            _collect_repairs(store, rmark, stats)
 
+    def _execute_stats(self, store: LSMStore, q: Query, ts: int,
+                       stats: ScanStats, deadline: Optional[Deadline]
+                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         # -- stages 0–1: merge-on-read bookkeeping + zone-map prune ------
-        needed, over, inc_rows, verdicts = scan_preamble(store, q, ts, stats)
+        needed, over, inc_rows, verdicts = scan_preamble(store, q, ts, stats,
+                                                         deadline=deadline)
         nb = store.baseline.n_blocks
 
         # -- pre-scan cost model: estimate selectivity from the sketches,
@@ -365,7 +387,7 @@ class PushdownExecutor:
 
         # -- optional fused device kernel for the supported shape --------
         if self.device and not inc_rows and not over.size:
-            out = self._try_device(store, q, verdicts, stats, est)
+            out = self._try_device(store, q, verdicts, stats, est, deadline)
             if out is not None:
                 cost.observe_scan(store, est, stats.actual_rows)
                 return out, stats
@@ -511,13 +533,28 @@ class PushdownExecutor:
     # ------------------------------------------------------- device path
     def _try_device(self, store: LSMStore, q: Query, verdicts: np.ndarray,
                     stats: ScanStats,
-                    est: Optional["cost.ScanEstimate"] = None
+                    est: Optional["cost.ScanEstimate"] = None,
+                    deadline: Optional[Deadline] = None
                     ) -> Optional[List[Dict[str, Any]]]:
         """Route the fused-kernel-supported shape to the Pallas device path:
         an optional range predicate over a FOR/plain int column, 1–3 group-by
         keys (int or dictionary string), numeric aggregates over up to four
         value columns.  The cost model picks the kernel tile height
-        (blocks fused per grid step) from the selectivity estimate."""
+        (blocks fused per grid step) from the selectivity estimate.  The
+        per-query deadline is checked before staging/launch (``deadline_s``
+        binds on the device path); an open ``"device"`` circuit breaker
+        pre-degrades to the host pushdown scan without attempting the
+        launch."""
+        verdict = self.breaker.get("device")
+        if verdict == "skip":
+            stats.degraded.append(cost.breaker_note(
+                "device", "skip", "pre-degraded to host-pushdown"))
+            return None
+        if verdict == "probe":
+            stats.degraded.append(cost.breaker_note(
+                "device", "probe", "attempting device kernel"))
+        if deadline is not None:
+            deadline.check(stats)
         plan = plan_device(store, q)
         if plan is None:
             return None
@@ -535,6 +572,8 @@ class PushdownExecutor:
             tile = cost.choose_device_tile(est, store.baseline.block_rows)
         stats.device_tile_blocks = tile
         from ..kernels import ops
+        if deadline is not None:
+            deadline.check(stats)
         try:
             fp = faultinject.active()
             if fp is not None:

@@ -1,0 +1,207 @@
+"""Block replica sets + in-place corruption repair (paper §II
+"continuous availability").
+
+PR 6 gave the storage layer *detection*: build-time CRCs over every encoded
+baseline block, verified (memoized) on first read, with a mismatch
+quarantining the block and failing the query.  Detection without recovery
+is lossy — quarantine was permanent for the store's lifetime and the store
+stayed excluded from MAV rewrites forever.  This module is the recovery
+half, modelled on the paper's multi-replica baseline (a major compaction is
+deterministic for a given version, so every replica holds byte-identical
+baseline blocks) and PolarDB-IMCI's replicated column indexes:
+
+* ``enable_replication(store, k)`` attaches ``k-1`` *replica copies* of
+  every encoded baseline block — deep clones with **independently
+  computed** build-time checksums, so a replica's integrity never depends
+  on the primary's checksum list being intact.
+* On a checksum mismatch, ``ColumnSSTable.verify_block`` quarantines the
+  block and asks its :class:`ColumnReplicas` handle to **repair in place**:
+  the first replica copy that verifies against its own checksum (and
+  round-trips to the primary's build-time CRC) replaces the corrupt
+  payload, the quarantine is lifted, and the read proceeds as if nothing
+  happened — the query answer is bit-identical to a clean run.
+* Every repair (or failed repair) appends a ``repaired``/``unrepairable``
+  event to the store-level log; executors collect the tail into
+  ``ScanStats.repaired`` so ``ResultSet``/``Plan`` provenance shows
+  exactly which blocks were healed mid-query.
+* Once the store is clean again (``LSMStore.has_quarantined_blocks()``
+  back to False), MAV-rewrite eligibility is restored automatically.
+
+Only when **every** copy of a block is corrupt does the read raise
+:class:`~.errors.BlockCorruption` — and then the quarantine is permanent,
+exactly the PR 6 behaviour (never a silently wrong answer).
+
+Replicas are rebuilt on every new baseline (``LSMStore(replication=k)``
+re-attaches after ``major_compact`` / ``bulk_insert``); the clean query
+path is untouched — replica copies are only ever read inside the repair
+path, so the steady-state cost is storage, not latency (guarded by the
+``replica_overhead_pct`` key in BENCH_distributed.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+from .encoding import EncodedColumn, clone_block, payload_checksum
+
+
+@dataclasses.dataclass
+class ColumnReplicas:
+    """Replica copies of one column's encoded baseline blocks.
+
+    ``copies[r][b]`` is replica ``r``'s clone of block ``b`` and
+    ``checksums[r][b]`` its independently computed build-time CRC.
+    ``events`` is shared with the store-level :class:`StoreReplicas` log so
+    repairs across columns land in one ordered stream."""
+
+    column: str
+    copies: List[List[EncodedColumn]]
+    checksums: List[List[int]]
+    events: List[str]
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    @property
+    def k(self) -> int:
+        """Total copy count including the primary."""
+        return len(self.copies) + 1
+
+    def repair(self, cst, b: int) -> bool:
+        """Replace the primary payload of block ``b`` with a verified
+        replica clone.  Returns True when the primary once again matches
+        its build-time checksum (either this call repaired it or a
+        concurrent shard already did), False when every replica copy is
+        corrupt too.  Thread-safe: concurrent shards hitting the same
+        corrupt block serialize here and the repair happens once."""
+        with self._lock:
+            if payload_checksum(cst.blocks[b]) == cst.checksums[b]:
+                return True            # another thread repaired it already
+            for r, (blocks, sums) in enumerate(zip(self.copies,
+                                                   self.checksums)):
+                enc = blocks[b]
+                if payload_checksum(enc) != sums[b]:
+                    continue           # this replica is corrupt as well
+                restored = clone_block(enc)
+                if payload_checksum(restored) != cst.checksums[b]:
+                    continue           # replica diverged from the primary
+                                       # build (checksummed independently,
+                                       # so this is detectable)
+                cst.blocks[b] = restored
+                self.events.append(
+                    f"repaired {self.column}/block {b} from replica {r}")
+                return True
+            self.events.append(
+                f"unrepairable {self.column}/block {b}: all "
+                f"{len(self.copies)} replica(s) corrupt")
+            return False
+
+
+@dataclasses.dataclass
+class StoreReplicas:
+    """The store-level replica set: one :class:`ColumnReplicas` per baseline
+    column, all sharing one ordered ``events`` log, pinned to the baseline
+    ``version`` they were cloned from."""
+
+    k: int
+    version: int
+    columns: Dict[str, ColumnReplicas]
+    events: List[str]
+
+    def nbytes(self) -> int:
+        return sum(enc.nbytes() for cr in self.columns.values()
+                   for blocks in cr.copies for enc in blocks)
+
+    def scrub(self) -> List[str]:
+        """Background integrity pass: verify every copy of every block and
+        heal what can be healed — corrupt primaries are repaired from a
+        healthy replica, corrupt replicas are re-cloned from a verified
+        primary.  Returns the events appended by this pass."""
+        mark = len(self.events)
+        for name, cr in self.columns.items():
+            # reach the primary through the back-reference recorded at
+            # attach time (set in enable_replication)
+            cst = getattr(cr, "_primary", None)
+            if cst is None:
+                continue
+            for b in range(len(cst.blocks)):
+                primary_ok = (payload_checksum(cst.blocks[b])
+                              == cst.checksums[b])
+                if not primary_ok:
+                    cst.mark_unverified(b)
+                    cst.quarantined.add(b)
+                    if cr.repair(cst, b):
+                        cst.quarantined.discard(b)
+                        primary_ok = True
+                for r, (blocks, sums) in enumerate(zip(cr.copies,
+                                                       cr.checksums)):
+                    if payload_checksum(blocks[r_b := b]) == sums[r_b]:
+                        continue
+                    if primary_ok:
+                        blocks[b] = clone_block(cst.blocks[b])
+                        sums[b] = payload_checksum(blocks[b])
+                        self.events.append(
+                            f"scrub: re-cloned {name}/block {b} "
+                            f"replica {r} from primary")
+                    else:
+                        self.events.append(
+                            f"scrub: {name}/block {b} replica {r} corrupt "
+                            f"and no healthy source")
+        return self.events[mark:]
+
+
+def enable_replication(store, k: int = 2) -> StoreReplicas:
+    """Attach a ``k``-way replica set to ``store``'s current baseline:
+    ``k-1`` deep clones of every encoded block, each checksummed
+    independently at attach time.  Verifies the primary first (a corrupt
+    block must never be replicated — that would launder the corruption into
+    the recovery path).  Re-attaching after a new baseline replaces the
+    old set wholesale."""
+    if k < 2:
+        raise ValueError(f"replication factor must be >= 2, got {k}")
+    base = store.baseline
+    events: List[str] = []
+    columns: Dict[str, ColumnReplicas] = {}
+    for name, cst in base.cols.items():
+        for b in range(len(cst.blocks)):
+            cst.verify_block(b)        # raises BlockCorruption on a bad
+                                       # primary: nothing gets attached
+        copies = []
+        checksums = []
+        for _ in range(k - 1):
+            blocks = [clone_block(enc) for enc in cst.blocks]
+            copies.append(blocks)
+            checksums.append([payload_checksum(enc) for enc in blocks])
+        cr = ColumnReplicas(name, copies, checksums, events)
+        cr._primary = cst              # scrub() back-reference
+        cst.replicas = cr
+        columns[name] = cr
+    sr = StoreReplicas(k, base.version, columns, events)
+    store._replicas = sr
+    return sr
+
+
+def replica_set(store) -> Optional[StoreReplicas]:
+    """The store's attached replica set, or None.  Stale sets (attached to
+    a previous baseline version) don't count — a new baseline must
+    re-attach."""
+    sr = getattr(store, "_replicas", None)
+    if sr is not None and sr.version != store.baseline.version:
+        return None
+    return sr
+
+
+def event_mark(store) -> int:
+    """Current length of the store's repair-event log (0 when replication
+    is off) — executors snapshot this at query start and ``collect`` the
+    tail into ``ScanStats.repaired`` at query end."""
+    sr = getattr(store, "_replicas", None)
+    return len(sr.events) if sr is not None else 0
+
+
+def collect(store, mark: int, stats) -> None:
+    """Append the repair events logged since ``mark`` to
+    ``stats.repaired`` (per-query repair provenance)."""
+    sr = getattr(store, "_replicas", None)
+    if sr is not None and len(sr.events) > mark:
+        stats.repaired.extend(sr.events[mark:])

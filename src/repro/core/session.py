@@ -57,8 +57,11 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import time
+
 from . import cost
 from .engine import QAgg, Query, ScalarEngine, VectorEngine
+from .health import HealthRegistry
 from .lsm import LSMStore, ScanStats
 from .mview import (MAVDefinition, MJVDefinition, MLog, MLogPurged,
                     MaterializedAggView, MaterializedJoinView)
@@ -197,9 +200,17 @@ class Plan:
         default=None, repr=False)      # MV emit mapping (execution detail)
     # Fault provenance: every degradation step the query took, in order
     # ("from->to: why" strings — plan-time entries first, then the
-    # executor's ScanStats.degraded), plus bounded MLog.since retries.
+    # executor's ScanStats.degraded — plus "breaker(<rung>) ..." notes for
+    # circuit-breaker pre-degrades and half-open probes), bounded
+    # MLog.since retries, and every block repaired in place from a replica
+    # while the query ran.
     degraded: List[str] = dataclasses.field(default_factory=list)
     mlog_retries: int = 0
+    repaired: List[str] = dataclasses.field(default_factory=list)
+    # breaker verdicts ({rung: "skip" | "probe"}) consulted at plan time —
+    # execution detail the executors consume, not part of repr
+    breaker: Dict[str, str] = dataclasses.field(
+        default_factory=dict, repr=False)
 
     def describe(self) -> str:
         bits = [f"route={self.route}"]
@@ -214,6 +225,8 @@ class Plan:
             bits.append("pinned")
         if self.degraded:
             bits.append("degraded=[" + "; ".join(self.degraded) + "]")
+        if self.repaired:
+            bits.append("repaired=[" + "; ".join(self.repaired) + "]")
         return f"Plan({', '.join(bits)}: {self.reason})"
 
 
@@ -462,10 +475,19 @@ class Database:
 
     def __init__(self, store: Optional[LSMStore] = None, name: str = "main",
                  mv_stale_rows: int = DEFAULT_MV_STALE_ROWS,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 health: Any = None):
         self._tables: Dict[str, TableHandle] = {}
         self.mv_stale_rows = mv_stale_rows
         self.max_workers = max_workers
+        # Cross-query health registry + circuit breakers (core/health.py):
+        # on by default — health=None builds a fresh HealthRegistry,
+        # health=False disables cross-query state (every query re-walks
+        # the full ladder, the pre-PR-7 behaviour), or pass a configured
+        # HealthRegistry (custom threshold/cooldown) to share or tune it.
+        self.health: Optional[HealthRegistry] = \
+            HealthRegistry() if health is None \
+            else (None if health is False else health)
         if store is not None:
             self.attach(name, store)
 
@@ -519,7 +541,8 @@ class Database:
     # ------------------------------------------------------------ planning
     def _plan(self, h: TableHandle, q: Query, engine: Optional[str],
               n_shards: Optional[int], device_route: Optional[str],
-              ts: Optional[int], use_mv: bool) -> Plan:
+              ts: Optional[int], use_mv: bool,
+              advance: bool = True) -> Plan:
         logical = plan_logical(q, h.store.schema)
         verdicts = cost.prune_verdicts(h.store, logical.preds) \
             if h.store.baseline.n_blocks and logical.preds else None
@@ -537,15 +560,41 @@ class Database:
                              n_shards=n_shards, device_route=device_route,
                              max_workers=self.max_workers,
                              mv_stale_rows=self.mv_stale_rows)
+        # Circuit breakers (core/health.py): consult the table's breakers
+        # and pre-degrade known-bad rungs at plan time instead of walking
+        # the ladder again.  ``advance=False`` (explain) reports the
+        # verdicts without consuming cool-down ticks or arming probes.
+        if self.health is not None and plan.route != "mav":
+            plan.breaker = self.health.consult(h.name, advance=advance)
+            verdict = plan.breaker.get("sharded")
+            if verdict == "skip" and plan.route == "sharded":
+                # availability over the cost choice (and over pins): the
+                # fan-out itself is known-bad, answer single-shard
+                plan.degraded.append(cost.breaker_note(
+                    "sharded", "skip", "pre-degraded sharded->pushdown"))
+                plan.route = "pushdown"
+            elif verdict == "probe" and plan.route == "sharded":
+                plan.degraded.append(cost.breaker_note(
+                    "sharded", "probe", "attempting sharded fan-out"))
         return plan
 
     def explain(self, q: Query, table: Optional[str] = None, *,
                 engine: Optional[str] = None, n_shards: Optional[int] = None,
                 device_route: Optional[str] = None, ts: Optional[int] = None,
                 use_mv: bool = True) -> Plan:
-        """The plan ``query`` would execute, without executing it."""
+        """The plan ``query`` would execute, without executing it — breaker
+        pre-degrades included, but without consuming breaker cool-down
+        ticks (explain never advances cross-query health state)."""
         return self._plan(self.table(table), q, engine, n_shards,
-                          device_route, ts, use_mv)
+                          device_route, ts, use_mv, advance=False)
+
+    def health_report(self, table: Optional[str] = None) -> List[str]:
+        """Human-readable cross-query health lines for ``table`` (latency /
+        failure EWMAs, breaker states).  Empty when health tracking is
+        disabled (``Database(..., health=False)``)."""
+        if self.health is None:
+            return []
+        return self.health.describe(self.table(table).name)
 
     # ----------------------------------------------------------- execution
     def query(self, q: Query, table: Optional[str] = None, *,
@@ -563,6 +612,7 @@ class Database:
         h = self.table(table)
         plan = self._plan(h, q, engine, n_shards, device_route, ts, use_mv)
         qq = plan.logical.to_query()
+        t0 = time.monotonic()
         if plan.route == "mav":
             rows, stats = self._execute_mav(h, plan)
         else:
@@ -572,6 +622,12 @@ class Database:
             # ResultSet provenance shows the full ladder in order
             plan.degraded.extend(stats.degraded)
             plan.mlog_retries += stats.mlog_retries
+            plan.repaired.extend(stats.repaired)
+            if self.health is not None:
+                # feed the health registry: EWMAs update and rung outcomes
+                # drive the breakers (the cross-query self-healing loop)
+                self.health.observe(h.name, stats,
+                                    latency_s=time.monotonic() - t0)
         return ResultSet(plan.logical.output_names(h.store.schema.names),
                          rows, plan, stats)
 
@@ -581,13 +637,14 @@ class Database:
                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         store = h.store
         if plan.route == "pushdown":
-            return PushdownExecutor().execute_stats(store, q, ts,
-                                                    deadline_s=deadline_s)
+            return PushdownExecutor(breaker=plan.breaker).execute_stats(
+                store, q, ts, deadline_s=deadline_s)
         if plan.route == "sharded":
             ex = ShardedScanExecutor(n_shards=plan.n_shards,
                                      device=plan.device,
                                      device_route=plan.device_route or None,
-                                     max_workers=self.max_workers)
+                                     max_workers=self.max_workers,
+                                     breaker=plan.breaker)
             rows, stats = ex.execute_stats(store, q, ts,
                                            deadline_s=deadline_s)
             plan.n_shards = stats.n_shards

@@ -4,6 +4,8 @@ Kept in their own module so the tier-1 suite still collects when
 ``hypothesis`` is absent (see requirements-dev.txt); the deterministic
 versions of these invariants live in test_core.py / test_pushdown.py.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -11,7 +13,8 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core.encoding import encode_column
+from repro.core.encoding import (clone_block, encode_column,
+                                 payload_checksum)
 from repro.core.lsm import LSMStore
 from repro.core.relation import (ColType, Column, ColumnSpec, Predicate,
                                  PredOp, schema)
@@ -126,6 +129,46 @@ def test_skipping_index_no_false_negatives(vals, lo, hi):
             assert not match.any()     # pruning must be conservative
         if verdicts[b] == Verdict.ALL.value:
             assert match.all()
+
+
+# ---------------------------------------------------------------------------
+# payload checksums: clone round-trip + bit-flip detection (replica repair)
+# ---------------------------------------------------------------------------
+
+str_vals = st.lists(st.sampled_from(["alpha", "alpine", "alps", "beta"]),
+                    min_size=1, max_size=100)
+
+
+@given(st.one_of(int_cols.map(lambda v: (ColType.INT, v)),
+                 str_vals.map(lambda v: (ColType.STR, v))))
+@settings(max_examples=60, deadline=None)
+def test_payload_checksum_clone_roundtrip(tv):
+    ctype, vals = tv
+    enc = encode_column(Column.from_values(ColumnSpec("x", ctype), vals))
+    c0 = payload_checksum(enc)
+    clone = clone_block(enc)
+    assert payload_checksum(clone) == c0      # clones are bit-identical
+    assert payload_checksum(enc) == c0        # and checksumming is pure
+    np.testing.assert_array_equal(clone.decode(), enc.decode())
+
+
+@given(int_cols, st.data())
+@settings(max_examples=60, deadline=None)
+def test_payload_checksum_detects_any_single_bit_flip(vals, data):
+    enc = clone_block(encode_column(
+        Column.from_values(ColumnSpec("x", ColType.INT), vals)))
+    c0 = payload_checksum(enc)
+    arrays = [(f.name, getattr(enc, f.name))
+              for f in dataclasses.fields(enc)
+              if isinstance(getattr(enc, f.name), np.ndarray)
+              and getattr(enc, f.name).size]
+    name, v = data.draw(st.sampled_from(arrays))
+    w = np.ascontiguousarray(v).copy()
+    raw = w.view(np.uint8).reshape(-1)
+    i = data.draw(st.integers(0, raw.size - 1))
+    raw[i] ^= np.uint8(1 << data.draw(st.integers(0, 7)))
+    setattr(enc, name, w)
+    assert payload_checksum(enc) != c0  # CRC32 catches every 1-bit error
 
 
 @given(st.lists(st.integers(-100, 100), min_size=8, max_size=300))

@@ -21,15 +21,18 @@ from repro.core.engine import QAgg, Query, VectorEngine
 from repro.core.errors import (BlockCorruption, Deadline, KernelLaunchError,
                                KeyPackError, MLogPurged, QueryError,
                                QueryTimeout, RouteExhausted, ShardFailure)
-from repro.core.faultinject import FaultPlan, corrupt_block, inject
+from repro.core.faultinject import (FaultPlan, corrupt_block, corrupt_replica,
+                                    inject)
+from repro.core.health import Breaker
 from repro.core.lsm import LSMStore
 from repro.core.mview import AggSpec, MAVDefinition
 from repro.core.partition import ShardedScanExecutor
 from repro.core.pushdown import PushdownExecutor
 from repro.core.relation import ColType, Predicate, PredOp
+from repro.core.replica import enable_replication, replica_set
 from repro.core.session import Database
 
-from tests.test_pushdown import QUERIES, make_store, norm
+from tests.test_pushdown import QUERIES, SCH, make_store, norm
 
 GROUPED_Q = Query(preds=(Predicate("d", PredOp.BETWEEN, 50, 300),),
                   group_by=("g",),
@@ -345,15 +348,19 @@ def test_fault_matrix_host_routes(route, name, mkplan, want_deg):
 
 
 @pytest.mark.device
-@pytest.mark.parametrize("kernel_failures,want_deg", [
-    (0, []),
-    (1, ["device-collective->per-shard-device"]),
+@pytest.mark.parametrize("kernel_failures,want_deg,want_retries", [
+    (0, [], 0),
+    (1, [], 1),                        # in-route retry absorbs one transient
+    (2, ["device-collective->per-shard-device"], 1),
     (99, ["device-collective->per-shard-device",
-          "per-shard-device->host-pushdown"]),
-], ids=["clean", "collective-fails", "all-kernels-fail"])
-def test_fault_matrix_device_collective(kernel_failures, want_deg):
-    """The device ladder: collective → per-shard launches → host pushdown,
-    one recorded step per injected kernel failure level."""
+          "per-shard-device->host-pushdown"], 1),
+], ids=["clean", "transient-retried", "collective-fails",
+        "all-kernels-fail"])
+def test_fault_matrix_device_collective(kernel_failures, want_deg,
+                                        want_retries):
+    """The device ladder: a transient collective failure is retried in-route
+    (no rung drop); a second failure drops collective → per-shard launches
+    → host pushdown, one recorded step per surviving failure level."""
     rng = np.random.default_rng(72)
     store = make_store(rng, n=256, block_rows=64, dml=False)
     host = ShardedScanExecutor(n_shards=2).execute(store, DEVICE_Q)
@@ -364,7 +371,10 @@ def test_fault_matrix_device_collective(kernel_failures, want_deg):
     assert len(stats.degraded) == len(want_deg)
     for got, want in zip(stats.degraded, want_deg):
         assert got.startswith(want)
+    assert stats.kernel_retries == want_retries
     assert stats.used_device == (kernel_failures < 99)
+    if kernel_failures <= 1:
+        assert stats.device_route == "collective"
     h = {r["g"]: r for r in host}
     d = {r["g"]: r for r in rows}
     assert h.keys() == d.keys()
@@ -408,9 +418,44 @@ def test_degradation_recorded_in_resultset_provenance():
     assert any(d.startswith("sharded->vectorized") for d in rs.plan.degraded)
     assert "degraded" in repr(rs)
     assert "degraded=[" in rs.plan.describe()
-    # clean runs stay silent
+    # the failure opened the sharded breaker: the next query pre-degrades
+    # and says so in provenance (note grammar, not a "from->to" failure)
     rs2 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
-    assert rs2.plan.degraded == [] and "degraded" not in repr(rs2)
+    assert rs2.plan.degraded == [
+        "breaker(sharded) open: pre-degraded sharded->pushdown"]
+    assert rs2.plan.route == "pushdown"
+    assert norm(rs2.rows) == norm(rs.rows)
+    # with health tracking off the session is stateless: clean runs silent
+    db2 = Database(make_store(np.random.default_rng(81)), max_workers=4,
+                   health=False)
+    rs3 = db2.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert rs3.plan.degraded == [] and "degraded" not in repr(rs3)
+
+
+def test_deadline_checked_in_merge_on_read_assembly():
+    rng = np.random.default_rng(106)
+    store = make_store(rng)                   # post-compaction DML tail
+    inc = store._incremental_effective(store.current_ts)
+    assert inc                                # the scenario needs live rows
+    with pytest.raises(QueryTimeout):
+        store.live_incremental_rows(inc, GROUPED_Q.preds,
+                                    deadline=Deadline.start(0.0))
+    # a live deadline is harmless: same rows as the unbounded call
+    rows = store.live_incremental_rows(inc, GROUPED_Q.preds,
+                                       deadline=Deadline.start(60.0))
+    assert rows == store.live_incremental_rows(inc, GROUPED_Q.preds)
+
+
+def test_zero_deadline_binds_on_device_paths_before_launch():
+    """``deadline_s`` must bound the device routes too: an expired deadline
+    raises before any kernel is planned or launched."""
+    rng = np.random.default_rng(105)
+    store = make_store(rng, dml=False)
+    for ex in (PushdownExecutor(device=True),
+               ShardedScanExecutor(n_shards=2, device=True,
+                                   device_route="collective")):
+        with pytest.raises(QueryTimeout):
+            ex.execute_stats(store, DEVICE_Q, deadline_s=0.0)
 
 
 def test_route_exhausted_when_fallback_also_fails():
@@ -429,3 +474,304 @@ def test_route_exhausted_when_fallback_also_fails():
     e = ei.value
     assert any(s.startswith("sharded->vectorized") for s in e.steps)
     assert isinstance(e.cause, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# block replicas: corruption repaired in place
+# ---------------------------------------------------------------------------
+
+
+def replicated_store(rng, k=2, n=256, block_rows=32):
+    """A multi-block baseline store running with a k-way replica set."""
+    store = LSMStore(SCH, block_rows=block_rows, memtable_limit=64,
+                     replication=k)
+    for i in range(n):
+        store.insert({"k": i, "g": int(rng.integers(0, 6)),
+                      "d": int(rng.integers(0, 365)),
+                      "v": float(rng.normal()),
+                      "s": ["alpha", "alpine", "beta"][int(rng.integers(0, 3))]})
+    store.major_compact()
+    return store
+
+
+def test_replication_factor_must_be_at_least_two():
+    with pytest.raises(ValueError):
+        enable_replication(make_store(np.random.default_rng(90)), k=1)
+
+
+def test_single_copy_corruption_repaired_bit_identically():
+    rng = np.random.default_rng(91)
+    store = replicated_store(rng, k=2)
+    ex = PushdownExecutor()
+    clean, cstats = ex.execute_stats(store, GROUPED_Q)
+    assert cstats.repaired == []
+    corrupt_block(store, "v", block=1)
+    rows, stats = ex.execute_stats(store, GROUPED_Q)
+    assert norm(rows) == norm(clean)          # answer as if nothing happened
+    assert stats.repaired == ["repaired v/block 1 from replica 0"]
+    assert stats.degraded == []               # repair is not a degradation
+    assert not store.has_quarantined_blocks()  # quarantine lifted
+    # the healed block verifies clean on the next read: no re-repair
+    rows2, stats2 = ex.execute_stats(store, GROUPED_Q)
+    assert norm(rows2) == norm(clean) and stats2.repaired == []
+
+
+def test_repair_skips_corrupt_replicas():
+    rng = np.random.default_rng(92)
+    store = replicated_store(rng, k=3)
+    corrupt_block(store, "v", block=0)
+    corrupt_replica(store, "v", block=0, replica=0)   # replica 0 bad too
+    rows, stats = PushdownExecutor().execute_stats(store, GROUPED_Q)
+    assert stats.repaired == ["repaired v/block 0 from replica 1"]
+    assert not store.has_quarantined_blocks()
+
+
+def test_sharded_route_repairs_once_across_shards():
+    rng = np.random.default_rng(95)
+    store = replicated_store(rng, k=2)
+    ex = sharded()
+    clean, _ = ex.execute_stats(store, GROUPED_Q)
+    corrupt_block(store, "v", block=1)
+    rows, stats = ex.execute_stats(store, GROUPED_Q)
+    assert norm(rows) == norm(clean)
+    assert stats.repaired == ["repaired v/block 1 from replica 0"]
+    assert stats.shard_retries == 0           # repair is not a shard retry
+    assert stats.degraded == []
+
+
+def test_all_copies_corrupt_is_typed_failure_and_revokes_mav():
+    rng = np.random.default_rng(93)
+    store = replicated_store(rng, k=2)
+    db = Database(store)
+    q = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),)))
+    assert db.explain(q).route == "mav"
+    corrupt_block(store, "v", block=2)
+    corrupt_replica(store, "v", block=2, replica=0)
+    with pytest.raises(BlockCorruption) as ei:    # nothing left to heal from
+        db.query(q, use_mv=False)
+    assert ei.value.column == "v" and ei.value.block == 2
+    assert store.has_quarantined_blocks()         # permanent quarantine
+    assert db.explain(q).route != "mav"           # rewrite revoked
+    sr = replica_set(store)
+    assert sr.events[-1] == ("unrepairable v/block 2: "
+                             "all 1 replica(s) corrupt")
+
+
+def test_repair_preserves_mav_eligibility():
+    rng = np.random.default_rng(94)
+    store = replicated_store(rng, k=2)
+    db = Database(store)
+    q = Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),)))
+    assert db.explain(q).route == "mav"
+    corrupt_block(store, "v", block=0)
+    rs = db.query(q, use_mv=False)            # the read repairs in place
+    assert rs.plan.repaired == ["repaired v/block 0 from replica 0"]
+    assert "repaired=[" in rs.plan.describe()
+    assert db.explain(q).route == "mav"       # store clean: rewrite stays
+
+
+def test_scrub_heals_replicas_from_primary():
+    rng = np.random.default_rng(96)
+    store = replicated_store(rng, k=2)
+    sr = replica_set(store)
+    assert sr is not None and sr.k == 2 and sr.nbytes() > 0
+    corrupt_replica(store, "v", block=3, replica=0)
+    assert sr.scrub() == [
+        "scrub: re-cloned v/block 3 replica 0 from primary"]
+    # the re-cloned replica is usable: corrupt the primary, the read heals
+    corrupt_block(store, "v", block=3)
+    _, stats = PushdownExecutor().execute_stats(store, GROUPED_Q)
+    assert stats.repaired == ["repaired v/block 3 from replica 0"]
+    assert sr.scrub() == []                   # store fully clean again
+
+
+def test_replicas_reattach_on_new_baseline():
+    rng = np.random.default_rng(97)
+    store = replicated_store(rng, k=2, n=128)
+    v0 = replica_set(store)
+    assert v0 is not None
+    for j in range(128, 160):
+        store.insert({"k": j, "g": 1, "d": 100, "v": 1.0, "s": "beta"})
+    store.major_compact()                     # new baseline version
+    v1 = replica_set(store)
+    assert v1 is not None and v1 is not v0
+    assert v1.version == store.baseline.version
+
+
+# ---------------------------------------------------------------------------
+# circuit breakers: cross-query pre-degrade + half-open probes
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_unit_lifecycle():
+    br = Breaker("sharded", threshold=2, cooldown=2)
+    assert br.consult() is None
+    br.record_failure()
+    assert br.state == "closed"               # below threshold
+    br.record_failure()
+    assert br.state == "open" and br.opened_total == 1
+    assert br.consult(advance=False) == "skip"  # explain: no cool-down tick
+    assert br.consult() == "skip"             # cool-down consult 1 of 2
+    assert br.consult() == "probe"            # consult 2: half-open
+    assert br.state == "half-open"
+    br.record_failure()                       # probe failed: reopen
+    assert br.state == "open" and br.opened_total == 2
+    assert br.consult() == "skip" and br.consult() == "probe"
+    br.record_success()                       # probe succeeded this time
+    assert br.state == "closed" and br.consecutive_failures == 0
+
+
+def test_breaker_open_pre_degrades_and_half_open_probe_restores():
+    rng = np.random.default_rng(98)
+    db = Database(make_store(rng), max_workers=4)
+    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
+        r1 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert any(d.startswith("sharded->vectorized") for d in r1.plan.degraded)
+    assert any("breaker(sharded): state=open" in l
+               for l in db.health_report())
+    # q2: breaker open (cool-down consult 1 of 2) → fan-out pre-degraded
+    # without being attempted, even though the fault is gone
+    r2 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert r2.plan.route == "pushdown"
+    assert r2.plan.degraded == [
+        "breaker(sharded) open: pre-degraded sharded->pushdown"]
+    assert r2.stats.n_shards == 0             # the rung was never touched
+    # q3: consult 2 expires the cool-down → half-open, this query probes
+    r3 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert r3.plan.route == "sharded"
+    assert r3.plan.degraded == [
+        "breaker(sharded) half-open: attempting sharded fan-out"]
+    # probe succeeded: breaker closed, q4 runs clean and silent
+    r4 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert r4.plan.degraded == []
+    assert any("breaker(sharded): state=closed" in l
+               for l in db.health_report())
+    assert all(norm(r.rows) == norm(r1.rows) for r in (r2, r3, r4))
+
+
+def test_failed_probe_reopens_breaker():
+    rng = np.random.default_rng(99)
+    db = Database(make_store(rng), max_workers=4)
+    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # opens
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # open: skip
+        r3 = db.query(GROUPED_Q, engine="sharded", n_shards=4)  # probe fails
+    assert any(d.startswith("sharded->vectorized") for d in r3.plan.degraded)
+    rep = " ".join(db.health_report())
+    assert "state=open" in rep and "opened_total=2" in rep
+    r4 = db.query(GROUPED_Q, engine="sharded", n_shards=4)  # cooling again
+    assert r4.plan.degraded == [
+        "breaker(sharded) open: pre-degraded sharded->pushdown"]
+
+
+def test_inconclusive_probe_leaves_breaker_half_open():
+    rng = np.random.default_rng(102)
+    db = Database(make_store(rng), max_workers=4)
+    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # opens
+    db.query(GROUPED_Q, engine="sharded", n_shards=4)       # open: skip
+    # the cool-down expires on a query that can't exercise the rung: the
+    # probe is inconclusive and the breaker stays half-open
+    rp = db.query(GROUPED_Q, engine="pushdown")
+    assert rp.plan.degraded == []
+    assert any("state=half-open" in l for l in db.health_report())
+    # the next sharded query is still the probe; its success closes it
+    rs = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert rs.plan.degraded == [
+        "breaker(sharded) half-open: attempting sharded fan-out"]
+    assert any("state=closed" in l for l in db.health_report())
+
+
+def test_explain_reports_breaker_without_advancing():
+    rng = np.random.default_rng(103)
+    db = Database(make_store(rng), max_workers=4)
+    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    for _ in range(5):                        # explain never ticks cool-down
+        p = db.explain(GROUPED_Q, engine="sharded", n_shards=4)
+        assert p.route == "pushdown"
+        assert p.degraded == [
+            "breaker(sharded) open: pre-degraded sharded->pushdown"]
+    assert any("state=open" in l for l in db.health_report())
+
+
+def test_health_report_tracks_ewmas():
+    rng = np.random.default_rng(104)
+    db = Database(make_store(rng), max_workers=4)
+    for _ in range(3):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    rep = db.health_report()
+    assert rep[0] == "queries=3"
+    assert any(l.startswith("latency_ewma=") for l in rep)
+    assert any(l.startswith("sharded: failure_ewma=0.00") for l in rep)
+    assert not any("breaker" in l for l in rep)   # nothing ever opened
+    assert Database(make_store(rng), health=False).health_report() == []
+
+
+@pytest.mark.device
+def test_collective_breaker_opens_pre_degrades_and_probe_restores():
+    """The acceptance scenario: a persistently failing collective opens its
+    breaker (after the in-route retry), the second query pre-degrades
+    without touching the collective, and a half-open probe re-admits it."""
+    rng = np.random.default_rng(101)
+    store = make_store(rng, n=256, block_rows=64, dml=False)
+    db = Database(store, max_workers=2)
+    kw = dict(n_shards=2, device_route="collective")
+    with inject(FaultPlan(fail_route_persistent=("collective",))) as fp:
+        r1 = db.query(DEVICE_Q, **kw)
+    assert any(d.startswith("device-collective->per-shard-device")
+               for d in r1.plan.degraded)
+    assert r1.stats.kernel_retries == 1       # in-route retry tried first
+    assert [e.startswith("persistent kernel fault on 'collective'")
+            for e in fp.events] == [True, True]
+    assert any("breaker(device-collective): state=open" in l
+               for l in db.health_report())
+    # fault gone, but the breaker remembers: q2 never touches the collective
+    r2 = db.query(DEVICE_Q, **kw)
+    assert r2.plan.degraded == [
+        "breaker(device-collective) open: pre-degraded to per-shard-device"]
+    assert r2.stats.used_device and r2.stats.device_route == "host"
+    # q3 is the half-open probe: collective re-attempted and re-admitted
+    r3 = db.query(DEVICE_Q, **kw)
+    assert r3.plan.degraded == [
+        "breaker(device-collective) half-open: attempting collective route"]
+    assert r3.stats.device_route == "collective"
+    r4 = db.query(DEVICE_Q, **kw)
+    assert r4.plan.degraded == []
+    # routes differ in float-sum order: counts exact, sums to tolerance
+    base = {r["g"]: r for r in r1.rows}
+    for rs in (r2, r3, r4):
+        got = {r["g"]: r for r in rs.rows}
+        assert got.keys() == base.keys()
+        for g in base:
+            assert got[g]["n"] == base[g]["n"]
+            np.testing.assert_allclose(got[g]["sv"], base[g]["sv"],
+                                       atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan hooks: per-route counters
+# ---------------------------------------------------------------------------
+
+
+def test_fail_route_counters_are_per_route():
+    fp = FaultPlan(fail_route={"collective": 1})
+    with pytest.raises(KernelLaunchError):
+        fp.on_kernel_launch("collective")
+    fp.on_kernel_launch("host")               # different route: unaffected
+    fp.on_kernel_launch("collective")         # route call #2: succeeds
+    assert fp.events == ["kernel fault on 'collective' route launch #1"]
+
+
+def test_fail_route_persistent_never_stops_failing():
+    fp = FaultPlan(fail_route_persistent=("collective",))
+    for _ in range(3):
+        with pytest.raises(KernelLaunchError):
+            fp.on_kernel_launch("collective")
+    fp.on_kernel_launch("host")
+    assert len(fp.events) == 3
+    assert all(e.startswith("persistent kernel fault") for e in fp.events)
