@@ -22,7 +22,8 @@ SUITES = [
     ("Fig9_TableIII_vectorized", "benchmarks.bench_vectorized"),
     ("distributed_scan_fanout", "benchmarks.bench_distributed"),
     ("Fig17_update_intensive", "benchmarks.bench_update_intensive"),
-    ("serving_hybrid_kv", "benchmarks.bench_serving"),
+    ("query_serving", "benchmarks.bench_serving"),
+    ("serving_hybrid_kv", "benchmarks.bench_hybrid_kv"),
     ("roofline", "benchmarks.roofline"),
 ]
 

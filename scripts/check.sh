@@ -19,6 +19,13 @@
 #                              # every answer checked against the clean run
 #                              # or a typed error — the seed is printed first
 #                              # so any failure replays exactly
+#   scripts/check.sh --serve   # serving lane: the concurrency/serving suite
+#                              # (tests/test_serving.py, slow hammer tests
+#                              # included), then the query-serving smoke —
+#                              # 4-client coalesced throughput, cache-hit
+#                              # latency + DML invalidation, tenant-P99
+#                              # isolation, and the <2% serving_overhead_pct
+#                              # budget recorded in BENCH_serving.json
 #
 # The smoke suites self-check their perf guards and rewrite BENCH_*.json in
 # the repo root, so a green run leaves the recorded trajectory up to date.
@@ -27,6 +34,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 FAULTS_ONLY=0
+SERVE_ONLY=0
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
 elif [[ "${1:-}" == "--faults" ]]; then
@@ -36,6 +44,9 @@ elif [[ "${1:-}" == "--chaos" ]]; then
     FAULTS_ONLY=1
     python -m pytest -q tests/test_faults.py
     python scripts/chaos_sweep.py
+elif [[ "${1:-}" == "--serve" ]]; then
+    SERVE_ONLY=1
+    python -m pytest -q tests/test_serving.py
 else
     python -m pytest -q -m "not device and not slow"
 fi
@@ -45,7 +56,7 @@ fi
 # ratchet the baseline down (working-tree copy only as a git-less fallback)
 BASELINES="$(mktemp -d)"
 trap 'rm -rf "$BASELINES"' EXIT
-for f in BENCH_distributed.json BENCH_vectorized.json; do
+for f in BENCH_distributed.json BENCH_vectorized.json BENCH_serving.json; do
     if git cat-file -e "HEAD:$f" 2>/dev/null; then
         git show "HEAD:$f" > "$BASELINES/$f"
     elif [[ -f "$f" ]]; then
@@ -53,14 +64,19 @@ for f in BENCH_distributed.json BENCH_vectorized.json; do
     fi
 done
 
-python -m benchmarks.run --suite distributed --json BENCH_distributed.json
-if [[ "$FAULTS_ONLY" == 0 ]]; then
-    python -m benchmarks.run --suite vectorized  --json BENCH_vectorized.json
+if [[ "$SERVE_ONLY" == 1 ]]; then
+    python -m benchmarks.run --suite query_serving --json BENCH_serving.json
+else
+    python -m benchmarks.run --suite distributed --json BENCH_distributed.json
+    if [[ "$FAULTS_ONLY" == 0 ]]; then
+        python -m benchmarks.run --suite vectorized  --json BENCH_vectorized.json
+        python -m benchmarks.run --suite query_serving --json BENCH_serving.json
+    fi
 fi
 
 # regression guard: recorded ratios must hold >= 0.9x the committed values
 # (and *_overhead_pct keys must stay under the 2% absolute ceiling)
-for f in BENCH_distributed.json BENCH_vectorized.json; do
+for f in BENCH_distributed.json BENCH_vectorized.json BENCH_serving.json; do
     [[ -f "$f" && -f "$BASELINES/$f" ]] && python scripts/bench_guard.py "$BASELINES/$f" "$f"
 done
 

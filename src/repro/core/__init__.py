@@ -39,5 +39,6 @@ from .engine import (QAgg, Query, ScalarEngine, VectorEngine, hash_join,
                      make_engine, pack_sort_keys)
 from .partition import (BlockShard, GroupedPartial, ShardedScanExecutor,
                         range_partition, tree_reduce)
-from .session import (Database, LogicalPlan, Plan, ResultSet, TableHandle,
-                      mav_rewrite, plan_logical, plan_physical)
+from .session import (CompiledPlan, Database, LogicalPlan, Plan, ResultSet,
+                      TableHandle, mav_rewrite, plan_logical, plan_physical)
+from .serving import QueryServer, TenantQuota, Ticket

@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -69,6 +70,16 @@ MAX_COALESCE = 64
 CAL_ALPHA = 0.4                # EWMA weight of the newest actual/est ratio
 CAL_CLAMP = (0.2, 5.0)         # calibration factor bounds (misestimates are
                                # corrected, never amplified into absurd plans)
+SLOW_TABLE_LATENCY_S = 0.25    # observed per-table latency EWMA past which
+                               # the fan-out amortization floor halves: a
+                               # table the health registry has measured slow
+                               # amortizes shard dispatch over more saved
+                               # wall time, so it parallelizes sooner
+
+# guards the lazily-attached per-store planner state (calibration handle,
+# verdict/estimate caches) against concurrent first-touch; the cached
+# values themselves are immutable once inserted
+_STORE_CACHE_LOCK = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -95,30 +106,42 @@ class TableCalibration:
         dataclasses.field(default_factory=dict)
     last_est: float = 0.0
     last_actual: float = 0.0
+    # bumped on every observation: plans compiled against an older
+    # calibration epoch may route differently, so the serving layer's plan
+    # cache keys on this counter and recompiles when feedback shifts it
+    epoch: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def factor_for(self, key: Tuple) -> float:
         return self.factors.get(key, 1.0)
 
     def observe(self, key: Tuple, est_rows: float,
                 actual_rows: float) -> None:
-        self.last_est, self.last_actual = float(est_rows), float(actual_rows)
-        if est_rows <= 0.0:
-            return                       # nothing survived the plan: no signal
-        lo, hi = CAL_CLAMP
-        ratio = min(max(actual_rows / est_rows, lo), hi)
-        n = self.n_obs.get(key, 0)
-        w = CAL_ALPHA if n else 1.0
-        prev = self.factors.get(key, 1.0)
-        self.factors[key] = min(max((1 - w) * prev + w * ratio, lo), hi)
-        self.n_obs[key] = n + 1
+        with self._lock:
+            self.last_est, self.last_actual = \
+                float(est_rows), float(actual_rows)
+            if est_rows <= 0.0:
+                return                   # nothing survived the plan: no signal
+            lo, hi = CAL_CLAMP
+            ratio = min(max(actual_rows / est_rows, lo), hi)
+            n = self.n_obs.get(key, 0)
+            w = CAL_ALPHA if n else 1.0
+            prev = self.factors.get(key, 1.0)
+            self.factors[key] = min(max((1 - w) * prev + w * ratio, lo), hi)
+            self.n_obs[key] = n + 1
+            self.epoch += 1
 
 
 def calibration(store) -> TableCalibration:
     """The store's (lazily attached) calibration state."""
     cal = getattr(store, "_cost_calibration", None)
     if cal is None:
-        cal = TableCalibration()
-        store._cost_calibration = cal
+        with _STORE_CACHE_LOCK:        # two first-touch planners must not
+            cal = getattr(store, "_cost_calibration", None)  # each attach one
+            if cal is None:
+                cal = TableCalibration()
+                store._cost_calibration = cal
     return cal
 
 
@@ -163,6 +186,11 @@ class ScanEstimate:
     calibrated: bool = False   # True when a feedback factor could apply
                                # (predicate-bearing, interpolated estimate)
     cal_key: Tuple = ()        # (column, shape) set of the estimate
+    # the health registry's observed per-table latency EWMA (seconds) at
+    # plan time, or None when health tracking is off / has no sample yet —
+    # a secondary calibration signal ``choose_shards`` consumes (a table
+    # measured slow fans out sooner)
+    latency_ewma_s: Optional[float] = None
 
     def __post_init__(self):
         if self.raw_rows < 0.0:
@@ -195,24 +223,29 @@ def prune_verdicts(store, preds: Sequence[Predicate]) -> np.ndarray:
     compaction rebuilds it); callers must treat the returned array as
     read-only."""
     base = store.baseline
-    cached = getattr(store, "_verdict_cache", None)
-    if cached is None or cached[0] is not base:
-        cached = (base, {})
-        store._verdict_cache = cached
     pkey = _pred_cache_key(preds)
-    v = cached[1].get(pkey)
+    with _STORE_CACHE_LOCK:
+        cached = getattr(store, "_verdict_cache", None)
+        if cached is None or cached[0] is not base:
+            cached = (base, {})
+            store._verdict_cache = cached
+        v = cached[1].get(pkey)
     if v is None:
+        # compute outside the lock (concurrent planners may duplicate the
+        # descent; the arrays are identical and either insert wins)
         v = np.full(base.n_blocks, Verdict.ALL.value, np.int8)
         for p in preds:
             v = np.minimum(v, base.cols[p.column].index.prune(p))
-        if len(cached[1]) >= 128:        # bound a long session's footprint
-            cached[1].clear()
-        cached[1][pkey] = v
+        with _STORE_CACHE_LOCK:
+            if len(cached[1]) >= 128:    # bound a long session's footprint
+                cached[1].clear()
+            cached[1][pkey] = v
     return v
 
 
 def estimate_scan(store, preds: Sequence[Predicate],
-                  verdicts: Optional[np.ndarray] = None) -> ScanEstimate:
+                  verdicts: Optional[np.ndarray] = None, *,
+                  latency_ewma_s: Optional[float] = None) -> ScanEstimate:
     """Estimate surviving rows for a conjunction of predicates from leaf
     sketches: per-block matching fractions multiply across predicates
     (independence assumption), NONE-verdict blocks contribute zero.  Columns
@@ -233,26 +266,30 @@ def estimate_scan(store, preds: Sequence[Predicate],
     base = store.baseline
     nb = base.n_blocks
     if nb == 0:
-        return ScanEstimate(0, 0, 0, 0.0)
+        return ScanEstimate(0, 0, 0, 0.0, latency_ewma_s=latency_ewma_s)
     ckey = (_pred_cache_key(preds), verdicts is None)
-    cached = getattr(store, "_estimate_cache", None)
-    if cached is None or cached[0] is not base:
-        cached = (base, {})
-        store._estimate_cache = cached
-    raw_est = cached[1].get(ckey)
+    with _STORE_CACHE_LOCK:
+        cached = getattr(store, "_estimate_cache", None)
+        if cached is None or cached[0] is not base:
+            cached = (base, {})
+            store._estimate_cache = cached
+        raw_est = cached[1].get(ckey)
     if raw_est is None:
         raw_est = _raw_estimate(store, preds, verdicts)
-        if len(cached[1]) >= 128:
-            cached[1].clear()
-        cached[1][ckey] = raw_est
+        with _STORE_CACHE_LOCK:
+            if len(cached[1]) >= 128:
+                cached[1].clear()
+            cached[1][ckey] = raw_est
     candidates, raw, eligible = raw_est
     if not preds or not eligible:
-        return ScanEstimate(base.nrows, nb, candidates, raw, raw)
+        return ScanEstimate(base.nrows, nb, candidates, raw, raw,
+                            latency_ewma_s=latency_ewma_s)
     key = _cal_key(preds)
     factor = calibration(store).factor_for(key)
     return ScanEstimate(base.nrows, nb, candidates,
                         min(raw * factor, float(base.nrows)), raw,
-                        calibrated=True, cal_key=key)
+                        calibrated=True, cal_key=key,
+                        latency_ewma_s=latency_ewma_s)
 
 
 def _raw_estimate(store, preds: Sequence[Predicate],
@@ -316,8 +353,19 @@ def choose_shards(est: ScanEstimate,
     (shards are queue granularity — smaller working sets scan faster even
     on a saturated pool — while the thread pool itself stays core-sized),
     by ``MAX_FANOUT``, and by the candidate block count (an empty shard
-    is pure overhead).  ``max_workers=1`` pins the fan-out off."""
-    if est.est_rows < MIN_FANOUT_ROWS:
+    is pure overhead).  ``max_workers=1`` pins the fan-out off.
+
+    Secondary calibration signal: when the estimate carries the health
+    registry's observed per-table latency EWMA (``est.latency_ewma_s``,
+    threaded in by the session planner) and the table has been measured
+    slow (past ``SLOW_TABLE_LATENCY_S``), the amortization floor halves —
+    the same dispatch overhead buys proportionally more saved wall time on
+    a table whose scans are observed to run long."""
+    floor = MIN_FANOUT_ROWS
+    if est.latency_ewma_s is not None \
+            and est.latency_ewma_s > SLOW_TABLE_LATENCY_S:
+        floor //= 2
+    if est.est_rows < floor:
         return 1
     cores = max_workers or os.cpu_count() or 1
     if cores <= 1:

@@ -47,6 +47,7 @@ key in BENCH_distributed.json.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 #: Ladder rungs a breaker can guard, in ladder order.
@@ -174,29 +175,38 @@ class HealthRegistry:
         self.failure_rate: Dict[Tuple[str, str], EWMA] = {}  # (table, rung)
         self.shard_retries: Dict[str, EWMA] = {}       # per table
         self.queries: Dict[str, int] = {}              # per table
+        self.notes: Dict[str, List[str]] = {}          # per table, appended
+                                                       # by note() (e.g. the
+                                                       # serving scrub loop)
+        # one registry serves N concurrent executions (the serving layer's
+        # whole point) — breaker transitions and EWMA updates must not race
+        self._lock = threading.RLock()
 
     # ----------------------------------------------------------- breakers
     def breaker(self, table: str, rung: str) -> Breaker:
-        key = (table, rung)
-        if key not in self._breakers:
-            self._breakers[key] = Breaker(rung, self.threshold, self.cooldown)
-        return self._breakers[key]
+        with self._lock:
+            key = (table, rung)
+            if key not in self._breakers:
+                self._breakers[key] = Breaker(rung, self.threshold,
+                                              self.cooldown)
+            return self._breakers[key]
 
     def consult(self, table: str, advance: bool = True) -> Dict[str, str]:
         """Breaker verdicts for a query being planned against ``table``:
         ``{rung: "skip" | "probe"}`` for every non-closed breaker.  The
         planner/executors pre-degrade the ``skip`` rungs and run ``probe``
-        rungs normally; ``advance=False`` (explain) reports without
-        consuming cool-down ticks."""
-        out: Dict[str, str] = {}
-        for rung in RUNGS:
-            br = self._breakers.get((table, rung))
-            if br is None:
-                continue
-            verdict = br.consult(advance)
-            if verdict is not None:
-                out[rung] = verdict
-        return out
+        rungs normally; ``advance=False`` (explain / the pure compile step)
+        reports without consuming cool-down ticks."""
+        with self._lock:
+            out: Dict[str, str] = {}
+            for rung in RUNGS:
+                br = self._breakers.get((table, rung))
+                if br is None:
+                    continue
+                verdict = br.consult(advance)
+                if verdict is not None:
+                    out[rung] = verdict
+            return out
 
     # -------------------------------------------------------- observation
     def observe(self, table: str, stats: Any,
@@ -205,43 +215,67 @@ class HealthRegistry:
         table's health state.  Rungs the query exercised update their
         failure EWMAs and drive their breakers; rungs it never touched are
         left alone (an open breaker's skip must not read as recovery)."""
-        self.queries[table] = self.queries.get(table, 0) + 1
-        if latency_s is not None:
-            self.latency_s.setdefault(table, EWMA()).update(
-                latency_s, self.alpha)
-        self.shard_retries.setdefault(table, EWMA()).update(
-            float(getattr(stats, "shard_retries", 0)), self.alpha)
-        for rung in RUNGS:
-            failed = rung_outcome(rung, stats)
-            if failed is None:
-                continue
-            self.failure_rate.setdefault((table, rung), EWMA()).update(
-                1.0 if failed else 0.0, self.alpha)
-            br = self.breaker(table, rung)
-            if failed:
-                br.record_failure()
-            else:
-                br.record_success()
+        with self._lock:
+            self.queries[table] = self.queries.get(table, 0) + 1
+            if latency_s is not None:
+                self.latency_s.setdefault(table, EWMA()).update(
+                    latency_s, self.alpha)
+            self.shard_retries.setdefault(table, EWMA()).update(
+                float(getattr(stats, "shard_retries", 0)), self.alpha)
+            for rung in RUNGS:
+                failed = rung_outcome(rung, stats)
+                if failed is None:
+                    continue
+                self.failure_rate.setdefault((table, rung), EWMA()).update(
+                    1.0 if failed else 0.0, self.alpha)
+                br = self.breaker(table, rung)
+                if failed:
+                    br.record_failure()
+                else:
+                    br.record_success()
+
+    def latency(self, table: str) -> Optional[float]:
+        """Observed per-table wall-latency EWMA in seconds, or None before
+        the first sample — the signal the cost model consumes as secondary
+        calibration (``cost.estimate_scan(..., latency_ewma_s=)``)."""
+        with self._lock:
+            lat = self.latency_s.get(table)
+            return lat.value if lat is not None and lat.n else None
+
+    def note(self, table: str, msg: str, keep: int = 16) -> None:
+        """Append a free-form health event for ``table`` (e.g. a serving
+        scrub pass) — surfaced by ``describe`` / ``health_report``."""
+        with self._lock:
+            log = self.notes.setdefault(table, [])
+            log.append(msg)
+            del log[:-keep]
 
     # ------------------------------------------------------ introspection
     def describe(self, table: str) -> List[str]:
         """Human-readable health lines for ``table`` (the dashboard /
         explain surface): query count, latency EWMA, per-rung failure
-        EWMAs, and every non-closed (or previously-opened) breaker."""
-        out = [f"queries={self.queries.get(table, 0)}"]
-        lat = self.latency_s.get(table)
-        if lat is not None and lat.n:
-            out.append(f"latency_ewma={lat.value * 1e3:.2f}ms (n={lat.n})")
-        sr = self.shard_retries.get(table)
-        if sr is not None and sr.n and sr.value > 0:
-            out.append(f"shard_retry_ewma={sr.value:.2f}")
-        for rung in RUNGS:
-            fr = self.failure_rate.get((table, rung))
-            if fr is not None and fr.n:
-                out.append(f"{rung}: failure_ewma={fr.value:.2f} (n={fr.n})")
-            br = self._breakers.get((table, rung))
-            if br is not None and (br.state != "closed" or br.opened_total):
-                out.append(f"breaker({rung}): state={br.state} "
-                           f"consecutive_failures={br.consecutive_failures} "
-                           f"opened_total={br.opened_total}")
-        return out
+        EWMAs, every non-closed (or previously-opened) breaker, and the
+        most recent free-form notes (scrub events)."""
+        with self._lock:
+            out = [f"queries={self.queries.get(table, 0)}"]
+            lat = self.latency_s.get(table)
+            if lat is not None and lat.n:
+                out.append(f"latency_ewma={lat.value * 1e3:.2f}ms "
+                           f"(n={lat.n})")
+            sr = self.shard_retries.get(table)
+            if sr is not None and sr.n and sr.value > 0:
+                out.append(f"shard_retry_ewma={sr.value:.2f}")
+            for rung in RUNGS:
+                fr = self.failure_rate.get((table, rung))
+                if fr is not None and fr.n:
+                    out.append(f"{rung}: failure_ewma={fr.value:.2f} "
+                               f"(n={fr.n})")
+                br = self._breakers.get((table, rung))
+                if br is not None and (br.state != "closed"
+                                       or br.opened_total):
+                    out.append(
+                        f"breaker({rung}): state={br.state} "
+                        f"consecutive_failures={br.consecutive_failures} "
+                        f"opened_total={br.opened_total}")
+            out.extend(f"note: {m}" for m in self.notes.get(table, ())[-4:])
+            return out

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -155,6 +156,11 @@ class ColumnSSTable:
     # place instead of failing the query
     replicas: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # serializes the verify-memo slow path so concurrent readers agree on
+    # quarantine state and a repair runs exactly once; the memoized fast
+    # path stays lock-free (a list read is atomic under the GIL)
+    _vlock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def nbytes(self) -> int:
         return sum(b.nbytes() for b in self.blocks) + self.index.nbytes()
@@ -166,22 +172,29 @@ class ColumnSSTable:
         an attached replica set (core/replica.py): a verified replica copy
         replaces the corrupt payload, the quarantine is lifted and the read
         proceeds bit-identically.  Only when no healthy copy exists does the
-        block stay quarantined and ``BlockCorruption`` raise."""
+        block stay quarantined and ``BlockCorruption`` raise.  Thread-safe:
+        the unverified slow path is double-checked under a per-SSTable lock,
+        so N concurrent readers of a corrupt block see one repair and one
+        consistent quarantine transition."""
         if self.checksums is None:
             return
-        if self._verified is None:
-            self._verified = [False] * len(self.blocks)
-        if self._verified[b]:
-            return
-        got = payload_checksum(self.blocks[b])
-        if got != self.checksums[b]:
-            self.quarantined.add(b)
-            if self.replicas is not None and self.replicas.repair(self, b):
-                self.quarantined.discard(b)
-                self._verified[b] = True
-                return
-            raise BlockCorruption(self.name, b, self.checksums[b], got)
-        self._verified[b] = True
+        v = self._verified
+        if v is not None and v[b]:
+            return                     # memoized fast path, lock-free
+        with self._vlock:
+            if self._verified is None:
+                self._verified = [False] * len(self.blocks)
+            if self._verified[b]:
+                return                 # verified while we waited
+            got = payload_checksum(self.blocks[b])
+            if got != self.checksums[b]:
+                self.quarantined.add(b)
+                if self.replicas is not None and self.replicas.repair(self, b):
+                    self.quarantined.discard(b)
+                    self._verified[b] = True
+                    return
+                raise BlockCorruption(self.name, b, self.checksums[b], got)
+            self._verified[b] = True
 
     def mark_unverified(self, b: int) -> None:
         """Drop block ``b``'s memoized verification (fault injection: a
@@ -362,6 +375,15 @@ class ScanStats:
     #                                  # block-repair events this query
     #                                  # triggered ("repaired col/block b
     #                                  # from replica r")
+    # the cost.ScanEstimate the executor planned against, carried out so
+    # the session's post-execution commit step can close the calibration
+    # loop (cost.observe_scan) without the executor mutating shared state
+    estimate: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # wall seconds the execution took (stamped by Database.execute) — what
+    # the commit step feeds the health registry's latency EWMA
+    latency_s: float = dataclasses.field(
+        default=0.0, repr=False, compare=False)
 
     def absorb(self, other: "ScanStats") -> None:
         """Fold one shard's counters into the query-level stats (the
@@ -395,9 +417,28 @@ class LSMStore:
         self.baseline: VirtualSSTable = VirtualSSTable.build(
             schema, Table.empty(schema), version=0, block_rows=block_rows)
         self._ts = 0
+        # serializes writers (DML, freeze, compaction) against each other
+        # and against the incremental merge-on-read walk, so concurrent
+        # readers never iterate a memtable/minor dict mid-mutation.
+        # Baseline reads stay lock-free: a compaction swaps the whole
+        # VirtualSSTable object, readers keep the reference they grabbed.
+        self._lock = threading.RLock()
+        # bumped on every baseline swap (bulk load / major compaction) —
+        # with _ts (bumped by every DML) it forms the table ``epoch`` that
+        # keys plan/result caches: any write or compaction moves the epoch
+        self._baseline_gen = 0
         self.redo_log: List[Tuple[int, DmlType, Any, Optional[Dict[str, Any]]]] = []
         self.mlog_sinks: List[Any] = []  # MLog observers (mview.py)
         self._refresh_replicas()
+
+    @property
+    def epoch(self) -> Tuple[int, int]:
+        """Monotone change marker ``(current_ts, baseline_gen)``: the first
+        component moves on every DML, the second on every baseline swap
+        (major compaction / bulk load).  Two equal epochs guarantee every
+        read answers identically, which is exactly the invalidation rule
+        the serving layer's plan/result caches key on."""
+        return (self._ts, self._baseline_gen)
 
     def _refresh_replicas(self) -> None:
         """(Re-)attach the replica set to the current baseline when the
@@ -426,34 +467,38 @@ class LSMStore:
         return self.baseline.row(i) if i >= 0 else None
 
     def insert(self, row: Dict[str, Any]) -> int:
-        pk = row[self.schema.pk]
-        ts = self._next_ts()
-        if self._old_row(pk, ts) is not None:
-            raise KeyError(f"duplicate pk {pk}")
-        self._write(ts, DmlType.INSERT, pk, dict(row), old=None)
-        return ts
+        with self._lock:
+            pk = row[self.schema.pk]
+            ts = self._next_ts()
+            if self._old_row(pk, ts) is not None:
+                raise KeyError(f"duplicate pk {pk}")
+            self._write(ts, DmlType.INSERT, pk, dict(row), old=None)
+            return ts
 
     def update(self, pk: Any, changes: Dict[str, Any]) -> int:
-        ts = self._next_ts()
-        old = self._old_row(pk, ts)
-        if old is None:
-            raise KeyError(f"update of missing pk {pk}")
-        new = dict(old)
-        new.update(changes)
-        new[self.schema.pk] = changes.get(self.schema.pk, pk)
-        self._write(ts, DmlType.UPDATE, pk, new, old=old)
-        if new[self.schema.pk] != pk:  # pk change = delete+insert
-            self.memtable.apply(ts, DmlType.DELETE, None, pk)
-            self.memtable.apply(ts, DmlType.INSERT, new, new[self.schema.pk])
-        return ts
+        with self._lock:
+            ts = self._next_ts()
+            old = self._old_row(pk, ts)
+            if old is None:
+                raise KeyError(f"update of missing pk {pk}")
+            new = dict(old)
+            new.update(changes)
+            new[self.schema.pk] = changes.get(self.schema.pk, pk)
+            self._write(ts, DmlType.UPDATE, pk, new, old=old)
+            if new[self.schema.pk] != pk:  # pk change = delete+insert
+                self.memtable.apply(ts, DmlType.DELETE, None, pk)
+                self.memtable.apply(ts, DmlType.INSERT, new,
+                                    new[self.schema.pk])
+            return ts
 
     def delete(self, pk: Any) -> int:
-        ts = self._next_ts()
-        old = self._old_row(pk, ts)
-        if old is None:
-            raise KeyError(f"delete of missing pk {pk}")
-        self._write(ts, DmlType.DELETE, pk, None, old=old)
-        return ts
+        with self._lock:
+            ts = self._next_ts()
+            old = self._old_row(pk, ts)
+            if old is None:
+                raise KeyError(f"delete of missing pk {pk}")
+            self._write(ts, DmlType.DELETE, pk, None, old=old)
+            return ts
 
     def _write(self, ts: int, op: DmlType, pk: Any, row: Optional[Dict[str, Any]],
                old: Optional[Dict[str, Any]]):
@@ -473,103 +518,120 @@ class LSMStore:
         write the data directly as a columnar baseline SSTable.  Only legal
         on an empty store (the paper uses it for hidden-table MV rebuilds
         and ≥10 GB initial loads).  Returns the baseline version."""
-        assert self.baseline.nrows == 0 and len(self.memtable) == 0 \
-            and not self.minors, "direct load requires an empty store"
-        n = len(next(iter(columns.values())))
-        cols = {}
-        for spec in self.schema.columns:
-            vals = np.asarray(columns[spec.name])
-            if spec.ctype == ColType.STR and vals.dtype.kind != "S":
-                vals = vals.astype(np.bytes_)
-            cols[spec.name] = Column(spec, vals)
-        tbl = Table(self.schema, cols)
-        ts = self._next_ts()
-        self.baseline = VirtualSSTable.build(self.schema, tbl, ts,
-                                             self.block_rows)
-        assert self.baseline.nrows == n
-        self._refresh_replicas()
-        return ts
+        with self._lock:
+            assert self.baseline.nrows == 0 and len(self.memtable) == 0 \
+                and not self.minors, "direct load requires an empty store"
+            n = len(next(iter(columns.values())))
+            cols = {}
+            for spec in self.schema.columns:
+                vals = np.asarray(columns[spec.name])
+                if spec.ctype == ColType.STR and vals.dtype.kind != "S":
+                    vals = vals.astype(np.bytes_)
+                cols[spec.name] = Column(spec, vals)
+            tbl = Table(self.schema, cols)
+            ts = self._next_ts()
+            self.baseline = VirtualSSTable.build(self.schema, tbl, ts,
+                                                 self.block_rows)
+            self._baseline_gen += 1
+            assert self.baseline.nrows == n
+            self._refresh_replicas()
+            return ts
 
     def bulk_insert_rows(self, columns: Dict[str, Any]) -> int:
         """Incremental direct load (paper §IV-C): structure the data
         directly into ROW-format storage (one minor SSTable), bypassing the
         per-statement write path.  Works on any store state."""
-        names = list(columns.keys())
-        arrays = [np.asarray(columns[n]) for n in names]
-        n = len(arrays[0])
-        ts = self._next_ts()
-        rows: Dict[Any, List[Version]] = {}
-        pk_i = names.index(self.schema.pk)
-        for r in range(n):
-            row = {nm: (a[r].item() if hasattr(a[r], "item") else a[r])
-                   for nm, a in zip(names, arrays)}
-            rows[row[self.schema.pk]] = [Version(ts, DmlType.INSERT, row)]
-        self.minors.append(MinorSSTable(self.schema, rows))
-        return ts
+        with self._lock:
+            names = list(columns.keys())
+            arrays = [np.asarray(columns[n]) for n in names]
+            n = len(arrays[0])
+            ts = self._next_ts()
+            rows: Dict[Any, List[Version]] = {}
+            pk_i = names.index(self.schema.pk)
+            for r in range(n):
+                row = {nm: (a[r].item() if hasattr(a[r], "item") else a[r])
+                       for nm, a in zip(names, arrays)}
+                rows[row[self.schema.pk]] = [Version(ts, DmlType.INSERT, row)]
+            self.minors.append(MinorSSTable(self.schema, rows))
+            return ts
 
     def freeze_memtable(self):
         """Dump MemTable to a row-format minor SSTable."""
-        if len(self.memtable) == 0:
-            return
-        self.minors.append(MinorSSTable(self.schema, self.memtable.rows))
-        self.memtable = MemTable(self.schema)
+        with self._lock:
+            if len(self.memtable) == 0:
+                return
+            self.minors.append(MinorSSTable(self.schema, self.memtable.rows))
+            self.memtable = MemTable(self.schema)
 
     def minor_compact(self):
         """Merge all minor SSTables into one (still row format)."""
-        if len(self.minors) <= 1:
-            return
-        merged: Dict[Any, List[Version]] = {}
-        for m in self.minors:
-            for pk, chain in m.rows.items():
-                merged.setdefault(pk, []).extend(chain)
-        for chain in merged.values():
-            chain.sort(key=lambda v: v.ts)
-        self.minors = [MinorSSTable(self.schema, merged)]
+        with self._lock:
+            if len(self.minors) <= 1:
+                return
+            merged: Dict[Any, List[Version]] = {}
+            for m in self.minors:
+                for pk, chain in m.rows.items():
+                    merged.setdefault(pk, []).extend(chain)
+            for chain in merged.values():
+                chain.sort(key=lambda v: v.ts)
+            self.minors = [MinorSSTable(self.schema, merged)]
 
     def major_compact(self, version: Optional[int] = None) -> int:
         """'Daily compaction': fold all increments ≤ version into a new
         columnar baseline.  Deterministic for a given version (replica
         consistency).  Returns the new baseline version."""
-        version = self._ts if version is None else version
-        self.freeze_memtable()
-        rows = self._merged_rows(version)
-        tbl = Table.from_rows(self.schema, list(rows.values())) if rows else Table.empty(self.schema)
-        self.baseline = VirtualSSTable.build(self.schema, tbl, version, self.block_rows)
-        # Drop folded increments; keep versions newer than the compaction point.
-        kept: List[MinorSSTable] = []
-        for m in self.minors:
-            newer = {pk: [v for v in chain if v.ts > version]
-                     for pk, chain in m.rows.items()}
-            newer = {pk: c for pk, c in newer.items() if c}
-            if newer:
-                kept.append(MinorSSTable(self.schema, newer))
-        self.minors = kept
-        self._refresh_replicas()
-        return version
+        with self._lock:
+            version = self._ts if version is None else version
+            self.freeze_memtable()
+            rows = self._merged_rows(version)
+            tbl = Table.from_rows(self.schema, list(rows.values())) \
+                if rows else Table.empty(self.schema)
+            self.baseline = VirtualSSTable.build(self.schema, tbl, version,
+                                                 self.block_rows)
+            self._baseline_gen += 1
+            # Drop folded increments; keep versions newer than the
+            # compaction point.
+            kept: List[MinorSSTable] = []
+            for m in self.minors:
+                newer = {pk: [v for v in chain if v.ts > version]
+                         for pk, chain in m.rows.items()}
+                newer = {pk: c for pk, c in newer.items() if c}
+                if newer:
+                    kept.append(MinorSSTable(self.schema, newer))
+            self.minors = kept
+            self._refresh_replicas()
+            return version
 
     # --- read path ------------------------------------------------------------
 
     def _find_version(self, pk: Any, ts: int) -> Optional[Version]:
-        v = self.memtable.get(pk, ts)
-        if v is not None:
-            return v
-        best = None
-        for m in self.minors:
-            cand = m.get(pk, ts)
-            if cand is not None and (best is None or cand.ts > best.ts):
-                best = cand
-        return best
+        with self._lock:
+            v = self.memtable.get(pk, ts)
+            if v is not None:
+                return v
+            best = None
+            for m in self.minors:
+                cand = m.get(pk, ts)
+                if cand is not None and (best is None or cand.ts > best.ts):
+                    best = cand
+            return best
 
     def _incremental_effective(self, ts: int) -> Dict[Any, Version]:
-        out: Dict[Any, Version] = {}
-        for m in self.minors:
-            for pk, v in m.effective(ts).items():
+        # under the store lock: concurrent DML mutates the memtable dicts
+        # (and a freeze/compact replaces the minors list) while this walks
+        # them — the snapshot filter (v.ts <= ts) makes the *result*
+        # deterministic, the lock makes the iteration safe
+        with self._lock:
+            out: Dict[Any, Version] = {}
+            for m in self.minors:
+                for pk, v in m.effective(ts).items():
+                    if pk not in out or v.ts > out[pk].ts:
+                        out[pk] = v
+            for pk, v in self.memtable.effective(ts).items():
                 if pk not in out or v.ts > out[pk].ts:
                     out[pk] = v
-        for pk, v in self.memtable.effective(ts).items():
-            if pk not in out or v.ts > out[pk].ts:
-                out[pk] = v
-        return {pk: v for pk, v in out.items() if v.ts > self.baseline.version}
+            return {pk: v for pk, v in out.items()
+                    if v.ts > self.baseline.version}
 
     def live_incremental_rows(self, inc: Dict[Any, Version],
                               preds: Sequence[Predicate] = (),

@@ -429,20 +429,26 @@ class MaterializedAggView:
 
     # ---- query (real-time: container ⊕ pending mlog) --------------------------
 
-    def query(self, realtime: bool = True) -> Table:
+    def query(self, realtime: bool = True,
+              ts: Optional[int] = None) -> Table:
+        """Container ⊕ pending-mlog merge.  ``ts`` pins the merge to an
+        inclusive snapshot (base DML racing the read is excluded, so the
+        answer equals a base-table scan at exactly ``ts``); None merges
+        whatever tail exists at read time, the pre-serving behaviour."""
         groups = self.groups
         if realtime and self.mlog is not None:
             fp = faultinject.active()
             if fp is not None:
                 fp.on_mav_read(self)
             try:
-                pending = self._since_with_retry(self.last_refresh_ts)
+                pending = self._since_with_retry(self.last_refresh_ts, ts)
             except MLogPurged:
                 # The not-yet-applied tail was purged out from under us:
                 # the container + tail merge cannot be trusted, so rebuild
-                # at the current snapshot (freshness preserved, cost paid).
+                # at the requested snapshot (freshness preserved, cost
+                # paid) — full_refresh scans the base, no mlog needed.
                 self.stats["purge_full_refreshes"] += 1
-                self.full_refresh()
+                self.full_refresh(ts)
                 groups = self.groups
                 pending = []
             if pending:
@@ -455,7 +461,8 @@ class MaterializedAggView:
                         preds = list(self.defn.preds) + [
                             Predicate(c, _eq_op(), v)
                             for c, v in zip(self.defn.group_by, k)]
-                        tbl, _ = self.base.scan(preds, columns=self._cols_needed())
+                        tbl, _ = self.base.scan(preds, ts,
+                                                columns=self._cols_needed())
                         fresh = _GroupState(k)
                         for row in tbl.rows():
                             self._apply_row(fresh, row, +1)

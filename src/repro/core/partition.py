@@ -464,7 +464,8 @@ class ShardedScanExecutor:
                  max_attempts: int = 3,
                  retry_backoff_s: float = 0.02,
                  hedge: bool = True,
-                 breaker: Optional[Dict[str, str]] = None):
+                 breaker: Optional[Dict[str, str]] = None,
+                 observe: bool = True):
         # n_shards None == cost-based: the planner picks the fan-out width
         # per query from the estimated surviving-row count (a selective
         # probe stays single-shard, a full scan fans out to the cores).
@@ -497,6 +498,11 @@ class ShardedScanExecutor:
         # the degradation provenance); "probe" runs the rung normally as a
         # half-open probe.
         self.breaker = breaker or {}
+        # observe=False defers the calibration feedback (cost.observe_scan)
+        # to the caller — the session's commit step — so execution itself
+        # has no shared-state side effects; the estimate rides out on
+        # ``stats.estimate`` either way.
+        self.observe = observe
         self.last_stats: Optional[ScanStats] = None
 
     # ------------------------------------------------------------------ API
@@ -544,7 +550,9 @@ class ShardedScanExecutor:
             out = self._try_device(store, q, shards, verdicts, stats, est,
                                    deadline)
             if out is not None:
-                cost.observe_scan(store, est, stats.actual_rows)
+                stats.estimate = est
+                if self.observe:
+                    cost.observe_scan(store, est, stats.actual_rows)
                 return out, stats
 
         str_aggs = any(store.schema.spec(a.column).ctype == ColType.STR
@@ -567,7 +575,9 @@ class ShardedScanExecutor:
             stats.degraded.append(
                 f"sharded->vectorized: {type(e).__name__}: {e}")
             return self._vectorized_fallback(store, q, ts, stats, e), stats
-        cost.observe_scan(store, est, stats.actual_rows)
+        stats.estimate = est
+        if self.observe:
+            cost.observe_scan(store, est, stats.actual_rows)
         return rows, stats
 
     def _vectorized_fallback(self, store, q, ts, stats, cause

@@ -330,9 +330,15 @@ class PushdownExecutor:
     def __init__(self, engine: Optional[VectorEngine] = None,
                  device: bool = False,
                  granularity: Optional[int] = None,
-                 breaker: Optional[Dict[str, str]] = None):
+                 breaker: Optional[Dict[str, str]] = None,
+                 observe: bool = True):
         self.engine = engine or VectorEngine()
         self.device = device
+        # observe=False defers the calibration feedback (cost.observe_scan)
+        # to the caller: the session's commit step does it once per query,
+        # keeping execution itself free of shared-state side effects.  The
+        # planned estimate always rides out on ``stats.estimate``.
+        self.observe = observe
         # granularity None == selectivity-adaptive (cost model chooses the
         # blocks-per-batch coalescing and the device tile shape per query);
         # an explicit int pins the coalescing factor (1 == legacy
@@ -389,7 +395,9 @@ class PushdownExecutor:
         if self.device and not inc_rows and not over.size:
             out = self._try_device(store, q, verdicts, stats, est, deadline)
             if out is not None:
-                cost.observe_scan(store, est, stats.actual_rows)
+                stats.estimate = est
+                if self.observe:
+                    cost.observe_scan(store, est, stats.actual_rows)
                 return out, stats
 
         # flat group-less aggregates can swallow clean blocks from sketches
@@ -401,7 +409,9 @@ class PushdownExecutor:
                                  sub_block=adaptive, deadline=deadline)
         stats.actual_rows = (sum(fb.n_selected for fb in filtered)
                              + (sketch.n_rows if sketch is not None else 0))
-        cost.observe_scan(store, est, stats.actual_rows)
+        stats.estimate = est
+        if self.observe:
+            cost.observe_scan(store, est, stats.actual_rows)
 
         # -- stage 3+4: late materialization + terminal operators --------
         if sketch is not None:

@@ -116,7 +116,11 @@ class StoreReplicas:
         """Background integrity pass: verify every copy of every block and
         heal what can be healed — corrupt primaries are repaired from a
         healthy replica, corrupt replicas are re-cloned from a verified
-        primary.  Returns the events appended by this pass."""
+        primary.  Returns the events appended by this pass.  Safe to run
+        while queries execute (the serving layer schedules it on idle
+        ticks): primary repair serializes through ``ColumnReplicas.repair``
+        and replica re-clones hold the same per-column lock, so a scrub
+        never swaps a copy out from under an in-flight repair."""
         mark = len(self.events)
         for name, cr in self.columns.items():
             # reach the primary through the back-reference recorded at
@@ -133,20 +137,21 @@ class StoreReplicas:
                     if cr.repair(cst, b):
                         cst.quarantined.discard(b)
                         primary_ok = True
-                for r, (blocks, sums) in enumerate(zip(cr.copies,
-                                                       cr.checksums)):
-                    if payload_checksum(blocks[r_b := b]) == sums[r_b]:
-                        continue
-                    if primary_ok:
-                        blocks[b] = clone_block(cst.blocks[b])
-                        sums[b] = payload_checksum(blocks[b])
-                        self.events.append(
-                            f"scrub: re-cloned {name}/block {b} "
-                            f"replica {r} from primary")
-                    else:
-                        self.events.append(
-                            f"scrub: {name}/block {b} replica {r} corrupt "
-                            f"and no healthy source")
+                with cr._lock:
+                    for r, (blocks, sums) in enumerate(zip(cr.copies,
+                                                           cr.checksums)):
+                        if payload_checksum(blocks[r_b := b]) == sums[r_b]:
+                            continue
+                        if primary_ok:
+                            blocks[b] = clone_block(cst.blocks[b])
+                            sums[b] = payload_checksum(blocks[b])
+                            self.events.append(
+                                f"scrub: re-cloned {name}/block {b} "
+                                f"replica {r} from primary")
+                        else:
+                            self.events.append(
+                                f"scrub: {name}/block {b} replica {r} "
+                                f"corrupt and no healthy source")
         return self.events[mark:]
 
 

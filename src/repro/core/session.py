@@ -53,6 +53,7 @@ same executors so pre-session callers keep working unchanged.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -61,6 +62,7 @@ import time
 
 from . import cost
 from .engine import QAgg, Query, ScalarEngine, VectorEngine
+from .errors import QueryTimeout
 from .health import HealthRegistry
 from .lsm import LSMStore, ScanStats
 from .mview import (MAVDefinition, MJVDefinition, MLog, MLogPurged,
@@ -108,6 +110,14 @@ class LogicalPlan:
         if self.aggs:
             return self.group_by + tuple(a.alias for a in self.aggs)
         return tuple(self.project) or tuple(all_names)
+
+    def cache_key(self) -> Tuple:
+        """Fully-hashable identity of the normalized plan (predicate values
+        keyed by repr, so IN-lists and other unhashable values are fine) —
+        the ``CompiledPlan``/result-cache key component."""
+        return (tuple(_pred_key(p) for p in self.preds), self.group_by,
+                tuple((a.op, a.column, a.alias) for a in self.aggs),
+                self.sort_by, self.limit, self.project)
 
 
 def plan_logical(q: Query, schema: Optional[Schema] = None) -> LogicalPlan:
@@ -211,6 +221,17 @@ class Plan:
     # execution detail the executors consume, not part of repr
     breaker: Dict[str, str] = dataclasses.field(
         default_factory=dict, repr=False)
+    # the cost-chosen route before any breaker pre-degrade: execution
+    # restores it and re-applies *fresh* breaker verdicts, so a plan
+    # compiled while a breaker was open still probes once it cools down
+    base_route: str = dataclasses.field(default="", repr=False)
+    # the snapshot the execution actually read (current_ts captured at
+    # execute entry when no ts= pin was given) — replaying a scan at this
+    # ts reproduces the answer bit-identically
+    ts: Optional[int] = None
+    # True when the serving layer answered from its result cache instead
+    # of executing
+    cached: bool = False
 
     def describe(self) -> str:
         bits = [f"route={self.route}"]
@@ -388,6 +409,60 @@ def plan_physical(logical: LogicalPlan, est: cost.ScanEstimate,
 
 
 # ---------------------------------------------------------------------------
+# The compiled-plan artifact (plan layer / execute layer seam)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """An immutable, reusable planning artifact: everything ``execute``
+    needs to run the query, plus the epochs it was compiled against.
+
+    Compilation is **pure** — breaker verdicts are consulted without
+    advancing cool-downs, calibration and MAV freshness are read-only — so
+    compiling twice is always safe and a ``CompiledPlan`` can be cached and
+    shared across threads.  ``key`` is hashable and moves whenever the
+    answer *or* the routing could change: it folds in the normalized
+    ``LogicalPlan``, the table epoch (every DML / baseline swap), and the
+    calibration epoch (every feedback observation).  ``result_key`` drops
+    the calibration component — feedback shifts routing, never answers —
+    and is what result caches / shared-scan coalescing key on."""
+
+    table: str
+    logical: LogicalPlan
+    plan: Plan                         # template — treated read-only; every
+                                       # execution runs on a fresh copy
+    epoch: Tuple[int, int]             # LSMStore.epoch at compile time
+    cal_epoch: int                     # TableCalibration.epoch at compile
+    ts: Optional[int]                  # snapshot pin (None = read current)
+    hints: Tuple = ()                  # (engine, n_shards, device_route,
+                                       # use_mv, max_workers) as compiled
+    max_workers: Optional[int] = None  # per-plan worker-pool width override
+
+    @property
+    def key(self) -> Tuple:
+        return (self.table, self.logical.cache_key(), self.hints, self.ts,
+                self.epoch, self.cal_epoch)
+
+    @property
+    def result_key(self) -> Tuple:
+        return (self.table, self.logical.cache_key(), self.hints, self.ts,
+                self.epoch)
+
+    def fresh_plan(self) -> Plan:
+        """A mutable per-execution copy of the plan template: provenance
+        lists are fresh (N threads sharing this artifact never race on
+        them), breaker verdicts are cleared and the pre-breaker route is
+        restored — execution re-applies breakers with *fresh, advancing*
+        verdicts so cross-query health state keeps moving."""
+        p = self.plan
+        return dataclasses.replace(
+            p, route=p.base_route or p.route,
+            degraded=[d for d in p.degraded if not d.startswith("breaker(")],
+            repaired=list(p.repaired), breaker={})
+
+
+# ---------------------------------------------------------------------------
 # Typed results
 # ---------------------------------------------------------------------------
 
@@ -542,11 +617,16 @@ class Database:
     def _plan(self, h: TableHandle, q: Query, engine: Optional[str],
               n_shards: Optional[int], device_route: Optional[str],
               ts: Optional[int], use_mv: bool,
-              advance: bool = True) -> Plan:
+              advance: bool = True,
+              max_workers: Optional[int] = None) -> Plan:
         logical = plan_logical(q, h.store.schema)
         verdicts = cost.prune_verdicts(h.store, logical.preds) \
             if h.store.baseline.n_blocks and logical.preds else None
-        est = cost.estimate_scan(h.store, logical.preds, verdicts)
+        # secondary calibration signal: the health registry's observed
+        # per-table latency EWMA rides on the estimate into choose_shards
+        lat = self.health.latency(h.name) if self.health is not None else None
+        est = cost.estimate_scan(h.store, logical.preds, verdicts,
+                                 latency_ewma_s=lat)
         # A snapshot read (ts=) pins the query to the scan paths: the MV
         # container only answers at current freshness.  A quarantined
         # (checksum-failed) block also disqualifies the rewrite: the
@@ -555,28 +635,63 @@ class Database:
         views = tuple(h.mavs.values()) \
             if use_mv and engine is None and ts is None \
             and not h.store.has_quarantined_blocks() else ()
+        workers = self.max_workers if max_workers is None else max_workers
         plan = plan_physical(logical, est, cost.calibration(h.store), views,
                              table=h.name, pinned_engine=engine,
                              n_shards=n_shards, device_route=device_route,
-                             max_workers=self.max_workers,
+                             max_workers=workers,
                              mv_stale_rows=self.mv_stale_rows)
+        plan.base_route = plan.route
         # Circuit breakers (core/health.py): consult the table's breakers
         # and pre-degrade known-bad rungs at plan time instead of walking
-        # the ladder again.  ``advance=False`` (explain) reports the
-        # verdicts without consuming cool-down ticks or arming probes.
+        # the ladder again.  ``advance=False`` (explain / compile) reports
+        # the verdicts without consuming cool-down ticks or arming probes —
+        # planning stays pure; execution re-applies with advance=True.
         if self.health is not None and plan.route != "mav":
-            plan.breaker = self.health.consult(h.name, advance=advance)
-            verdict = plan.breaker.get("sharded")
-            if verdict == "skip" and plan.route == "sharded":
-                # availability over the cost choice (and over pins): the
-                # fan-out itself is known-bad, answer single-shard
-                plan.degraded.append(cost.breaker_note(
-                    "sharded", "skip", "pre-degraded sharded->pushdown"))
-                plan.route = "pushdown"
-            elif verdict == "probe" and plan.route == "sharded":
-                plan.degraded.append(cost.breaker_note(
-                    "sharded", "probe", "attempting sharded fan-out"))
+            self._apply_breakers(h, plan, advance)
         return plan
+
+    def _apply_breakers(self, h: TableHandle, plan: Plan,
+                        advance: bool) -> None:
+        """Consult the table's breakers and fold the verdicts into
+        ``plan``: an open 'sharded' breaker pre-degrades the fan-out to
+        single-shard pushdown, a half-open one annotates the probe; the
+        device-rung verdicts ride in ``plan.breaker`` for the executors."""
+        plan.breaker = self.health.consult(h.name, advance=advance)
+        verdict = plan.breaker.get("sharded")
+        if verdict == "skip" and plan.route == "sharded":
+            # availability over the cost choice (and over pins): the
+            # fan-out itself is known-bad, answer single-shard
+            plan.degraded.append(cost.breaker_note(
+                "sharded", "skip", "pre-degraded sharded->pushdown"))
+            plan.route = "pushdown"
+        elif verdict == "probe" and plan.route == "sharded":
+            plan.degraded.append(cost.breaker_note(
+                "sharded", "probe", "attempting sharded fan-out"))
+
+    def compile(self, q: Query, table: Optional[str] = None, *,
+                engine: Optional[str] = None, n_shards: Optional[int] = None,
+                device_route: Optional[str] = None, ts: Optional[int] = None,
+                use_mv: bool = True,
+                max_workers: Optional[int] = None) -> CompiledPlan:
+        """Pure planning: normalize, estimate, route — no side effects on
+        calibration, breakers, or MAV state — and freeze the result into an
+        immutable, hashable :class:`CompiledPlan` keyed by the logical
+        plan + table epoch + calibration epoch.  Safe to call from any
+        thread and to cache: ``execute`` runs the artifact any number of
+        times.  ``max_workers=`` overrides the session's fan-out pool
+        width for this plan (the serving layer sizes it so server
+        concurrency x shard fan-out stays within the core budget)."""
+        h = self.table(table)
+        epoch = h.store.epoch
+        cal_epoch = cost.calibration(h.store).epoch
+        plan = self._plan(h, q, engine, n_shards, device_route, ts, use_mv,
+                          advance=False, max_workers=max_workers)
+        return CompiledPlan(
+            table=h.name, logical=plan.logical, plan=plan, epoch=epoch,
+            cal_epoch=cal_epoch, ts=ts,
+            hints=(engine, n_shards, device_route, use_mv, max_workers),
+            max_workers=max_workers)
 
     def explain(self, q: Query, table: Optional[str] = None, *,
                 engine: Optional[str] = None, n_shards: Optional[int] = None,
@@ -608,43 +723,112 @@ class Database:
         ``device_route=`` pin the fan-out knobs; ``use_mv=False`` disables
         the transparent MAV rewrite; ``ts=`` reads a snapshot (scan routes
         only); ``deadline_s=`` bounds scan-route wall time — past it the
-        query raises ``QueryTimeout`` carrying partial-progress stats."""
-        h = self.table(table)
-        plan = self._plan(h, q, engine, n_shards, device_route, ts, use_mv)
-        qq = plan.logical.to_query()
-        t0 = time.monotonic()
-        if plan.route == "mav":
-            rows, stats = self._execute_mav(h, plan)
-        else:
-            rows, stats = self._execute_scan(h, qq, plan, ts, deadline_s)
+        query raises ``QueryTimeout`` carrying partial-progress stats.
+
+        A thin composition of the three serving layers:
+        ``compile`` (pure plan) → ``execute`` (re-entrant run) →
+        ``commit`` (calibration + health feedback)."""
+        cplan = self.compile(q, table, engine=engine, n_shards=n_shards,
+                             device_route=device_route, ts=ts, use_mv=use_mv)
+        result = self.execute(cplan, deadline_s=deadline_s)
+        self.commit(result)
+        return result
+
+    def execute(self, cplan: CompiledPlan, *,
+                deadline_s: Optional[float] = None) -> ResultSet:
+        """Run a :class:`CompiledPlan`.  Re-entrant: N threads may execute
+        the same artifact (or different ones) against one store
+        concurrently — every run gets a fresh ``Plan`` copy, reads at a
+        snapshot captured on entry, and records the snapshot in
+        ``plan.ts`` so the answer can be replayed bit-identically.
+
+        Breakers advance here (one cool-down tick per execution, the
+        verdicts re-applied fresh to the restored pre-breaker route), so a
+        cached plan compiled under an open breaker still probes once the
+        breaker cools.  A major compaction racing the run swaps the
+        baseline mid-scan; that is detected by the baseline-generation
+        bump and the run is retried (bounded) against the new baseline."""
+        h = self.table(cplan.table)
+        store = h.store
+        for attempt in range(3):
+            plan = cplan.fresh_plan()
+            if self.health is not None and plan.route != "mav":
+                self._apply_breakers(h, plan, advance=True)
+            gen0 = store._baseline_gen
+            t0 = time.monotonic()
+            try:
+                if plan.route == "mav":
+                    rows, stats = self._execute_mav(h, plan)
+                else:
+                    ts_exec = cplan.ts if cplan.ts is not None \
+                        else store.current_ts
+                    plan.ts = ts_exec
+                    rows, stats = self._execute_scan(
+                        h, plan.logical.to_query(), plan, ts_exec,
+                        deadline_s, cplan.max_workers)
+            except QueryTimeout:
+                raise                  # deterministic: re-running can only
+                                       # blow the deadline again
+            except Exception:
+                if store._baseline_gen != gen0 and attempt < 2:
+                    continue           # compaction raced the scan: retry
+                raise
+            if plan.route != "mav" and store._baseline_gen != gen0 \
+                    and attempt < 2:
+                # the baseline was swapped while we scanned it — block
+                # indices may straddle two builds, so the answer is not
+                # trustworthy; re-run against the new baseline
+                plan.degraded.append(
+                    "execute: baseline swapped mid-scan (compaction "
+                    "raced), re-ran")
+                continue
+            break
         if stats is not None:
+            stats.latency_s = time.monotonic() - t0
             # execution-time degradation joins the plan-time entries so
             # ResultSet provenance shows the full ladder in order
             plan.degraded.extend(stats.degraded)
             plan.mlog_retries += stats.mlog_retries
             plan.repaired.extend(stats.repaired)
-            if self.health is not None:
-                # feed the health registry: EWMAs update and rung outcomes
-                # drive the breakers (the cross-query self-healing loop)
-                self.health.observe(h.name, stats,
-                                    latency_s=time.monotonic() - t0)
         return ResultSet(plan.logical.output_names(h.store.schema.names),
                          rows, plan, stats)
 
+    def commit(self, result: ResultSet) -> None:
+        """Post-execution side effects, the third stage of the query path:
+        close the calibration loop (``cost.observe_scan`` on the estimate
+        the executor carried out) and feed the health registry (latency /
+        failure EWMAs, breaker transitions).  Idempotence is *not* assumed
+        — call once per executed result, as ``query`` does.  Cached or
+        coalesced results served without executing must not be
+        committed."""
+        stats = result.stats
+        if stats is None or result.plan.cached:
+            return
+        h = self.table(result.plan.table)
+        if stats.estimate is not None:
+            cost.observe_scan(h.store, stats.estimate, stats.actual_rows)
+        if self.health is not None:
+            # feed the health registry: EWMAs update and rung outcomes
+            # drive the breakers (the cross-query self-healing loop)
+            self.health.observe(h.name, stats, latency_s=stats.latency_s)
+
     def _execute_scan(self, h: TableHandle, q: Query, plan: Plan,
                       ts: Optional[int],
-                      deadline_s: Optional[float] = None
+                      deadline_s: Optional[float] = None,
+                      max_workers: Optional[int] = None
                       ) -> Tuple[List[Dict[str, Any]], ScanStats]:
         store = h.store
+        workers = self.max_workers if max_workers is None else max_workers
         if plan.route == "pushdown":
-            return PushdownExecutor(breaker=plan.breaker).execute_stats(
+            return PushdownExecutor(
+                breaker=plan.breaker, observe=False).execute_stats(
                 store, q, ts, deadline_s=deadline_s)
         if plan.route == "sharded":
             ex = ShardedScanExecutor(n_shards=plan.n_shards,
                                      device=plan.device,
                                      device_route=plan.device_route or None,
-                                     max_workers=self.max_workers,
-                                     breaker=plan.breaker)
+                                     max_workers=workers,
+                                     breaker=plan.breaker, observe=False)
             rows, stats = ex.execute_stats(store, q, ts,
                                            deadline_s=deadline_s)
             plan.n_shards = stats.n_shards
@@ -661,12 +845,24 @@ class Database:
         """Answer from the MAV container ⊕ pending-mlog merge, then apply
         the residual group-column predicates and emit the query's aliases.
         ``mav.query(realtime=True)`` itself falls back to a full container
-        rebuild if the tail is purged between planning and here."""
+        rebuild if the tail is purged between planning and here.
+
+        Concurrent reads of one MAV serialize on a per-view lock (the
+        realtime merge can trigger container mutation — purge fallback,
+        dirty min/max recompute — which is not re-entrant), and the merge
+        is pinned to the snapshot captured under that lock so the answer
+        equals a base-table scan at exactly ``plan.ts``."""
         mav = h.mavs[plan.mv]
         logical, rw = plan.logical, plan.rewrite
-        purges0 = mav.stats.get("purge_full_refreshes", 0)
-        retries0 = mav.stats.get("mlog_retries", 0)
-        tbl = mav.query(realtime=True)
+        lock = mav.__dict__.setdefault("_read_lock", threading.Lock())
+        with lock:
+            purges0 = mav.stats.get("purge_full_refreshes", 0)
+            retries0 = mav.stats.get("mlog_retries", 0)
+            ts_exec = h.store.current_ts
+            plan.ts = ts_exec
+            tbl = mav.query(realtime=True, ts=ts_exec)
+            mlog_retries = mav.stats.get("mlog_retries", 0) - retries0
+            purged = mav.stats.get("purge_full_refreshes", 0) > purges0
         if rw["residual"] and len(tbl):
             mask = np.ones(len(tbl), bool)
             for p in rw["residual"]:
@@ -696,8 +892,8 @@ class Database:
         stats = ScanStats(used_pushdown=False)
         stats.rows_merged_incremental = plan.mv_pending
         stats.actual_rows = len(rows)
-        stats.mlog_retries = mav.stats.get("mlog_retries", 0) - retries0
-        if mav.stats.get("purge_full_refreshes", 0) > purges0:
+        stats.mlog_retries = mlog_retries
+        if purged:
             # the tail was purged between planning and the realtime read:
             # the MAV answered from a full container rebuild instead
             stats.purge_fallback = True

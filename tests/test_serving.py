@@ -1,0 +1,536 @@
+"""Concurrent multi-tenant serving: the plan/execute/commit split, Database
+thread safety, and the :class:`QueryServer` admission layer.
+
+The contracts under test:
+
+* **compile is pure** — planning twice consumes no breaker cool-down
+  ticks, writes no calibration feedback, and produces equal, hashable
+  cache keys; side effects happen only in ``commit``;
+* **execute is re-entrant and replayable** — N threads running compiled
+  plans against one store (with DML interleaved) each get an answer that
+  is *bit-identical* to a serial replay of the same query at the snapshot
+  recorded in ``plan.ts``;
+* **the serving layer isolates tenants** — quota-exhausted tenants defer
+  without degrading others, interactive traffic dispatches ahead of
+  batch, identical concurrent queries coalesce onto one execution, and
+  any write invalidates cached results (the key embeds the table epoch);
+* **self-healing still works under concurrency** — repair races and
+  breaker transitions from multiple threads stay consistent, and the
+  server schedules background scrubs whose events surface in health
+  notes.
+
+Every test bounds its waits (``result(timeout=)`` / ``join(timeout=)``),
+so a deadlock fails fast instead of hanging the suite.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import cost
+from repro.core.engine import QAgg, Query
+from repro.core.faultinject import (FaultPlan, corrupt_block, corrupt_replica,
+                                    inject)
+from repro.core.lsm import LSMStore
+from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.replica import replica_set
+from repro.core.serving import QueryServer, TenantQuota
+from repro.core.session import CompiledPlan, Database
+
+from tests.test_pushdown import SCH, make_store, norm
+
+GROUPED_Q = Query(preds=(Predicate("d", PredOp.BETWEEN, 50, 300),),
+                  group_by=("g",),
+                  aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+
+# distinct-by-predicate variants: same shape, different cache keys
+def q_slice(lo, hi):
+    return Query(preds=(Predicate("d", PredOp.BETWEEN, lo, hi),),
+                 group_by=("g",),
+                 aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+
+
+def make_db(rng, **kw):
+    return Database(make_store(rng), max_workers=kw.pop("max_workers", 4),
+                    **kw)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: compile is pure
+# ---------------------------------------------------------------------------
+
+
+def test_compile_returns_immutable_hashable_artifact():
+    db = make_db(np.random.default_rng(1))
+    c1 = db.compile(GROUPED_Q)
+    c2 = db.compile(GROUPED_Q)
+    assert isinstance(c1, CompiledPlan)
+    assert c1.key == c2.key and hash(c1.key) == hash(c2.key)
+    # result_key drops only the calibration epoch component
+    assert c1.result_key == c2.result_key
+    with pytest.raises(Exception):            # frozen dataclass
+        c1.table = "other"
+    # hint changes move the key
+    c3 = db.compile(GROUPED_Q, engine="pushdown")
+    assert c3.key != c1.key
+
+
+def test_compile_consumes_no_breaker_cooldown_ticks():
+    db = make_db(np.random.default_rng(2))
+    with inject(FaultPlan(fail_shard={0: 99, 1: 99, 2: 99, 3: 99})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # opens breaker
+    br = db.health.breaker("main", "sharded")
+    assert br.state == "open"
+    ticks0 = br.open_consults
+    for _ in range(5):
+        db.compile(GROUPED_Q, engine="sharded", n_shards=4)
+    assert br.open_consults == ticks0        # compile never advanced it
+    db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert br.open_consults == ticks0 + 1    # execution advanced it once
+
+
+def test_compile_writes_no_calibration_feedback():
+    db = make_db(np.random.default_rng(3))
+    cal = cost.calibration(db.table().store)
+    e0 = cal.epoch
+    for _ in range(4):
+        db.compile(GROUPED_Q)
+    assert cal.epoch == e0
+    rs = db.query(GROUPED_Q)                 # commit() closes the loop
+    if rs.stats is not None and rs.stats.estimate is not None:
+        assert cal.epoch > e0
+
+
+def test_epoch_moves_on_dml_and_baseline_swap():
+    db = make_db(np.random.default_rng(4))
+    st = db.table().store
+    e0 = st.epoch
+    st.insert({"k": 10_000, "g": 1, "d": 7, "v": 1.0, "s": "beta"})
+    e1 = st.epoch
+    assert e1 != e0
+    st.major_compact()
+    e2 = st.epoch
+    assert e2 != e1 and e2[1] == e1[1] + 1   # baseline generation bumped
+
+
+# ---------------------------------------------------------------------------
+# layer 2: execute — equivalence, replay, re-entrancy
+# ---------------------------------------------------------------------------
+
+
+def test_compile_execute_commit_equals_query():
+    rs_q = make_db(np.random.default_rng(5)).query(GROUPED_Q)
+    db = make_db(np.random.default_rng(5))
+    cplan = db.compile(GROUPED_Q)
+    rs = db.execute(cplan)
+    db.commit(rs)
+    assert norm(rs.rows) == norm(rs_q.rows)
+    assert rs.plan.route == rs_q.plan.route
+
+
+def test_execute_records_replayable_snapshot():
+    db = make_db(np.random.default_rng(6))
+    st = db.table().store
+    rs = db.query(GROUPED_Q)
+    assert rs.plan.ts is not None
+    before = norm(rs.rows)
+    for j in range(50):                      # move the table well past it
+        st.insert({"k": 20_000 + j, "g": j % 6, "d": 100 + j % 200,
+                   "v": 5.0, "s": "beta"})
+    assert norm(db.query(GROUPED_Q).rows) != before
+    replay = db.query(GROUPED_Q, ts=rs.plan.ts)
+    assert norm(replay.rows) == before
+
+
+def test_stale_compiled_plan_still_answers_current_data():
+    """A CompiledPlan outliving DML is *valid* (execute reads the current
+    snapshot) — only its cache key goes stale, which is the caches'
+    invalidation signal, not an execution error."""
+    db = make_db(np.random.default_rng(7))
+    st = db.table().store
+    cplan = db.compile(GROUPED_Q)
+    st.insert({"k": 30_000, "g": 2, "d": 100, "v": 3.0, "s": "beta"})
+    assert cplan.epoch != st.epoch           # key is stale...
+    rs = db.execute(cplan)
+    db.commit(rs)
+    assert norm(rs.rows) == norm(db.query(GROUPED_Q).rows)   # ...answer isn't
+
+
+HAMMER_QS = [GROUPED_Q, q_slice(0, 120), q_slice(200, 364),
+             Query(preds=(Predicate("g", PredOp.IN, (0, 2)),),
+                   group_by=("g", "d"), aggs=(QAgg("count", None, "n"),),
+                   sort_by=("g", "d"), limit=25),
+             Query(aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"))),
+             Query(preds=(Predicate("d", PredOp.LT, 20),),
+                   project=("k", "g", "d"), sort_by=("k",))]
+
+
+@pytest.mark.slow
+def test_hammer_concurrent_queries_bit_identical_to_serial_replay():
+    """≥8 reader threads x mixed query pool, DML writer interleaved: every
+    concurrent answer must equal a serial replay at its recorded
+    ``plan.ts`` snapshot.  Bounded joins guard against deadlock."""
+    db = make_db(np.random.default_rng(8))
+    st = db.table().store
+    n_threads, per_thread = 8, 12
+    results, errors = [], []
+    res_mu = threading.Lock()
+    start = threading.Barrier(n_threads + 1)
+    stop = threading.Event()
+
+    def reader(tid):
+        rng = np.random.default_rng(100 + tid)
+        start.wait(timeout=30)
+        for i in range(per_thread):
+            qi = int(rng.integers(0, len(HAMMER_QS)))
+            try:
+                rs = db.query(HAMMER_QS[qi])
+                with res_mu:
+                    results.append((qi, rs.plan.ts, norm(rs.rows)))
+            except Exception as exc:         # noqa: BLE001 - recorded
+                with res_mu:
+                    errors.append(exc)
+
+    def writer():
+        start.wait(timeout=30)
+        j = 0
+        while not stop.is_set():
+            st.insert({"k": 50_000 + j, "g": j % 6, "d": j % 365,
+                       "v": float(j), "s": "beta"})
+            if j % 7 == 3:
+                st.update(50_000 + j - 2, {"v": -1.0})
+            if j % 11 == 5:
+                st.delete(50_000 + j - 4)
+            j += 1
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=reader, args=(t,), daemon=True)
+               for t in range(n_threads)]
+    wt = threading.Thread(target=writer, daemon=True)
+    for t in threads + [wt]:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "reader deadlocked"
+    stop.set()
+    wt.join(timeout=30)
+    assert not wt.is_alive(), "writer deadlocked"
+    assert not errors, errors
+    assert len(results) == n_threads * per_thread
+    # serial replay: same query pinned at the recorded snapshot
+    for qi, ts, rows in results:
+        assert ts is not None
+        assert norm(db.query(HAMMER_QS[qi], ts=ts).rows) == rows
+
+
+@pytest.mark.slow
+def test_concurrent_compaction_does_not_corrupt_answers():
+    """Readers race major compactions: the baseline-generation check makes
+    execute re-run any scan the swap raced, so answers stay consistent."""
+    db = make_db(np.random.default_rng(9))
+    st = db.table().store
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            try:
+                rs = db.query(GROUPED_Q)
+                chk = db.query(GROUPED_Q, ts=rs.plan.ts)
+                if norm(chk.rows) != norm(rs.rows):
+                    errors.append(("mismatch", rs.plan.ts))
+            except Exception as exc:         # noqa: BLE001 - recorded
+                errors.append(exc)
+
+    threads = [threading.Thread(target=reader, daemon=True) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for j in range(6):
+        st.insert({"k": 60_000 + j, "g": j % 6, "d": j, "v": 1.0, "s": "beta"})
+        st.major_compact()
+        time.sleep(0.01)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "reader deadlocked"
+    assert not errors, errors
+
+
+def test_concurrent_block_repair_race_is_single_repair():
+    """Two+ threads hitting the same corrupt block: the per-column verify
+    lock makes exactly one of them repair it; everyone answers clean."""
+    rng = np.random.default_rng(10)
+    store = LSMStore(SCH, block_rows=32, memtable_limit=64, replication=2)
+    for i in range(256):
+        store.insert({"k": i, "g": int(rng.integers(0, 6)),
+                      "d": int(rng.integers(0, 365)),
+                      "v": float(rng.normal()), "s": "beta"})
+    store.major_compact()
+    db = Database(store, max_workers=2)
+    clean = norm(db.query(GROUPED_Q).rows)
+    corrupt_block(store, "v", block=1)
+    start = threading.Barrier(8)
+    out, errors = [], []
+    mu = threading.Lock()
+
+    def worker():
+        start.wait(timeout=30)
+        try:
+            rs = db.query(GROUPED_Q)
+            with mu:
+                out.append((norm(rs.rows), tuple(rs.plan.repaired)))
+        except Exception as exc:             # noqa: BLE001 - recorded
+            with mu:
+                errors.append(exc)
+
+    threads = [threading.Thread(target=worker, daemon=True) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "repair race deadlocked"
+    assert not errors, errors
+    assert all(rows == clean for rows, _ in out)
+    # the event log shows one repair, not eight
+    sr = replica_set(store)
+    assert sum("repair" in e for e in sr.events) == 1
+
+
+def test_breaker_opens_consistently_from_two_threads():
+    db = make_db(np.random.default_rng(11))
+    start = threading.Barrier(2)
+    errors = []
+
+    def worker():
+        start.wait(timeout=30)
+        with inject(FaultPlan(fail_shard={0: 99, 1: 99, 2: 99, 3: 99})):
+            try:
+                db.query(GROUPED_Q, engine="sharded", n_shards=4)
+            except Exception as exc:         # noqa: BLE001 - recorded
+                errors.append(exc)
+
+    threads = [threading.Thread(target=worker, daemon=True) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    assert not errors, errors
+    br = db.health.breaker("main", "sharded")
+    assert br.state == "open"
+    # registry stayed coherent: a clean query still answers (pre-degraded)
+    rs = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert any(d.startswith("breaker(sharded)") for d in rs.plan.degraded)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: QueryServer
+# ---------------------------------------------------------------------------
+
+
+def test_server_cache_hit_and_dml_invalidation():
+    db = make_db(np.random.default_rng(12))
+    with QueryServer(db, workers=2) as srv:
+        r1 = srv.submit(GROUPED_Q).result(timeout=30)
+        t2 = srv.submit(GROUPED_Q)
+        r2 = t2.result(timeout=30)
+        assert t2.cache_hit and r2.plan.cached
+        assert norm(r2.rows) == norm(r1.rows)
+        # any write moves the epoch: the cached entry is never hit again
+        db.table().store.insert({"k": 70_000, "g": 1, "d": 100, "v": 9.0,
+                                 "s": "beta"})
+        t3 = srv.submit(GROUPED_Q)
+        r3 = t3.result(timeout=30)
+        assert not t3.cache_hit and not r3.plan.cached
+        assert norm(r3.rows) != norm(r1.rows)
+        assert srv.metrics["cache_hits"] == 1
+
+
+def test_server_coalesces_identical_inflight_queries():
+    db = make_db(np.random.default_rng(13))
+    with QueryServer(db, workers=2) as srv:
+        srv.pause()
+        tickets = [srv.submit(GROUPED_Q) for _ in range(6)]
+        srv.resume()
+        rows = [norm(t.result(timeout=30).rows) for t in tickets]
+        assert all(r == rows[0] for r in rows)
+        m = srv.metrics
+        # 6 submissions, at most 2 executions (leader + maybe one after
+        # the cache warmed); the rest coalesced or cache-hit
+        assert m["executed"] <= 2
+        assert m["coalesced"] + m["cache_hits"] >= 4
+        # a coalesced/cached answer must not double-commit feedback
+        assert all(t.cache_hit or t.coalesced for t in tickets[1:]) or \
+            m["cache_hits"] + m["coalesced"] == 5
+
+
+def test_server_quota_defers_and_window_reset_readmits():
+    db = make_db(np.random.default_rng(14))
+    est = db.compile(q_slice(0, 364)).plan.est_rows
+    quotas = {"small": TenantQuota(budget_rows=est * 1.5),
+              "big": TenantQuota(budget_rows=float("inf"))}
+    with QueryServer(db, workers=2, quotas=quotas, window_s=3600) as srv:
+        srv.pause()
+        ta = srv.submit(q_slice(0, 364), tenant="small")
+        tb = srv.submit(q_slice(1, 363), tenant="small")   # over budget
+        tc = srv.submit(q_slice(2, 362), tenant="big")     # unaffected
+        srv.resume()
+        ta.result(timeout=30)
+        tc.result(timeout=30)                # big tenant not starved
+        time.sleep(0.1)
+        assert tb.deferred and not tb.done()
+        assert srv.metrics["deferred_quota"] == 1
+        assert srv.spend("small") >= est
+        srv.reset_quotas()                   # window rolls: re-admitted
+        tb.result(timeout=30)
+        assert srv.spend("small") < est * 1.5
+
+
+def test_server_priority_interactive_dispatches_first():
+    db = make_db(np.random.default_rng(15))
+    quotas = {"dash": TenantQuota(),         # interactive (default)
+              "etl": TenantQuota(latency_class="batch")}
+    with QueryServer(db, workers=1, quotas=quotas) as srv:
+        srv.pause()
+        b1 = srv.submit(q_slice(0, 100), tenant="etl")
+        b2 = srv.submit(q_slice(1, 101), tenant="etl")
+        i1 = srv.submit(q_slice(2, 102), tenant="dash")   # submitted last
+        srv.resume()
+        for t in (b1, b2, i1):
+            t.result(timeout=30)
+        assert i1.dispatched_at < b1.dispatched_at < b2.dispatched_at
+
+
+def test_server_reserves_a_worker_slot_for_interactive():
+    """With 2 workers, at most 1 batch execution is in flight: a batch
+    flood can't occupy the whole pool."""
+    db = make_db(np.random.default_rng(16))
+    quotas = {"etl": TenantQuota(latency_class="batch")}
+    with QueryServer(db, workers=2, quotas=quotas) as srv:
+        srv.pause()
+        tickets = [srv.submit(q_slice(i, 200 + i), tenant="etl")
+                   for i in range(4)]
+        srv.resume()
+        for t in tickets:
+            t.result(timeout=30)
+        # dispatches were serialized: each batch ticket dispatched only
+        # after the previous resolved (cap = workers - 1 = 1)
+        for prev, nxt in zip(tickets, tickets[1:]):
+            assert nxt.dispatched_at >= prev.done_at
+
+
+def test_server_invalid_latency_class_rejected():
+    with pytest.raises(ValueError):
+        TenantQuota(latency_class="bursty")
+
+
+def test_server_compile_error_resolves_ticket():
+    db = make_db(np.random.default_rng(17))
+    with QueryServer(db, workers=1) as srv:
+        t = srv.submit(Query(preds=(Predicate("nope", PredOp.EQ, 1),)))
+        with pytest.raises(KeyError):
+            t.result(timeout=30)
+        assert srv.metrics["errors"] == 1
+
+
+def test_server_close_resolves_pending_tickets():
+    db = make_db(np.random.default_rng(18))
+    srv = QueryServer(db, workers=1)
+    srv.pause()
+    t = srv.submit(GROUPED_Q)
+    srv.close()
+    with pytest.raises(RuntimeError):
+        t.result(timeout=10)
+    with pytest.raises(RuntimeError):
+        srv.submit(GROUPED_Q)
+
+
+def test_server_schedules_scrubs_and_notes_events():
+    rng = np.random.default_rng(19)
+    store = LSMStore(SCH, block_rows=32, memtable_limit=64, replication=2)
+    for i in range(256):
+        store.insert({"k": i, "g": int(rng.integers(0, 6)),
+                      "d": int(rng.integers(0, 365)),
+                      "v": float(rng.normal()), "s": "beta"})
+    store.major_compact()
+    db = Database(store, max_workers=2)
+    corrupt_replica(store, "v", block=0, replica=0)   # primary stays clean
+    with QueryServer(db, workers=1, scrub_every=2, idle_scrub_s=0.02) as srv:
+        for i in range(4):                   # ≥ scrub_every admissions
+            srv.submit(q_slice(i, 100 + i)).result(timeout=30)
+        deadline = time.monotonic() + 10
+        while srv.metrics["scrubs"] == 0 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert srv.metrics["scrubs"] >= 1
+    report = db.health_report("main")
+    assert any("scrub(" in line for line in report)
+    # the corrupt replica copy was healed by the pass
+    assert any("reclone" in e or "replica" in e for e in
+               replica_set(store).events)
+
+
+@pytest.mark.slow
+def test_server_hammer_mixed_tenants_with_faults():
+    """Serving-layer stress: 3 tenants, DML interleaved, a corrupt block
+    repaired mid-serve — every resolved ticket's answer replays serially."""
+    rng = np.random.default_rng(20)
+    store = LSMStore(SCH, block_rows=32, memtable_limit=64, replication=2)
+    for i in range(400):
+        store.insert({"k": i, "g": int(rng.integers(0, 6)),
+                      "d": int(rng.integers(0, 365)),
+                      "v": float(rng.normal()), "s": "beta"})
+    store.major_compact()
+    db = Database(store, max_workers=4)
+    quotas = {"a": TenantQuota(), "b": TenantQuota(),
+              "etl": TenantQuota(latency_class="batch")}
+    with QueryServer(db, workers=3, quotas=quotas) as srv:
+        corrupt_block(store, "v", block=2)
+        tickets = []
+        for i in range(36):
+            tenant = ("a", "b", "etl")[i % 3]
+            tickets.append((i % len(HAMMER_QS),
+                            srv.submit(HAMMER_QS[i % len(HAMMER_QS)],
+                                       tenant=tenant)))
+            if i % 6 == 5:
+                store.insert({"k": 80_000 + i, "g": i % 6, "d": i % 365,
+                              "v": 2.0, "s": "beta"})
+        resolved = [(qi, t.result(timeout=60)) for qi, t in tickets]
+    for qi, rs in resolved:
+        if rs.plan.ts is None:               # cached view keeps leader's ts
+            continue
+        assert norm(db.query(HAMMER_QS[qi], ts=rs.plan.ts).rows) \
+            == norm(rs.rows)
+
+
+# ---------------------------------------------------------------------------
+# satellite: health latency EWMA feeds the cost model
+# ---------------------------------------------------------------------------
+
+
+def test_slow_table_latency_ewma_lowers_fanout_floor():
+    db = make_db(np.random.default_rng(21))
+    st = db.table().store
+    est = cost.estimate_scan(st, GROUPED_Q.preds)
+    borderline = dataclasses_replace_rows(est, cost.MIN_FANOUT_ROWS * 0.75)
+    assert cost.choose_shards(borderline, max_workers=4) == 1
+    slow = dataclasses_replace_rows(est, cost.MIN_FANOUT_ROWS * 0.75,
+                                    latency_ewma_s=cost.SLOW_TABLE_LATENCY_S
+                                    * 2)
+    assert cost.choose_shards(slow, max_workers=4) > 1
+
+
+def dataclasses_replace_rows(est, est_rows, **kw):
+    import dataclasses
+    return dataclasses.replace(est, est_rows=est_rows, **kw)
+
+
+def test_health_latency_reaches_the_planner():
+    db = make_db(np.random.default_rng(22))
+    assert db.health.latency("main") is None
+    db.query(GROUPED_Q)
+    lat = db.health.latency("main")
+    assert lat is not None and lat >= 0.0
+    # planner threads it into the estimate without error
+    cplan = db.compile(GROUPED_Q)
+    assert cplan.plan.est_rows >= 0
