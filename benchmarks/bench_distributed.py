@@ -560,6 +560,180 @@ def self_healing(n: int = SH_N, block_rows: int = SH_BLOCK_ROWS,
     }
 
 
+DUR_N = 400_000               # baseline rows behind the timed serving epoch
+DUR_EPOCH_ROWS = 200          # realtime DML trickle per epoch (~0.05% churn)
+DUR_STMT_ROWS = 4_000         # rows for the per-statement premium probe
+
+
+def durability(repeat: int = 7) -> dict:
+    """Durability's prices (PR 9), measured where they live:
+
+    * ``wal_overhead_pct`` — the WAL's price on the nearly-real-time
+      serving loop, the path the paper's durability story is about: one
+      epoch = a realtime DML trickle (``DUR_EPOCH_ROWS`` rows into a
+      ``DUR_N``-row table) at the serving path's group commit
+      (``group_commit=64``), the epoch-closing ``db.flush_wal()`` that
+      makes the trickle durable before the epoch is acknowledged, the MAV
+      incremental refresh that absorbs it, and the round's analytical
+      queries (grouped, flat, and predicate-window shapes — readers
+      dominate writers, which is the workload the paper serves).
+      Identical fresh sessions per timed sample (in-memory vs durable — a
+      reused session's insert cost grows with its live memtable, which
+      would time state growth, not the WAL; setup, including the baseline
+      load and its WAL drain, stays outside the clock), interleaved
+      best-of pairs; guarded <= 2% absolute by bench_guard.py.
+    * ``wal_per_statement_us`` — the unamortized commit price the epoch
+      metric deliberately does not hide: row-at-a-time inserts at
+      ``group_commit=1`` (every statement framed, checksummed, and
+      written before it is acknowledged) against the same loop in-memory,
+      reported as microseconds of WAL work per statement;
+      ``wal_batched_per_statement_us`` is the same probe at
+      ``group_commit=64`` (one pickled + checksummed batch frame per 64
+      records).
+    * **recovery** — an epoch-consistent ``db.snapshot()`` (``snapshot_ms``,
+      image-size-to-encoded-baseline ratio in ``snapshot_storage_x``),
+      then ``Database.recover`` timed end-to-end over snapshot + WAL tail
+      (``recovery_ms``, replayed count in ``recovery_replayed``), with the
+      recovered answers asserted identical to the pre-crash session's."""
+    import gc
+    import shutil
+    import tempfile
+    from repro.core.engine import QAgg as _QAgg
+    from repro.core.mview import AggSpec, MAVDefinition
+    from repro.core.relation import ColType, schema as mkschema
+    sch = mkschema(("k", ColType.INT), ("g", ColType.INT),
+                   ("d", ColType.INT), ("v", ColType.FLOAT))
+    grouped_q = Query(group_by=("g",), aggs=(_QAgg("count", None, "n"),
+                                             _QAgg("sum", "v", "sv")))
+    count_q = Query(group_by=(), aggs=(_QAgg("count", None, "n"),
+                                       _QAgg("sum", "v", "sv")))
+    window_q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 180),),
+                     group_by=("g",), aggs=(_QAgg("count", None, "n"),
+                                            _QAgg("sum", "v", "sv"),
+                                            _QAgg("max", "v", "mx")))
+    idx = np.arange(DUR_N)
+    base_cols = {"k": idx, "g": idx % 7, "d": (idx * 37) % 365,
+                 "v": idx * 0.5}
+    roots = []
+
+    def fresh(durable=False, group_commit=64):
+        root = None
+        if durable:
+            root = tempfile.mkdtemp(prefix="bench_wal_")
+            roots.append(root)
+        db = Database(durable=root, group_commit=group_commit)
+        h = db.create_table("t", sch, block_rows=16_384,
+                            memtable_limit=8_192)
+        h.store.bulk_insert(base_cols)
+        db.create_mav("mv", MAVDefinition(
+            group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),
+                                   AggSpec("count_star", None, "n"))))
+        db.flush_wal()      # baseline load drained before serving starts
+        return db
+
+    def make_rows(i0, n):
+        return [{"k": DUR_N + i, "g": i % 7, "d": (i * 37) % 365,
+                 "v": float(i) * 0.5} for i in range(i0, i0 + n)]
+
+    epoch_rows = make_rows(0, DUR_EPOCH_ROWS)
+
+    def serving_epoch(db):
+        """One nearly-real-time round: DML trickle, the epoch-closing WAL
+        flush (the group-commit boundary — 'epoch served' means 'tail
+        durable'), the MAV refresh, and the analytical queries."""
+        h = db.table("t")
+        gc.collect()        # allocator noise from session setup stays out
+        t0 = time.perf_counter()
+        for r in epoch_rows:
+            h.insert(dict(r))
+        db.flush_wal()
+        h.mavs["mv"].incremental_refresh()
+        for q in (grouped_q, count_q, window_q, grouped_q, window_q,
+                  count_q):
+            db.query(q, table="t")
+        return time.perf_counter() - t0
+
+    def paired_inner(f_a, f_b, n):
+        """Like ``_paired_min``, but for thunks that do their own (untimed)
+        setup and return the measured seconds of just the serving epoch."""
+        t_a = t_b = float("inf")
+        for i in range(n):
+            for f in ((f_a, f_b) if i % 2 == 0 else (f_b, f_a)):
+                dt = f()
+                if f is f_a:
+                    t_a = min(t_a, dt)
+                else:
+                    t_b = min(t_b, dt)
+        return t_a, t_b
+
+    out = {"epoch_rows": DUR_EPOCH_ROWS, "n_rows": DUR_N,
+           "epoch_group_commit": 64, "host_cpus": os.cpu_count()}
+    try:
+        t_mem, t_dur = paired_inner(
+            lambda: serving_epoch(fresh(False)),
+            lambda: serving_epoch(fresh(True)), repeat)
+        out["epoch_mem_ms"] = t_mem * 1e3
+        out["epoch_wal_ms"] = t_dur * 1e3
+        out["wal_overhead_pct"] = max(t_dur / t_mem - 1.0, 0.0) * 100
+
+        # -- per-statement premium: row-at-a-time commit, empty store ----
+        stmt_rows = make_rows(0, DUR_STMT_ROWS)
+
+        def stmt_batch(group_commit=None):
+            root = None
+            if group_commit is not None:
+                root = tempfile.mkdtemp(prefix="bench_stmt_")
+                roots.append(root)
+            db = Database(durable=root, group_commit=group_commit or 1)
+            h = db.create_table("t", sch, block_rows=4096,
+                                memtable_limit=8192)
+            t0 = time.perf_counter()
+            for r in stmt_rows:
+                h.insert(dict(r))
+            return time.perf_counter() - t0
+
+        t_m1, t_g1 = paired_inner(lambda: stmt_batch(None),
+                                  lambda: stmt_batch(1), repeat)
+        t_m64, t_g64 = paired_inner(lambda: stmt_batch(None),
+                                    lambda: stmt_batch(64), repeat)
+        out["mem_insert_ms"] = t_m1 * 1e3
+        out["wal_insert_ms"] = t_g1 * 1e3
+        out["wal_per_statement_us"] = \
+            max(t_g1 - t_m1, 0.0) / DUR_STMT_ROWS * 1e6
+        out["wal_batched_per_statement_us"] = \
+            max(t_g64 - t_m64, 0.0) / DUR_STMT_ROWS * 1e6
+
+        # -- snapshot + recover: restore must reproduce the session ------
+        dur = fresh(True)
+        root = roots[-1]
+        serving_epoch(dur)                   # warm epoch behind the WAL
+        h = dur.table("t")
+        base_bytes = sum(enc.nbytes()
+                         for cst in h.store.baseline.cols.values()
+                         for enc in cst.blocks)
+        t0 = time.perf_counter()
+        snap = dur.snapshot()
+        out["snapshot_ms"] = (time.perf_counter() - t0) * 1e3
+        out["snapshot_storage_x"] = os.path.getsize(snap) / max(base_bytes, 1)
+        for r in make_rows(DUR_EPOCH_ROWS, DUR_EPOCH_ROWS):
+            h.insert(r)                      # WAL tail past the checkpoint
+        dur.flush_wal()                      # drained => durable
+        want = (_norm(dur.query(grouped_q, table="t").rows),
+                _norm(dur.query(count_q, table="t").rows))
+        t0 = time.perf_counter()
+        rdb = Database.recover(root)
+        out["recovery_ms"] = (time.perf_counter() - t0) * 1e3
+        out["recovery_replayed"] = rdb._recovery["replayed"]
+        got = (_norm(rdb.query(grouped_q, table="t").rows),
+               _norm(rdb.query(count_q, table="t").rows))
+        assert got == want, \
+            "recovered session diverged from the pre-crash session"
+        return out
+    finally:
+        for r in roots:
+            shutil.rmtree(r, ignore_errors=True)
+
+
 def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
     """CI mode: record shard-scaling + granularity + device-route + top-k
     numbers to BENCH_distributed.json and assert (a) the 4-shard fan-out
@@ -732,6 +906,18 @@ def smoke(n: int = N, block_rows: int = BLOCK_ROWS, attempts: int = 3) -> dict:
         f"replica set costs > 2% latency on the clean path: {heal}")
     assert heal["health_overhead_pct"] <= 2.0, (
         f"health registry costs > 2% on the session clean path: {heal}")
+
+    # -- durability layer: WAL clean-path budget + recovery time ----------
+    dur = None
+    for _ in range(attempts):
+        cur = durability()
+        if dur is None or cur["wal_overhead_pct"] < dur["wal_overhead_pct"]:
+            dur = cur
+        if dur["wal_overhead_pct"] <= 2.0:
+            break
+    out["durability"] = dur
+    assert dur["wal_overhead_pct"] <= 2.0, (
+        f"WAL costs > 2% on the serving-epoch clean path: {dur}")
     return out
 
 
@@ -789,6 +975,16 @@ def run() -> str:
     rep.add(config="health_registry_clean_path", shards="-",
             ms=f"{heal['health_on_ms']:.1f}",
             speedup=f"{heal['health_overhead_pct']:.2f}%")
+    dur = durability()
+    rep.add(config="wal_serving_epoch_gc64", shards="-",
+            ms=f"{dur['epoch_wal_ms']:.1f}",
+            speedup=f"{dur['wal_overhead_pct']:.2f}%")
+    rep.add(config="wal_statement_commit_gc1", shards="-",
+            ms=f"{dur['wal_insert_ms']:.1f}",
+            speedup=f"{dur['wal_per_statement_us']:.1f}us_per_stmt")
+    rep.add(config="snapshot_plus_tail_recovery", shards="-",
+            ms=f"{dur['recovery_ms']:.1f}",
+            speedup=f"snap_{dur['snapshot_storage_x']:.2f}x_of_baseline")
     return rep.emit()
 
 

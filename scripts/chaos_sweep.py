@@ -27,14 +27,17 @@ from __future__ import annotations
 
 import argparse
 import secrets
+import shutil
 import sys
+import tempfile
 
 import numpy as np
 
 from repro.core import faultinject as fi
 from repro.core.engine import QAgg, Query
-from repro.core.errors import BlockCorruption, QueryError, QueryTimeout
-from repro.core.faultinject import FaultPlan, inject
+from repro.core.errors import (BlockCorruption, QueryError, QueryTimeout,
+                               RecoveryError)
+from repro.core.faultinject import (FaultPlan, SimulatedCrash, inject)
 from repro.core.lsm import LSMStore
 from repro.core.mview import AggSpec, MAVDefinition
 from repro.core.relation import ColType, Predicate, PredOp, schema
@@ -70,14 +73,141 @@ def norm(rows):
                      for k, v in r.items())) for r in rows)
 
 
+# ---------------------------------------------------------------------------
+# crash/recover rounds (scripts/check.sh --crash)
+# ---------------------------------------------------------------------------
+
+CRASH_SCENARIOS = ("crash_before_append", "crash_after_append",
+                   "group_commit_abandon", "torn_tail", "mid_snapshot",
+                   "mid_replay", "corrupt_record")
+
+
+def _crash_row(rng, i):
+    return {"k": i, "g": int(rng.integers(0, 6)),
+            "d": int(rng.integers(0, 365)), "v": float(rng.normal()),
+            "s": ["alpha", "beta", "gamma"][int(rng.integers(0, 3))]}
+
+
+def _committed_reference(rows):
+    """Answers from a clean in-memory session that executed exactly the
+    committed prefix."""
+    rdb = Database()
+    h = rdb.create_table("t", SCH, block_rows=32, memtable_limit=64)
+    for r in rows:
+        h.insert(dict(r))
+    return norm(rdb.query(FLAT_Q, table="t").rows)
+
+
+def crash_round(rng, scen, root) -> None:
+    """One durable session, one deterministic kill point, one recovery.
+    The contract: the recovered answer equals the committed-prefix
+    reference (prefix = insert records actually on disk), or recovery
+    raises a typed RecoveryError — never silent loss, never invention."""
+    from repro.core.recovery import wal_path
+    from repro.core.wal import scan_wal
+    gc = int(rng.integers(2, 6)) if scen == "group_commit_abandon" else 1
+    db = Database(durable=root, group_commit=gc)
+    h = db.create_table("t", SCH, block_rows=32, memtable_limit=64)
+    n = int(rng.integers(12, 40))
+    rows = [_crash_row(rng, i) for i in range(n)]
+    snap_rows = 0       # rows covered by a successful (compacting) snapshot
+
+    if scen in ("crash_before_append", "crash_after_append"):
+        phase = "before" if scen == "crash_before_append" else "after"
+        at = int(rng.integers(1, n))
+        try:
+            with inject(FaultPlan(crash_wal_append=phase,
+                                  crash_wal_append_at=at)):
+                for r in rows:
+                    h.insert(dict(r))
+        except SimulatedCrash:
+            pass
+    else:
+        for r in rows:
+            h.insert(dict(r))
+        if scen == "torn_tail":
+            fi.truncate_wal_tail(wal_path(root, "t"),
+                                 nbytes=int(rng.integers(1, 12)))
+        elif scen == "mid_snapshot":
+            if rng.integers(0, 2):      # sometimes a good checkpoint first
+                db.snapshot()           # ...which compacts the WAL
+                snap_rows = len(rows)
+                extra = _crash_row(rng, n)
+                h.insert(dict(extra))
+                rows.append(extra)
+            try:
+                with inject(FaultPlan(crash_snapshot=True)):
+                    db.snapshot()
+                raise AssertionError(f"{scen}: kill point did not fire")
+            except SimulatedCrash:
+                pass
+        elif scen == "corrupt_record":
+            fi.corrupt_wal_record(wal_path(root, "t"),
+                                  record=int(rng.integers(1, n)))
+            try:
+                Database.recover(root)
+                raise AssertionError(f"{scen}: corrupt record not detected")
+            except RecoveryError:
+                return                            # typed failure: contract met
+        elif scen == "mid_replay":
+            try:
+                with inject(FaultPlan(
+                        crash_replay_at=int(rng.integers(1, n)))):
+                    Database.recover(root)
+                raise AssertionError(f"{scen}: kill point did not fire")
+            except SimulatedCrash:
+                pass                  # fall through: recovery must reconverge
+
+    # committed prefix == snapshot-covered rows + insert records on disk
+    recs, _torn, _ = scan_wal(wal_path(root, "t"))
+    committed = snap_rows + sum(1 for r in recs if r.kind == "insert")
+    rdb = Database.recover(root)
+    got = norm(rdb.query(FLAT_Q, table="t").rows)
+    want = _committed_reference(rows[:committed])
+    assert got == want, f"{scen}: recovered answer != committed prefix"
+    if scen == "crash_after_append":
+        assert committed >= 1     # the logged statement survived the crash
+
+
+def crash_sweep(rng, rounds) -> dict:
+    counts = {s: 0 for s in CRASH_SCENARIOS}
+    for round_no in range(rounds):
+        scen = CRASH_SCENARIOS[int(rng.integers(0, len(CRASH_SCENARIOS)))]
+        counts[scen] += 1
+        root = tempfile.mkdtemp(prefix="chaos_crash_")
+        try:
+            crash_round(rng, scen, root)
+        except AssertionError:
+            print(f"chaos_sweep: crash round {round_no} FAILED "
+                  f"scenario={scen}")
+            raise
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    return counts
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--crash-rounds", type=int, default=0,
+                    help="seeded crash/recover rounds: durable session, "
+                         "random kill point, recovery checked against the "
+                         "committed-prefix reference")
     args = ap.parse_args(argv)
     seed = args.seed if args.seed is not None else secrets.randbelow(2**31)
-    print(f"chaos_sweep: seed={seed} rounds={args.rounds}", flush=True)
+    print(f"chaos_sweep: seed={seed} rounds={args.rounds} "
+          f"crash_rounds={args.crash_rounds}", flush=True)
     rng = np.random.default_rng(seed)
+
+    if args.crash_rounds:
+        ccounts = crash_sweep(rng, args.crash_rounds)
+        print(f"chaos_sweep: {args.crash_rounds} crash/recover rounds green "
+              f"(seed={seed})")
+        print("  crash scenarios: " + ", ".join(
+            f"{k}={v}" for k, v in ccounts.items() if v))
+    if args.rounds <= 0:
+        return 0
 
     store = build_store(rng)
     db = Database(store, max_workers=4)

@@ -13,6 +13,15 @@
 #                              # and records the clean-path hook overhead in
 #                              # BENCH_distributed.json (bench_guard.py holds
 #                              # every *_overhead_pct key to <= 2% absolute)
+#   scripts/check.sh --crash   # durability lane: the kill-point crash matrix
+#                              # (tests/test_durability.py, every crash either
+#                              # recovers to the committed-prefix answer or
+#                              # raises a typed RecoveryError), then seeded
+#                              # randomized crash/recover rounds
+#                              # (chaos_sweep.py --crash-rounds), then the
+#                              # distributed smoke — whose "durability" section
+#                              # records wal_overhead_pct (<= 2% absolute) and
+#                              # recovery_ms in BENCH_distributed.json
 #   scripts/check.sh --chaos   # fault lane plus the seeded randomized fault
 #                              # sweep (scripts/chaos_sweep.py): random
 #                              # single-fault scenarios against one session,
@@ -40,6 +49,10 @@ if [[ "${1:-}" == "--full" ]]; then
 elif [[ "${1:-}" == "--faults" ]]; then
     FAULTS_ONLY=1
     python -m pytest -q tests/test_faults.py
+elif [[ "${1:-}" == "--crash" ]]; then
+    FAULTS_ONLY=1
+    python -m pytest -q tests/test_durability.py
+    python scripts/chaos_sweep.py --rounds 0 --crash-rounds 25
 elif [[ "${1:-}" == "--chaos" ]]; then
     FAULTS_ONLY=1
     python -m pytest -q tests/test_faults.py

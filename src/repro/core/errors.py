@@ -15,6 +15,9 @@ wrong:
 * :class:`RouteExhausted`    — every degradation step failed in turn
 * :class:`MLogPurged`        — an MV delta window was purged (recoverable
   by full refresh; kept a ``RuntimeError`` subclass for back-compat)
+* :class:`RecoveryError`     — crash recovery cannot restore a provably
+  consistent store (corrupt WAL record, restored-block CRC mismatch,
+  replay divergence) — committed-prefix or typed failure, never silence
 * :class:`KeyPackError`      — sort keys cannot pack into one uint64 word
   (an internal fallback signal, kept a ``ValueError`` subclass)
 
@@ -127,6 +130,26 @@ class MLogPurged(QueryError, RuntimeError):
             f"below ts={purged_below} were purged — full refresh required")
         self.ts_exclusive = ts_exclusive
         self.purged_below = purged_below
+
+
+class RecoveryError(QueryError):
+    """Crash recovery cannot produce a provably consistent store: a restored
+    block failed its build-time CRC, a WAL record in the middle of the log
+    is corrupt, replay diverged from the recorded epoch stamps, or the log
+    references durable state (a seeded table) no snapshot covers.  The
+    durability contract (core/wal.py / core/recovery.py) is committed-prefix
+    or typed failure — never a silently wrong or partial store, so recovery
+    raises this instead of handing back whatever it could salvage."""
+
+    def __init__(self, reason: str, table: Optional[str] = None,
+                 seq: Optional[int] = None):
+        where = f" (table {table!r}" + \
+            (f", wal seq {seq}" if seq is not None else "") + ")" \
+            if table is not None else ""
+        super().__init__(f"recovery failed{where}: {reason}")
+        self.reason = reason
+        self.table = table
+        self.seq = seq
 
 
 class KeyPackError(QueryError, ValueError):

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import threading
 import time
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -31,6 +32,13 @@ import numpy as np
 from .errors import KernelLaunchError, MLogPurged
 
 _ACTIVE: Optional["FaultPlan"] = None
+
+
+class SimulatedCrash(RuntimeError):
+    """A deterministic kill point fired: the process is considered dead at
+    this exact instruction.  Deliberately *not* a ``QueryError`` — nothing
+    in the query layer may catch/degrade around it; crash tests catch it at
+    the harness level and then recover from disk."""
 
 
 def active() -> Optional["FaultPlan"]:
@@ -77,6 +85,18 @@ class FaultPlan:
     * ``purge_mlog_before_read`` — genuinely purge the MAV's mlog tail
       right before the realtime read (the mid-query purge scenario: the
       bounded retry cannot help, the purge-fallback full refresh must).
+    * ``crash_wal_append = "before" | "after"`` — raise
+      :class:`SimulatedCrash` around WAL append number
+      ``crash_wal_append_at`` (1-based, counted across tables): "before"
+      kills the process with the statement never logged (recovery must
+      exclude it), "after" with the statement durable (recovery must
+      include it).
+    * ``crash_snapshot`` — kill mid-snapshot: after the temp image is
+      written, before the atomic ``os.replace`` (the previous snapshot
+      must survive intact).
+    * ``crash_replay_at = k`` — kill recovery itself, right before it
+      applies the ``k``-th replayed WAL record (1-based); a second
+      ``recover()`` must then succeed identically (replay is read-only).
 
     ``events`` logs every fired fault in order, so tests assert the
     degradation provenance matches exactly what was injected.
@@ -89,6 +109,10 @@ class FaultPlan:
     fail_route_persistent: Tuple[str, ...] = ()
     mlog_since_failures: int = 0
     purge_mlog_before_read: bool = False
+    crash_wal_append: Optional[str] = None
+    crash_wal_append_at: int = 1
+    crash_snapshot: bool = False
+    crash_replay_at: int = 0
     events: List[str] = dataclasses.field(default_factory=list)
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
@@ -97,6 +121,8 @@ class FaultPlan:
         default_factory=dict, repr=False)
     _mlog_calls: int = dataclasses.field(default=0, repr=False)
     _purged: bool = dataclasses.field(default=False, repr=False)
+    _wal_appends: int = dataclasses.field(default=0, repr=False)
+    _replayed: int = dataclasses.field(default=0, repr=False)
 
     def _record(self, msg: str) -> None:
         with self._lock:
@@ -145,6 +171,41 @@ class FaultPlan:
             self._record(f"transient mlog purge on since() call #{n}")
             raise MLogPurged(ts_exclusive, ts_exclusive + 1)
 
+    def on_wal_append(self, table: str, phase: str) -> None:
+        """Called by ``WriteAheadLog.append`` before buffering and after
+        the (possibly batched) write — the two durability boundaries the
+        pre/post-append crash scenarios pin."""
+        if self.crash_wal_append is None:
+            return
+        with self._lock:
+            if phase == "before":
+                self._wal_appends += 1
+            n = self._wal_appends
+        if phase == self.crash_wal_append and n == self.crash_wal_append_at:
+            self._record(f"crash {phase} WAL append #{n} on {table!r}")
+            raise SimulatedCrash(
+                f"injected crash {phase} WAL append #{n} on {table!r}")
+
+    def on_snapshot(self, stage: str) -> None:
+        """Called by ``recovery.snapshot`` with ``stage="prepared"`` once
+        the temp image is fully written, before the atomic rename."""
+        if self.crash_snapshot and stage == "prepared":
+            self._record("crash mid-snapshot (temp written, not renamed)")
+            raise SimulatedCrash("injected crash mid-snapshot")
+
+    def on_replay(self, table: str, seq: int) -> None:
+        """Called by ``recovery.recover`` before each WAL record is
+        re-applied (ordinal-counted across tables)."""
+        if not self.crash_replay_at:
+            return
+        with self._lock:
+            self._replayed += 1
+            n = self._replayed
+        if n == self.crash_replay_at:
+            self._record(f"crash mid-replay at record #{n} "
+                         f"({table!r} seq {seq})")
+            raise SimulatedCrash(f"injected crash mid-replay at record #{n}")
+
     def on_mav_read(self, mav) -> None:
         """Mid-query purge: fires once, right before the MAV realtime read
         merges the pending tail (i.e. after planning chose the mav route)."""
@@ -173,6 +234,46 @@ def corrupt_block(store, column: str, block: int = 0) -> str:
             return f.name
     raise ValueError(
         f"block {block} of column {column!r} has no array payload to corrupt")
+
+
+def truncate_wal_tail(path: str, nbytes: int = 7) -> int:
+    """Chop the last ``nbytes`` bytes off a WAL file — the torn-tail crash
+    (the OS got only part of the final group-commit write to disk).
+    Recovery must come back with the longest valid record prefix.  Returns
+    the resulting file size."""
+    size = os.path.getsize(path)
+    new = max(0, size - nbytes)
+    with open(path, "rb+") as f:
+        f.truncate(new)
+    return new
+
+
+def corrupt_wal_record(path: str, record: int = 0) -> int:
+    """Flip one payload byte of the ``record``-th (0-based) frame in a WAL
+    file — bit rot in the middle of the log, which recovery must refuse
+    with a typed :class:`~.errors.RecoveryError` (a complete frame with a
+    bad CRC is not a torn tail; the suffix past it cannot be trusted).
+    Returns the absolute byte offset that was flipped."""
+    from .wal import HEADER, MAGIC
+    with open(path, "rb") as f:
+        buf = f.read()
+    head = len(MAGIC) + HEADER.size
+    off, k = 0, 0
+    while off + head <= len(buf):
+        length, _ = HEADER.unpack_from(buf, off + len(MAGIC))
+        if k == record:
+            if length == 0 or off + head + length > len(buf):
+                raise ValueError(f"record {record} has no complete payload")
+            flip_at = off + head
+            with open(path, "rb+") as f:
+                f.seek(flip_at)
+                b = f.read(1)
+                f.seek(flip_at)
+                f.write(bytes([b[0] ^ 0x5A]))
+            return flip_at
+        off += head + length
+        k += 1
+    raise ValueError(f"WAL {path!r} has no record {record}")
 
 
 def corrupt_replica(store, column: str, block: int = 0,

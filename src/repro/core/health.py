@@ -206,6 +206,17 @@ class HealthRegistry:
                 verdict = br.consult(advance)
                 if verdict is not None:
                     out[rung] = verdict
+            # per-shard breakers (``sharded[<id>]``): their verdict rides
+            # out under the same key — the fan-out still runs (the rung is
+            # not pre-degraded), but an open shard fail-fasts to a single
+            # attempt instead of the full retry budget
+            for key in sorted(self._breakers):
+                t, rung = key
+                if t != table or not rung.startswith("sharded["):
+                    continue
+                verdict = self._breakers[key].consult(advance)
+                if verdict is not None:
+                    out[rung] = verdict
             return out
 
     # -------------------------------------------------------- observation
@@ -222,17 +233,44 @@ class HealthRegistry:
                     latency_s, self.alpha)
             self.shard_retries.setdefault(table, EWMA()).update(
                 float(getattr(stats, "shard_retries", 0)), self.alpha)
+            failed_shards = sorted(
+                {int(s) for s in getattr(stats, "failed_shards", ()) or ()})
             for rung in RUNGS:
                 failed = rung_outcome(rung, stats)
                 if failed is None:
                     continue
                 self.failure_rate.setdefault((table, rung), EWMA()).update(
                     1.0 if failed else 0.0, self.alpha)
+                if rung == "sharded" and failed and failed_shards:
+                    # shard-attributable failure: open the per-shard
+                    # breakers and leave the rung breaker alone, so one
+                    # persistently bad shard stops pre-degrading the whole
+                    # fan-out (it fail-fasts instead).  If a shard that was
+                    # *already* suspected (open/half-open) failed again —
+                    # its fail-fast attempt collapsed the fan-out a second
+                    # time — the rung really is sick: escalate to the rung
+                    # breaker as well.
+                    escalate = False
+                    for sid in failed_shards:
+                        sbr = self.breaker(table, f"sharded[{sid}]")
+                        if sbr.state != "closed":
+                            escalate = True
+                        sbr.record_failure()
+                    if not escalate:
+                        continue
                 br = self.breaker(table, rung)
                 if failed:
                     br.record_failure()
                 else:
                     br.record_success()
+                    if rung == "sharded":
+                        # a clean fan-out means every shard answered:
+                        # close (or resolve the probe of) any shard-level
+                        # breakers the table accumulated
+                        for key in list(self._breakers):
+                            if key[0] == table \
+                                    and key[1].startswith("sharded["):
+                                self._breakers[key].record_success()
 
     def latency(self, table: str) -> Optional[float]:
         """Observed per-table wall-latency EWMA in seconds, or None before
@@ -273,6 +311,16 @@ class HealthRegistry:
                 br = self._breakers.get((table, rung))
                 if br is not None and (br.state != "closed"
                                        or br.opened_total):
+                    out.append(
+                        f"breaker({rung}): state={br.state} "
+                        f"consecutive_failures={br.consecutive_failures} "
+                        f"opened_total={br.opened_total}")
+            for key in sorted(self._breakers):      # per-shard verdicts
+                t, rung = key
+                if t != table or not rung.startswith("sharded["):
+                    continue
+                br = self._breakers[key]
+                if br.state != "closed" or br.opened_total:
                     out.append(
                         f"breaker({rung}): state={br.state} "
                         f"consecutive_failures={br.consecutive_failures} "

@@ -357,6 +357,9 @@ class ScanStats:
                                        # predicates (feeds cost calibration)
     batch_blocks: int = 1              # blocks fused per vector batch
     device_tile_blocks: int = 1        # blocks fused per kernel tile
+    device_launch_chunks: int = 0      # >0: deadline-bounded chunked device
+                                       # launches (deadline checked between
+                                       # tile chunks, partials merged)
     device_route: str = ""             # 'collective' | 'host' when used_device
     n_devices: int = 0                 # scan-mesh size the device fan-out saw
     topk_pushdown: bool = False        # per-shard limit-aware top-k ran
@@ -375,6 +378,10 @@ class ScanStats:
     #                                  # block-repair events this query
     #                                  # triggered ("repaired col/block b
     #                                  # from replica r")
+    failed_shards: List[int] = dataclasses.field(default_factory=list)
+    #                                  # shard ids whose retry budget
+    #                                  # exhausted (keys the per-shard
+    #                                  # breakers in core/health.py)
     # the cost.ScanEstimate the executor planned against, carried out so
     # the session's post-execution commit step can close the calibration
     # loop (cost.observe_scan) without the executor mutating shared state
@@ -429,7 +436,20 @@ class LSMStore:
         self._baseline_gen = 0
         self.redo_log: List[Tuple[int, DmlType, Any, Optional[Dict[str, Any]]]] = []
         self.mlog_sinks: List[Any] = []  # MLog observers (mview.py)
+        # durability (core/wal.py): a durable Database attaches a
+        # WriteAheadLog here; every committed mutation then appends one
+        # epoch-stamped record at its commit point, under this same lock.
+        # None (the default) keeps the store purely in-memory.
+        self.wal: Optional[Any] = None
         self._refresh_replicas()
+
+    def _log(self, kind: str, **data: Any) -> None:
+        """Append one WAL record stamped with the post-mutation epoch.
+        Called at each mutation's commit point, under ``self._lock``
+        (recovery detaches ``wal`` while replaying, so replays never
+        re-log themselves)."""
+        if self.wal is not None:
+            self.wal.append(kind, self._ts, self._baseline_gen, data)
 
     @property
     def epoch(self) -> Tuple[int, int]:
@@ -502,6 +522,17 @@ class LSMStore:
 
     def _write(self, ts: int, op: DmlType, pk: Any, row: Optional[Dict[str, Any]],
                old: Optional[Dict[str, Any]]):
+        if self.wal is not None:
+            # write-ahead: the statement is durable before it is applied
+            # (UPDATE logs the full post-image, so replaying
+            # ``update(pk, row)`` reproduces the merge — and the
+            # pk-change delete+insert — exactly)
+            if op == DmlType.INSERT:
+                self._log("insert", row=row)
+            elif op == DmlType.DELETE:
+                self._log("delete", pk=pk)
+            else:
+                self._log("update", pk=pk, row=row)
         if not (op == DmlType.UPDATE and row is not None
                 and row[self.schema.pk] != pk):
             self.memtable.apply(ts, op, row, pk)
@@ -535,6 +566,7 @@ class LSMStore:
             self._baseline_gen += 1
             assert self.baseline.nrows == n
             self._refresh_replicas()
+            self._log("bulk_insert", columns=columns)
             return ts
 
     def bulk_insert_rows(self, columns: Dict[str, Any]) -> int:
@@ -553,6 +585,7 @@ class LSMStore:
                        for nm, a in zip(names, arrays)}
                 rows[row[self.schema.pk]] = [Version(ts, DmlType.INSERT, row)]
             self.minors.append(MinorSSTable(self.schema, rows))
+            self._log("bulk_rows", columns=columns)
             return ts
 
     def freeze_memtable(self):
@@ -600,6 +633,10 @@ class LSMStore:
                     kept.append(MinorSSTable(self.schema, newer))
             self.minors = kept
             self._refresh_replicas()
+            # baseline-swap marker: compaction is deterministic for a given
+            # version, so replaying it reproduces the exact baseline (and
+            # keeps the ``_baseline_gen`` epoch component continuous)
+            self._log("major_compact", version=version)
             return version
 
     # --- read path ------------------------------------------------------------

@@ -98,10 +98,14 @@ class MLog:
         return [e for e in self.entries if ts_exclusive < e.ts <= hi]
 
     def purge_upto(self, ts: int) -> int:
-        """TTL cleanup of applied entries; returns #purged."""
+        """TTL cleanup of applied entries; returns #purged.  On a durable
+        base the horizon is WAL-logged so recovery can restore it — clamped
+        there to what the restored views still need, so MAV incremental
+        refresh resumes without a spurious full refresh."""
         before = len(self.entries)
         self.entries = [e for e in self.entries if e.ts > ts]
         self.purged_below = max(self.purged_below, ts)
+        self.base._log("purge", ts=ts)
         return before - len(self.entries)
 
     def as_table(self) -> Table:

@@ -571,7 +571,12 @@ class ShardedScanExecutor:
         except Exception as e:
             # Last rung of the degradation ladder: a shard failed even
             # after retries (or the merge itself blew up), so fall back to
-            # one unsharded full-decode scan through VectorEngine.
+            # one unsharded full-decode scan through VectorEngine.  A
+            # shard-attributable failure records its id so the health
+            # registry opens the per-shard breaker, not the rung's.
+            if isinstance(e, ShardFailure) \
+                    and e.shard_id not in stats.failed_shards:
+                stats.failed_shards.append(e.shard_id)
             stats.degraded.append(
                 f"sharded->vectorized: {type(e).__name__}: {e}")
             return self._vectorized_fallback(store, q, ts, stats, e), stats
@@ -621,8 +626,15 @@ class ShardedScanExecutor:
             return fn(shard)
 
         def run_retry(shard: BlockShard):
+            # an open per-shard breaker (health.py: ``sharded[<id>]``)
+            # fail-fasts this shard to a single attempt with no backoff —
+            # the shard still runs (its data cannot be skipped), but a
+            # persistently bad shard stops burning the whole retry budget
+            attempts = (1 if self.breaker.get(
+                f"sharded[{shard.shard_id}]") == "skip"
+                else self.max_attempts)
             last: Optional[BaseException] = None
-            for attempt in range(self.max_attempts):
+            for attempt in range(attempts):
                 if deadline is not None and deadline.expired():
                     raise QueryTimeout(deadline.seconds, deadline.elapsed(),
                                        stats=stats)
@@ -632,13 +644,13 @@ class ShardedScanExecutor:
                     raise           # deterministic: a retry cannot help
                 except Exception as e:
                     last = e
-                    if attempt + 1 >= self.max_attempts:
+                    if attempt + 1 >= attempts:
                         break
                     with lock:
                         stats.shard_retries += 1
                     if self.retry_backoff_s:
                         time.sleep(self.retry_backoff_s * (2 ** attempt))
-            raise ShardFailure(shard.shard_id, self.max_attempts, last)
+            raise ShardFailure(shard.shard_id, attempts, last)
 
         def run_hedge(shard: BlockShard):
             # attempt=-1: injected attempt-0 delays/failures must not

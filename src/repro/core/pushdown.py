@@ -70,6 +70,11 @@ from .replica import (collect as _collect_repairs,
 from .relation import ColType, Column, PredOp
 from .skipping import Sketch, Verdict
 
+#: Kernel tiles per deadline-bounded launch chunk: with an active deadline
+#: a long fused scan splits into ``tile * this`` -block launches with a
+#: deadline check between them, so ``deadline_s`` binds inside the scan.
+DEADLINE_CHUNK_TILES = 8
+
 
 @dataclasses.dataclass
 class _FilteredBlock:
@@ -584,14 +589,46 @@ class PushdownExecutor:
         from ..kernels import ops
         if deadline is not None:
             deadline.check(stats)
-        try:
-            fp = faultinject.active()
+        fp = faultinject.active()
+        nblocks = int(block_mask.shape[0])
+        chunk = max(1, tile) * DEADLINE_CHUNK_TILES
+
+        def launch(mask):
             if fp is not None:
                 fp.on_kernel_launch("pushdown")
-            g_cnt, g_sums, g_mins, g_maxs = ops.fused_scan_agg(
+            return ops.fused_scan_agg(
                 stage.deltas, stage.bases, stage.counts, plan.lo, plan.hi,
                 stage.codes, stage.values, ndv=stage.ndv,
-                block_mask=block_mask, coalesce=tile)
+                block_mask=mask, coalesce=tile)
+
+        try:
+            if deadline is not None and nblocks > chunk:
+                # Deadline-bounded chunked launches: split the block range
+                # into tile-multiple chunks and check the deadline between
+                # them, so ``deadline_s`` binds *inside* a long device scan
+                # instead of only before it.  Partials merge exactly like
+                # the per-shard device partials (counts/sums add, mins/maxs
+                # fold — absent groups hold the kernel's ±inf identities);
+                # like the host tree-reduce, the float32 sum association
+                # may differ from one launch by an ulp.
+                merged = None
+                idx = np.arange(nblocks)
+                for s in range(0, nblocks, chunk):
+                    deadline.check(stats)
+                    cmask = block_mask & (idx >= s) & (idx < s + chunk)
+                    if not cmask.any():
+                        continue
+                    stats.device_launch_chunks += 1
+                    part = tuple(np.asarray(p) for p in launch(cmask))
+                    merged = part if merged is None else (
+                        merged[0] + part[0], merged[1] + part[1],
+                        np.minimum(merged[2], part[2]),
+                        np.maximum(merged[3], part[3]))
+                if merged is None:         # every block pruned: one masked
+                    merged = launch(block_mask)   # launch yields the
+                g_cnt, g_sums, g_mins, g_maxs = merged  # identity planes
+            else:
+                g_cnt, g_sums, g_mins, g_maxs = launch(block_mask)
         except (QueryTimeout, BlockCorruption):
             raise
         except Exception as e:
@@ -602,6 +639,7 @@ class PushdownExecutor:
             stats.used_device = False
             stats.blocks_skipped = 0
             stats.blocks_scanned = 0
+            stats.device_launch_chunks = 0
             return None
         g_cnt = np.asarray(g_cnt)
         stats.actual_rows = int(g_cnt.sum())

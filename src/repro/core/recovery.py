@@ -1,0 +1,511 @@
+"""Epoch-consistent snapshots + WAL-tail replay (paper §IV durability;
+PolarDB-IMCI checkpoint/REDO-replay and L-Store lineage recovery are the
+PAPERS.md references).
+
+``snapshot(db, root)`` captures, per table and under the PR-8 store locks,
+a pickled image of the *entire* query-visible state — the encoded columnar
+baseline with its skipping indexes and build-time block CRCs, the row-format
+incremental levels (memtable + minor SSTables), the mlog window, and every
+MAV container with its ``last_refresh_ts`` — plus the WAL seq the image
+covers.  The file lands via temp + ``os.replace`` so a crash mid-snapshot
+leaves the previous snapshot intact; each table's WAL is then compacted
+down to the records the new snapshot does *not* cover.
+
+``recover(root)`` inverts it: restore the snapshot (verifying every
+restored block against its build CRC before trusting it), replay the WAL
+tail through the normal DML path with the per-record epoch stamps
+cross-checked, clamp replayed purge horizons to what the restored views
+still need (so MAV incremental refresh resumes without a spurious full
+refresh), and re-attach fresh logs — truncating torn tails.  Every failure
+mode is a typed :class:`~.errors.RecoveryError`; the contract is
+*committed-prefix or typed failure*, never a silently wrong store.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+from contextlib import ExitStack
+from typing import Any, Dict, List, Optional, Tuple
+
+from . import faultinject
+from .encoding import payload_checksum
+from .errors import RecoveryError
+from .lsm import (ColumnSSTable, LSMStore, MemTable, MinorSSTable,
+                  VirtualSSTable)
+from .mview import MaterializedAggView, MaterializedJoinView
+from .wal import WalRecord, WriteAheadLog, scan_wal
+
+#: Snapshot file name inside the durable root.
+SNAPSHOT_FILE = "snapshot.bin"
+
+#: Per-table WAL directory inside the durable root.
+WAL_DIR = "wal"
+
+#: Snapshot format version — bumped on incompatible layout changes so a
+#: stale snapshot fails typed instead of mis-restoring.
+SNAPSHOT_FORMAT = 1
+
+#: Record kinds whose replay must reproduce the recorded ``(ts, gen)``
+#: epoch exactly (markers like ``purge`` are stamped with the epoch at
+#: append time, which concurrent refreshes make advisory, not asserted).
+_EPOCH_KINDS = frozenset((
+    "create_table", "insert", "update", "delete",
+    "bulk_insert", "bulk_rows", "major_compact"))
+
+
+def wal_path(root: str, table: str) -> str:
+    return os.path.join(root, WAL_DIR, f"{table}.wal")
+
+
+def snapshot_path(root: str) -> str:
+    return os.path.join(root, SNAPSHOT_FILE)
+
+
+# ---------------------------------------------------------------------------
+# Capture side
+# ---------------------------------------------------------------------------
+
+
+def _column_image(cst: ColumnSSTable) -> Dict[str, Any]:
+    """Plain-dict decomposition of one column SSTable.  ``ColumnSSTable``
+    itself carries a per-instance verify lock (unpicklable by design — a
+    restored store must get *fresh* locks), so the snapshot stores fields,
+    not objects."""
+    return {
+        "name": cst.name,
+        "blocks": cst.blocks,
+        "index": cst.index,
+        "block_rows": cst.block_rows,
+        "nrows": cst.nrows,
+        "null_blocks": cst.null_blocks,
+        "checksums": cst.checksums,
+        "quarantined": sorted(cst.quarantined),
+        # replica-copy CRCs, recorded as provenance (restore re-clones
+        # fresh replicas from the verified primaries, it does not trust
+        # possibly-corrupt pre-crash copies)
+        "replica_crcs": (cst.replicas.checksums
+                         if cst.replicas is not None else None),
+    }
+
+
+def _mav_image(mav: MaterializedAggView) -> Dict[str, Any]:
+    return {
+        "defn": mav.defn,
+        "container_mode": mav.container_mode,
+        "refresh_mode": mav.refresh_mode,
+        "has_mlog": mav.mlog is not None,
+        "last_refresh_ts": mav.last_refresh_ts,
+        "groups": mav.groups,
+        "col_container": mav._col_container,
+        "stats": dict(mav.stats),
+    }
+
+
+def _capture_table(h: Any) -> Tuple[bytes, int]:
+    """Pickle one table's full image under its store lock (plus every MAV's
+    read lock, in the executor's mav-then-store order so a concurrent
+    realtime read cannot deadlock against the snapshot).  Returns the
+    pickled image and the WAL seq it covers — the log is flushed first, so
+    every record ≤ seq is both on disk and reflected in the image."""
+    store = h.store
+    with ExitStack() as stack:
+        for mname in sorted(h.mavs):
+            mav = h.mavs[mname]
+            stack.enter_context(
+                mav.__dict__.setdefault("_read_lock", threading.Lock()))
+        stack.enter_context(store._lock)
+        if store.wal is not None:
+            store.wal.flush()
+        seq = store.wal.seq if store.wal is not None else 0
+        base = store.baseline
+        img = {
+            "schema": store.schema,
+            "block_rows": store.block_rows,
+            "memtable_limit": store.memtable_limit,
+            "replication": store.replication,
+            "ts": store._ts,
+            "gen": store._baseline_gen,
+            "baseline": {
+                "version": base.version,
+                "pks": base.pks,
+                "block_rows": base.block_rows,
+                "cols": {n: _column_image(c) for n, c in base.cols.items()},
+            },
+            "memtable": {"rows": store.memtable.rows,
+                         "min_ts": store.memtable.min_ts,
+                         "max_ts": store.memtable.max_ts},
+            "minors": [{"rows": m.rows} for m in store.minors],
+            "mlog": (None if h._mlog is None else
+                     {"entries": h._mlog.entries,
+                      "purged_below": h._mlog.purged_below}),
+            "mavs": {n: _mav_image(m) for n, m in h.mavs.items()},
+        }
+        return pickle.dumps(img, protocol=pickle.HIGHEST_PROTOCOL), seq
+
+
+def snapshot(db: Any, root: Optional[str] = None) -> str:
+    """Write an epoch-consistent image of every attached table to
+    ``<root>/snapshot.bin`` and compact each WAL down to its tail.  Returns
+    the snapshot path.  ``root`` defaults to the database's durable root."""
+    root = root if root is not None else db.durable
+    if root is None:
+        raise ValueError("snapshot target unknown: pass a path or open the "
+                         "Database with durable=<dir>")
+    os.makedirs(os.path.join(root, WAL_DIR), exist_ok=True)
+    tables: Dict[str, bytes] = {}
+    seqs: Dict[str, int] = {}
+    store_names = {}
+    for name in sorted(db._tables):
+        h = db._tables[name]
+        store_names[id(h.store)] = name
+        tables[name], seqs[name] = _capture_table(h)
+    mjvs: List[Dict[str, Any]] = []
+    seen: set = set()
+    for name in sorted(db._tables):
+        for mname in sorted(db._tables[name].mjvs):
+            mjv = db._tables[name].mjvs[mname]
+            if id(mjv) in seen:
+                continue
+            seen.add(id(mjv))
+            mjvs.append({
+                "name": mjv.name,
+                "left": store_names[id(mjv.left)],
+                "right": store_names[id(mjv.right)],
+                "defn": mjv.defn,
+                "container": mjv.container,
+                "last_ts": mjv.last_ts,
+                "stats": dict(mjv.stats),
+            })
+    payload = {
+        "format": SNAPSHOT_FORMAT,
+        "seq": seqs,
+        "tables": tables,
+        "mjvs": pickle.dumps(mjvs, protocol=pickle.HIGHEST_PROTOCOL),
+    }
+    spath = snapshot_path(root)
+    tmp = spath + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+        os.fsync(f.fileno())
+    fp = faultinject.active()
+    if fp is not None:
+        fp.on_snapshot("prepared")     # kill point: image staged, not live
+    os.replace(tmp, spath)
+    # the snapshot is durable — now (and only now) drop the WAL records it
+    # covers; a crash between replace and compact just replays extra
+    # records that restore to the same state
+    for name, seq in seqs.items():
+        wal = db._tables[name].store.wal
+        if wal is not None and seq:
+            wal.compact(seq)
+    return spath
+
+
+# ---------------------------------------------------------------------------
+# Restore side
+# ---------------------------------------------------------------------------
+
+
+def _restore_store(name: str, img: Dict[str, Any]) -> LSMStore:
+    """Rebuild an ``LSMStore`` from its snapshot image with fresh locks,
+    verifying every restored baseline block against its build-time CRC
+    before the store is trusted (quarantined-at-capture blocks stay
+    quarantined instead — their corruption is already typed state)."""
+    store = LSMStore.__new__(LSMStore)
+    store.schema = img["schema"]
+    store.block_rows = img["block_rows"]
+    store.memtable_limit = img["memtable_limit"]
+    store.replication = img["replication"]
+    mt = MemTable(store.schema)
+    mt.rows = img["memtable"]["rows"]
+    mt.min_ts = img["memtable"]["min_ts"]
+    mt.max_ts = img["memtable"]["max_ts"]
+    store.memtable = mt
+    store.minors = [MinorSSTable(store.schema, m["rows"])
+                    for m in img["minors"]]
+    cols: Dict[str, ColumnSSTable] = {}
+    for cname, ci in img["baseline"]["cols"].items():
+        cols[cname] = ColumnSSTable(
+            ci["name"], ci["blocks"], ci["index"], ci["block_rows"],
+            ci["nrows"], null_blocks=ci["null_blocks"],
+            checksums=ci["checksums"], quarantined=set(ci["quarantined"]))
+    store.baseline = VirtualSSTable(
+        img["schema"], img["baseline"]["version"], img["baseline"]["pks"],
+        cols, img["baseline"]["block_rows"])
+    store._ts = img["ts"]
+    store._baseline_gen = img["gen"]
+    store._lock = threading.RLock()
+    store.redo_log = []
+    store.mlog_sinks = []
+    store.wal = None
+    for cname, cst in cols.items():
+        if cst.checksums is None:
+            continue
+        for b, enc in enumerate(cst.blocks):
+            if b in cst.quarantined:
+                continue
+            got = payload_checksum(enc)
+            if got != cst.checksums[b]:
+                raise RecoveryError(
+                    f"restored block failed its build CRC: column {cname!r} "
+                    f"block {b} expected {cst.checksums[b]:#010x}, "
+                    f"got {got:#010x}", table=name)
+    store._refresh_replicas()
+    return store
+
+
+def _restore_mav(name: str, base: LSMStore, mlog: Any,
+                 mi: Dict[str, Any]) -> MaterializedAggView:
+    """Reconstruct a MAV without running ``__init__`` — the constructor
+    full-refreshes (and purges the mlog), which would destroy exactly the
+    restored delta window that lets incremental refresh resume."""
+    mav = MaterializedAggView.__new__(MaterializedAggView)
+    mav.name = name
+    mav.base = base
+    mav.mlog = mlog
+    mav.defn = mi["defn"]
+    mav.container_mode = mi["container_mode"]
+    mav.refresh_mode = mi["refresh_mode"]
+    mav.last_refresh_ts = mi["last_refresh_ts"]
+    mav.groups = mi["groups"]
+    mav._col_container = mi["col_container"]
+    mav.stats = mi["stats"]
+    return mav
+
+
+def _restore_mjv(db: Any, mj: Dict[str, Any]) -> None:
+    lh, rh = db.table(mj["left"]), db.table(mj["right"])
+    mjv = MaterializedJoinView.__new__(MaterializedJoinView)
+    mjv.name = mj["name"]
+    mjv.left, mjv.right = lh.store, rh.store
+    mjv.llog, mjv.rlog = lh.mlog(), rh.mlog()
+    mjv.defn = mj["defn"]
+    mjv.container = mj["container"]
+    mjv.last_ts = mj["last_ts"]
+    mjv.stats = mj["stats"]
+    lh.mjvs[mjv.name] = mjv
+    rh.mjvs[mjv.name] = mjv
+
+
+# ---------------------------------------------------------------------------
+# Replay side
+# ---------------------------------------------------------------------------
+
+
+def _check_epoch(store: LSMStore, table: str, rec: WalRecord) -> None:
+    if store.epoch != (rec.ts, rec.gen):
+        raise RecoveryError(
+            f"replay divergence on {rec.kind!r}: store epoch "
+            f"{store.epoch} != recorded ({rec.ts}, {rec.gen})",
+            table=table, seq=rec.seq)
+
+
+def _guarded_purge(h: Any, ts: int) -> None:
+    """Replay one purge marker, clamped to the oldest delta any restored
+    view still needs — the original purge was issued by a refresh that is
+    not itself replayed, so applying it verbatim could strand a
+    snapshot-restored MAV below the horizon (forcing the spurious full
+    refresh the durability contract rules out)."""
+    horizon = ts
+    for mav in h.mavs.values():
+        if mav.mlog is not None:
+            horizon = min(horizon, mav.last_refresh_ts)
+    for mjv in h.mjvs.values():
+        side = 0 if mjv.left is h.store else 1
+        horizon = min(horizon, mjv.last_ts[side])
+    h.mlog().purge_upto(horizon)
+
+
+def _apply_record(db: Any, table: str, rec: WalRecord,
+                  deferred_mjvs: List[Dict[str, Any]]) -> None:
+    """Replay one WAL record through the normal DML/DDL path (the store's
+    ``wal`` is detached during replay, so nothing re-logs itself) and
+    cross-check the produced epoch against the record's stamp."""
+    data = rec.data
+    try:
+        if rec.kind == "create_table":
+            if data.get("seeded"):
+                raise RecoveryError(
+                    "table was attached with pre-existing contents the WAL "
+                    "does not contain and no snapshot covers — snapshot the "
+                    "database after attaching seeded stores",
+                    table=table, seq=rec.seq)
+            if table in db._tables:
+                raise RecoveryError("duplicate create_table record",
+                                    table=table, seq=rec.seq)
+            h = db.create_table(
+                table, data["schema"], block_rows=data["block_rows"],
+                memtable_limit=data["memtable_limit"],
+                replication=data["replication"])
+            _check_epoch(h.store, table, rec)
+            return
+        if table not in db._tables:
+            raise RecoveryError(
+                f"{rec.kind!r} record precedes the table's creation and no "
+                f"snapshot covers it", table=table, seq=rec.seq)
+        h = db._tables[table]
+        store = h.store
+        if rec.kind == "insert":
+            store.insert(data["row"])
+        elif rec.kind == "update":
+            store.update(data["pk"], data["row"])
+        elif rec.kind == "delete":
+            store.delete(data["pk"])
+        elif rec.kind == "bulk_insert":
+            store.bulk_insert(data["columns"])
+        elif rec.kind == "bulk_rows":
+            store.bulk_insert_rows(data["columns"])
+        elif rec.kind == "major_compact":
+            store.major_compact(version=data["version"])
+        elif rec.kind == "create_mav":
+            db.create_mav(data["name"], data["defn"], table=table,
+                          container_mode=data["container_mode"],
+                          refresh_mode=data["refresh_mode"])
+        elif rec.kind == "create_mjv":
+            deferred_mjvs.append(dict(data))
+        elif rec.kind == "purge":
+            _guarded_purge(h, data["ts"])
+        else:
+            raise RecoveryError(f"unknown WAL record kind {rec.kind!r}",
+                                table=table, seq=rec.seq)
+        if rec.kind in _EPOCH_KINDS:
+            _check_epoch(store, table, rec)
+    except (RecoveryError, faultinject.SimulatedCrash):
+        raise
+    except Exception as e:
+        raise RecoveryError(
+            f"replay of {rec.kind!r} failed: {type(e).__name__}: {e}",
+            table=table, seq=rec.seq)
+
+
+def _replay_create_mjv(db: Any, data: Dict[str, Any]) -> None:
+    """Replay a deferred MJV registration.  The constructor full-refreshes
+    at the *post-replay* timestamps — correct for the container, but its
+    purge would trim delta windows restored MAVs may still need, so the
+    mlog state is preserved around it (subsequent guarded purge markers
+    already applied the real horizons)."""
+    try:
+        lh, rh = db.table(data["left"]), db.table(data["right"])
+        saves = []
+        for h in (lh, rh):
+            ml = h.mlog()
+            saves.append((ml, list(ml.entries), ml.purged_below))
+        db.create_mjv(data["name"], data["defn"], data["left"], data["right"])
+        for ml, entries, purged in saves:
+            ml.entries = entries
+            ml.purged_below = purged
+    except RecoveryError:
+        raise
+    except Exception as e:
+        raise RecoveryError(
+            f"replay of 'create_mjv' ({data.get('name')!r}) failed: "
+            f"{type(e).__name__}: {e}")
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def recover(root: str, group_commit: int = 1, **db_kwargs: Any) -> Any:
+    """Restore a ``Database`` from ``root``: snapshot first (if present),
+    then per-table WAL-tail replay, then fresh logs re-attached (torn tails
+    truncated).  Raises :class:`RecoveryError` whenever a provably
+    consistent store cannot be produced.  Extra kwargs go to the
+    ``Database`` constructor (``mv_stale_rows``, ``health``, ...)."""
+    from .session import Database      # session imports recovery lazily too
+    fp = faultinject.active()
+    snap: Optional[Dict[str, Any]] = None
+    spath = snapshot_path(root)
+    if os.path.exists(spath):
+        try:
+            with open(spath, "rb") as f:
+                snap = pickle.load(f)
+            if not isinstance(snap, dict) \
+                    or snap.get("format") != SNAPSHOT_FORMAT:
+                raise RecoveryError(
+                    f"snapshot format {snap.get('format') if isinstance(snap, dict) else '?'} "
+                    f"!= supported {SNAPSHOT_FORMAT}")
+        except RecoveryError:
+            raise
+        except Exception as e:
+            raise RecoveryError(
+                f"snapshot unreadable: {type(e).__name__}: {e}")
+    logs: Dict[str, Tuple[List[WalRecord], bool]] = {}
+    wdir = os.path.join(root, WAL_DIR)
+    if os.path.isdir(wdir):
+        for fn in sorted(os.listdir(wdir)):
+            if not fn.endswith(".wal"):
+                continue
+            t = fn[:-len(".wal")]
+            try:
+                records, torn, _ = scan_wal(os.path.join(wdir, fn))
+            except RecoveryError as e:
+                raise RecoveryError(e.reason, table=t)
+            logs[t] = (records, torn)
+    db = Database(**db_kwargs)
+    info: Dict[str, Any] = {"snapshot": snap is not None, "replayed": 0,
+                            "torn_tables": [], "tables": {}}
+    if snap is not None:
+        for name in sorted(snap["tables"]):
+            try:
+                img = pickle.loads(snap["tables"][name])
+            except Exception as e:
+                raise RecoveryError(
+                    f"snapshot image undecodable: {type(e).__name__}: {e}",
+                    table=name)
+            h = db.attach(name, _restore_store(name, img))
+            if img["mlog"] is not None:
+                ml = h.mlog()
+                ml.entries = img["mlog"]["entries"]
+                ml.purged_below = img["mlog"]["purged_below"]
+            for mname in sorted(img["mavs"]):
+                mi = img["mavs"][mname]
+                h.mavs[mname] = _restore_mav(
+                    mname, h.store, h._mlog if mi["has_mlog"] else None, mi)
+        for mj in pickle.loads(snap["mjvs"]):
+            _restore_mjv(db, mj)
+    deferred_mjvs: List[Dict[str, Any]] = []
+    for t in sorted(logs):
+        records, torn = logs[t]
+        snap_seq = snap["seq"].get(t, 0) if snap is not None else 0
+        n = 0
+        for rec in records:
+            if rec.seq <= snap_seq:
+                continue
+            if fp is not None:
+                fp.on_replay(t, rec.seq)
+            _apply_record(db, t, rec, deferred_mjvs)
+            n += 1
+        if torn:
+            info["torn_tables"].append(t)
+        info["replayed"] += n
+        info["tables"][t] = {"replayed": n, "torn": torn,
+                             "snapshot_seq": snap_seq}
+        if t not in db._tables:
+            raise RecoveryError(
+                "WAL exists but neither a snapshot nor a create_table "
+                "record covers the table", table=t)
+    for data in deferred_mjvs:
+        _replay_create_mjv(db, data)
+    # re-attach fresh logs: truncate torn tails, continue the seq numbering
+    os.makedirs(wdir, exist_ok=True)
+    db.durable = root
+    db.group_commit = max(1, int(group_commit))
+    for name in sorted(db._tables):
+        wal, _, _ = WriteAheadLog.open_for_append(
+            wal_path(root, name), db.group_commit, table=name)
+        db._tables[name].store.wal = wal
+    db._recovery = info
+    if db.health is not None:
+        for name in sorted(db._tables):
+            ti = info["tables"].get(
+                name, {"replayed": 0, "torn": False, "snapshot_seq": 0})
+            db.health.note(
+                name,
+                f"recovered: snapshot={'yes' if snap is not None else 'no'}, "
+                f"replayed={ti['replayed']} wal record(s)"
+                + (", torn tail truncated" if ti["torn"] else ""))
+    return db

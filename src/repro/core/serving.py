@@ -143,7 +143,8 @@ class QueryServer:
                  plan_cache_size: int = 256,
                  result_cache_size: int = 512,
                  scrub_every: int = 64,
-                 idle_scrub_s: float = 0.05):
+                 idle_scrub_s: float = 0.05,
+                 snapshot_every_scrubs: int = 0):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.db = db
@@ -152,6 +153,12 @@ class QueryServer:
         self.window_s = window_s
         self.scrub_every = scrub_every
         self.idle_scrub_s = idle_scrub_s
+        # durability checkpointing (core/recovery.py): on a durable db,
+        # every Nth *idle* scrub also takes a snapshot — the same
+        # idle-gap slot the scrubs use, so checkpoints never contend with
+        # admitted queries.  0 disables scheduled snapshots.
+        self.snapshot_every_scrubs = snapshot_every_scrubs
+        self._scrubs_since_snapshot = 0
         # fan-out budget per query so N workers' shard pools don't multiply
         fanout = db.max_workers or os.cpu_count() or 1
         self._per_query_workers = max(1, fanout // workers)
@@ -175,7 +182,7 @@ class QueryServer:
         self.metrics: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "executed": 0, "completed": 0,
             "plan_cache_hits": 0, "cache_hits": 0, "coalesced": 0,
-            "deferred_quota": 0, "scrubs": 0, "errors": 0,
+            "deferred_quota": 0, "scrubs": 0, "snapshots": 0, "errors": 0,
         }
         self._pool = ThreadPoolExecutor(
             max_workers=workers, thread_name_prefix="qsrv-worker")
@@ -238,6 +245,9 @@ class QueryServer:
                 idle = (not self._heap and not self._batch_waiting
                         and not self._deferred and not self._inflight)
             if idle:
+                # drained implies durable: push the group-commit tail out
+                # so every acknowledged write is on disk
+                self.db.flush_wal()
                 return
             if time.monotonic() > deadline:
                 raise TimeoutError("QueryServer.drain timed out")
@@ -259,6 +269,7 @@ class QueryServer:
             self._deferred.clear()
         for t in pending:
             t._resolve(None, RuntimeError("QueryServer closed"))
+        self.db.flush_wal()
 
     def __enter__(self) -> "QueryServer":
         return self
@@ -468,6 +479,26 @@ class QueryServer:
             if self.db.health is not None:
                 for ev in events:
                     self.db.health.note(name, f"scrub({why}): {ev}")
+        if why == "idle" and self.snapshot_every_scrubs \
+                and self.db.durable is not None:
+            self._scrubs_since_snapshot += 1
+            if self._scrubs_since_snapshot >= self.snapshot_every_scrubs:
+                self._scrubs_since_snapshot = 0
+                try:
+                    self.db.snapshot()
+                    self.metrics["snapshots"] += 1
+                    if self.db.health is not None:
+                        for name in self.db.tables:
+                            self.db.health.note(
+                                name, "snapshot(idle): checkpointed, "
+                                      "wal compacted")
+                except Exception as e:   # noqa: BLE001 — scheduler thread
+                    self.metrics["errors"] += 1
+                    if self.db.health is not None:
+                        for name in self.db.tables:
+                            self.db.health.note(
+                                name, f"snapshot(idle) failed: "
+                                      f"{type(e).__name__}: {e}")
 
     def __repr__(self) -> str:
         return (f"QueryServer(workers={self.workers}, "

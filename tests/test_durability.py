@@ -1,0 +1,432 @@
+"""Durability & crash recovery: write-ahead log, epoch-consistent
+snapshots, and the kill-point crash matrix.
+
+The contract under test (core/wal.py + core/recovery.py): a durable
+``Database`` killed at any deterministic kill point and then restored via
+``Database.recover`` either
+
+* answers queries bit-identically to a clean session that executed exactly
+  the committed prefix of the statement sequence (a statement is committed
+  once its WAL record is on disk), or
+* raises a typed :class:`RecoveryError` naming what was lost —
+
+never a silently wrong or silently partial answer.  Every crash is driven
+by a deterministic :class:`FaultPlan` kill point (append ordinals, replay
+ordinals, snapshot stages — never wall clock), so the matrix replays
+identically run to run.
+"""
+import glob
+import os
+
+import pytest
+
+from repro.core import faultinject
+from repro.core.engine import QAgg, Query
+from repro.core.errors import QueryError, RecoveryError
+from repro.core.faultinject import (FaultPlan, SimulatedCrash,
+                                    corrupt_wal_record, inject,
+                                    truncate_wal_tail)
+from repro.core.lsm import LSMStore
+from repro.core.mview import AggSpec, MAVDefinition, MJVDefinition
+from repro.core.recovery import snapshot_path, wal_path
+from repro.core.relation import ColType, Predicate, PredOp, schema
+from repro.core.session import Database
+from repro.core.wal import scan_wal
+
+SCH = schema(("k", ColType.INT), ("g", ColType.INT), ("d", ColType.INT),
+             ("v", ColType.FLOAT))
+
+GROUPED_Q = Query(preds=(Predicate("d", PredOp.BETWEEN, 10, 300),),
+                  group_by=("g",),
+                  aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv")))
+FLAT_Q = Query(group_by=(), aggs=(QAgg("count", None, "n"),
+                                  QAgg("sum", "v", "sv"),
+                                  QAgg("min", "d", "md"),
+                                  QAgg("max", "d", "xd")))
+
+
+def row(i):
+    return {"k": i, "g": i % 5, "d": (i * 37) % 365, "v": float(i) * 0.5}
+
+
+def ops_script(n=40):
+    """A deterministic DML script: inserts with periodic updates/deletes
+    and one mid-script compaction."""
+    ops = []
+    for i in range(n):
+        ops.append(("insert", row(i)))
+        if i and i % 11 == 0:
+            ops.append(("update", i - 1, {"v": -1.0}))
+        if i and i % 17 == 0:
+            ops.append(("delete", i - 2))
+        if i == n // 2:
+            ops.append(("compact",))
+    return ops
+
+
+def apply_op(h, op):
+    if op[0] == "insert":
+        h.insert(dict(op[1]))
+    elif op[0] == "update":
+        h.update(op[1], op[2])
+    elif op[0] == "delete":
+        h.delete(op[1])
+    elif op[0] == "compact":
+        h.major_compact()
+    else:                                           # pragma: no cover
+        raise AssertionError(op)
+
+
+def reference_answers(ops):
+    """Clean in-memory session that executed exactly ``ops``."""
+    db = Database()
+    h = db.create_table("t", SCH, block_rows=16, memtable_limit=32)
+    for op in ops:
+        apply_op(h, op)
+    return answers(db)
+
+
+def answers(db, table="t"):
+    return (norm(db.query(GROUPED_Q, table=table).rows),
+            norm(db.query(FLAT_Q, table=table).rows))
+
+
+def norm(rows):
+    return sorted(
+        tuple(sorted((k, round(v, 9) if isinstance(v, float) else v)
+                     for k, v in r.items())) for r in rows)
+
+
+def durable_db(root, **kw):
+    db = Database(durable=str(root), **kw)
+    db.create_table("t", SCH, block_rows=16, memtable_limit=32)
+    return db
+
+
+# ---------------------------------------------------------------------------
+# clean round trips
+# ---------------------------------------------------------------------------
+
+
+def test_wal_only_round_trip(tmp_path):
+    ops = ops_script(40)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops:
+        apply_op(h, op)
+    ref = answers(db)
+    epoch = h.store.epoch
+
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == ref == reference_answers(ops)
+    assert rdb.table("t").store.epoch == epoch      # epoch continuity
+    info = rdb._recovery
+    assert info["snapshot"] is False and info["replayed"] > 0
+    assert any(l.startswith("recovery: restored from wal")
+               for l in rdb.health_report("t"))
+
+    # the restored session keeps logging: DML + a second recover round-trip
+    rh = rdb.table("t")
+    apply_op(rh, ("insert", row(1000)))
+    ref2 = answers(rdb)
+    r2 = Database.recover(str(tmp_path))
+    assert answers(r2) == ref2
+
+
+def test_snapshot_plus_tail_round_trip(tmp_path):
+    ops = ops_script(40)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops[:30]:
+        apply_op(h, op)
+    wal_before = os.path.getsize(wal_path(str(tmp_path), "t"))
+    path = db.snapshot()
+    assert path == snapshot_path(str(tmp_path))
+    assert os.path.exists(path)
+    # snapshot checkpointed the log: records at/below the snapshot seq drop
+    assert os.path.getsize(wal_path(str(tmp_path), "t")) < wal_before
+    for op in ops[30:]:
+        apply_op(h, op)
+    ref = answers(db)
+
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == ref == reference_answers(ops)
+    assert rdb._recovery["snapshot"] is True
+    assert any(l.startswith("recovery: restored from snapshot+wal")
+               for l in rdb.health_report("t"))
+
+
+def test_reopen_durable_root_refused(tmp_path):
+    db = durable_db(tmp_path)
+    apply_op(db.table("t"), ("insert", row(0)))
+    with pytest.raises(ValueError, match="use Database.recover"):
+        Database(durable=str(tmp_path))
+    # RecoveryError is a QueryError: one except arm covers the taxonomy
+    assert issubclass(RecoveryError, QueryError)
+
+
+# ---------------------------------------------------------------------------
+# kill-point crash matrix
+# ---------------------------------------------------------------------------
+
+
+def crash_at_append(tmp_path, phase, at):
+    """Run the script under a crash-at-append kill point; returns the ops
+    that were *submitted* before the crashing statement."""
+    ops = ops_script(40)
+    db = durable_db(tmp_path)          # create_table record precedes plan
+    h = db.table("t")
+    done = []
+    plan = FaultPlan(crash_wal_append=phase, crash_wal_append_at=at)
+    with inject(plan):
+        with pytest.raises(SimulatedCrash):
+            for op in ops:
+                apply_op(h, op)
+                done.append(op)
+    assert any("WAL append" in e for e in plan.events)
+    return done
+
+
+def test_crash_before_wal_append(tmp_path):
+    # the crashing statement never reached the log: it was never
+    # acknowledged, so recovery must exclude it
+    done = crash_at_append(tmp_path, "before", at=7)
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == reference_answers(done)
+    recs, torn, _ = scan_wal(wal_path(str(tmp_path), "t"))
+    assert not torn and len(recs) == 1 + len(done)  # create_table + DML
+
+
+def test_crash_after_wal_append(tmp_path):
+    # the record hit the disk before the crash: the statement is durable
+    # and recovery must include it
+    done = crash_at_append(tmp_path, "after", at=7)
+    committed = done + [ops_script(40)[len(done)]]
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == reference_answers(committed)
+
+
+def test_crash_mid_snapshot_previous_survives(tmp_path):
+    ops = ops_script(40)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops[:20]:
+        apply_op(h, op)
+    db.snapshot()                                  # good checkpoint
+    for op in ops[20:]:
+        apply_op(h, op)
+    ref = answers(db)
+
+    with inject(FaultPlan(crash_snapshot=True)):
+        with pytest.raises(SimulatedCrash):
+            db.snapshot()
+    # the crash hit between temp-write and atomic rename: the previous
+    # snapshot is intact and the WAL was not compacted, so recovery sees
+    # the old checkpoint plus the full tail
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == ref == reference_answers(ops)
+
+
+def test_crash_mid_first_snapshot_falls_back_to_wal(tmp_path):
+    ops = ops_script(30)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops:
+        apply_op(h, op)
+    with inject(FaultPlan(crash_snapshot=True)):
+        with pytest.raises(SimulatedCrash):
+            db.snapshot()
+    assert not os.path.exists(snapshot_path(str(tmp_path)))
+    rdb = Database.recover(str(tmp_path))
+    assert rdb._recovery["snapshot"] is False
+    assert answers(rdb) == reference_answers(ops)
+
+
+def test_crash_mid_replay_then_reconverge(tmp_path):
+    ops = ops_script(40)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops:
+        apply_op(h, op)
+    ref = answers(db)
+
+    plan = FaultPlan(crash_replay_at=9)
+    with inject(plan):
+        with pytest.raises(SimulatedCrash):
+            Database.recover(str(tmp_path))
+    assert any("mid-replay" in e for e in plan.events)
+    # replay never writes to the log until it finishes, so a crash during
+    # recovery is itself recoverable: the second attempt replays the same
+    # prefix and converges on the same answer
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == ref
+
+
+def test_torn_tail_truncated_to_committed_prefix(tmp_path):
+    ops = ops_script(30)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops:
+        apply_op(h, op)
+
+    path = wal_path(str(tmp_path), "t")
+    whole = os.path.getsize(path)
+    assert truncate_wal_tail(path, nbytes=7) == whole - 7
+    recs, torn, _ = scan_wal(path)
+    assert torn and len(recs) == len(ops)           # create_table + ops - 1
+
+    rdb = Database.recover(str(tmp_path))
+    assert rdb._recovery["torn_tables"] == ["t"]
+    assert any("torn tail truncated" in l for l in rdb.health_report("t"))
+    assert answers(rdb) == reference_answers(ops[:-1])
+
+    # the torn frame was truncated on reopen: appends resume cleanly and a
+    # second recovery round-trips
+    rh = rdb.table("t")
+    apply_op(rh, ("insert", row(2000)))
+    ref2 = answers(rdb)
+    r2 = Database.recover(str(tmp_path))
+    assert not r2._recovery["torn_tables"]
+    assert answers(r2) == ref2
+
+
+def test_corrupt_wal_record_is_typed_failure(tmp_path):
+    ops = ops_script(20)
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops:
+        apply_op(h, op)
+    corrupt_wal_record(wal_path(str(tmp_path), "t"), record=3)
+    with pytest.raises(RecoveryError) as ei:
+        Database.recover(str(tmp_path))
+    assert ei.value.table == "t"
+    assert "checksum" in str(ei.value)
+
+
+def test_corrupt_snapshot_is_typed_failure(tmp_path):
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for op in ops_script(20):
+        apply_op(h, op)
+    db.snapshot()
+    path = snapshot_path(str(tmp_path))
+    with open(path, "r+b") as f:
+        f.seek(max(0, os.path.getsize(path) // 2))
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(RecoveryError):
+        Database.recover(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# group commit
+# ---------------------------------------------------------------------------
+
+
+def test_group_commit_loses_at_most_unflushed_batch(tmp_path):
+    db = durable_db(tmp_path, group_commit=4)
+    h = db.table("t")
+    for i in range(10):
+        apply_op(h, ("insert", row(i)))
+    # abandon the session without flushing: the unflushed group-commit
+    # batch is lost, the flushed prefix is the committed prefix
+    recs, torn, _ = scan_wal(wal_path(str(tmp_path), "t"))
+    assert not torn and 0 < len(recs) - 1 < 10
+    rdb = Database.recover(str(tmp_path))
+    committed = [("insert", row(i)) for i in range(len(recs) - 1)]
+    assert answers(rdb) == reference_answers(committed)
+
+
+def test_flush_wal_makes_batch_durable(tmp_path):
+    db = durable_db(tmp_path, group_commit=8)
+    h = db.table("t")
+    for i in range(5):
+        apply_op(h, ("insert", row(i)))
+    assert h.store.wal.pending() > 0
+    db.flush_wal()
+    assert h.store.wal.pending() == 0
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == reference_answers(
+        [("insert", row(i)) for i in range(5)])
+
+
+# ---------------------------------------------------------------------------
+# materialized views across recovery
+# ---------------------------------------------------------------------------
+
+
+def test_mav_incremental_refresh_resumes(tmp_path):
+    db = durable_db(tmp_path)
+    h = db.table("t")
+    for i in range(60):
+        apply_op(h, ("insert", row(i)))
+    h.major_compact()
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),
+                               AggSpec("count_star", None, "n"))))
+    for i in range(60, 90):
+        apply_op(h, ("insert", row(i)))
+    db.snapshot()
+    for i in range(90, 110):
+        apply_op(h, ("insert", row(i)))
+    ref = answers(db)
+
+    rdb = Database.recover(str(tmp_path))
+    assert answers(rdb) == ref
+    mav = rdb.table("t").mavs["mv_g"]
+    before = dict(mav.stats)
+    mav.incremental_refresh()
+    # the mlog delta window survived the crash: the refresh is incremental,
+    # not a spurious full rebuild
+    assert mav.stats["full_refreshes"] == before["full_refreshes"]
+    assert mav.stats["purge_full_refreshes"] == before["purge_full_refreshes"]
+    assert mav.stats["incr_refreshes"] == before["incr_refreshes"] + 1
+    assert norm(mav.query().rows()) == norm(
+        rdb.query(Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),
+                                               QAgg("count", None, "n"))),
+                  table="t").rows)
+
+
+def test_mjv_recovers_and_resumes(tmp_path):
+    rsch = schema(("rk", ColType.INT), ("label", ColType.STR))
+    db = Database(durable=str(tmp_path))
+    lh = db.create_table("t", SCH, block_rows=16, memtable_limit=32)
+    rh = db.create_table("r", rsch, block_rows=16, memtable_limit=32)
+    for i in range(5):
+        rh.insert({"rk": i, "label": f"g{i}"})
+    for i in range(40):
+        apply_op(lh, ("insert", row(i)))
+    mjv = db.create_mjv("j", MJVDefinition(lkey="g", rkey="rk",
+                                           rcols=("label",)), "t", "r")
+    for i in range(40, 60):
+        apply_op(lh, ("insert", row(i)))
+    mjv.incremental_refresh()
+    ref_rows = norm(mjv.rows())
+
+    rdb = Database.recover(str(tmp_path))
+    rmjv = rdb.table("t").mjvs["j"]
+    assert rmjv is rdb.table("r").mjvs["j"]
+    rmjv.incremental_refresh()
+    assert norm(rmjv.rows()) == ref_rows
+    # and it keeps tracking both sides after recovery
+    rdb.table("t").insert(row(100))
+    rmjv.incremental_refresh()
+    assert len(rmjv.rows()) == len(ref_rows) + 1
+
+
+def test_seeded_attach_requires_snapshot(tmp_path):
+    store = LSMStore(SCH, block_rows=16, memtable_limit=32)
+    for i in range(20):
+        store.insert(row(i))
+    db = Database(durable=str(tmp_path))
+    db.attach("pre", store)                        # seeded create_table
+    store.insert(row(20))
+    # no snapshot covers the seeded rows: replay must refuse rather than
+    # rebuild a silently partial table
+    with pytest.raises(RecoveryError, match="seeded"):
+        Database.recover(str(tmp_path))
+    # a snapshot makes the seeded store recoverable
+    db.snapshot()
+    store.insert(row(21))
+    rdb = Database.recover(str(tmp_path))
+    got = rdb.query(FLAT_Q, table="pre").rows
+    assert got and got[0]["n"] == 22               # 20 seeded + 2 logged

@@ -418,12 +418,14 @@ def test_degradation_recorded_in_resultset_provenance():
     assert any(d.startswith("sharded->vectorized") for d in rs.plan.degraded)
     assert "degraded" in repr(rs)
     assert "degraded=[" in rs.plan.describe()
-    # the failure opened the sharded breaker: the next query pre-degrades
-    # and says so in provenance (note grammar, not a "from->to" failure)
+    # the failure opened *shard 1's* breaker (PR 9: per-(rung, shard), so
+    # one bad shard does not condemn the whole fan-out): the next query
+    # keeps the sharded route and fail-fasts only the suspect shard,
+    # saying so in provenance (note grammar, not a "from->to" failure)
     rs2 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
     assert rs2.plan.degraded == [
-        "breaker(sharded) open: pre-degraded sharded->pushdown"]
-    assert rs2.plan.route == "pushdown"
+        "breaker(sharded[1]) open: shard fail-fast (single attempt)"]
+    assert rs2.plan.route == "sharded"
     assert norm(rs2.rows) == norm(rs.rows)
     # with health tracking off the session is stateless: clean runs silent
     db2 = Database(make_store(np.random.default_rng(81)), max_workers=4,
@@ -626,71 +628,97 @@ def test_breaker_unit_lifecycle():
 
 
 def test_breaker_open_pre_degrades_and_half_open_probe_restores():
+    """Escalation lifecycle (PR 9): q1's shard failure opens only the
+    shard breaker; q2's fail-fast attempt failing again proves the rung
+    sick and opens the rung breaker; then the classic open → pre-degrade
+    → half-open probe → closed choreography plays out."""
     rng = np.random.default_rng(98)
     db = Database(make_store(rng), max_workers=4)
-    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
+    with inject(FaultPlan(fail_shard={1: 999})):
         r1 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
-    assert any(d.startswith("sharded->vectorized") for d in r1.plan.degraded)
+        assert any(d.startswith("sharded->vectorized")
+                   for d in r1.plan.degraded)
+        assert any("breaker(sharded[1]): state=open" in l
+                   for l in db.health_report())
+        assert not any("breaker(sharded):" in l for l in db.health_report())
+        # q2: the suspected shard fail-fasts (1 attempt), fails again →
+        # the rung breaker opens too (the fan-out keeps collapsing)
+        r2 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+        assert r2.plan.degraded == [
+            "breaker(sharded[1]) open: shard fail-fast (single attempt)",
+            "sharded->vectorized: ShardFailure: shard 1 failed after "
+            "1 attempt(s): RuntimeError('injected fault: shard 1 "
+            "attempt 0')"]
     assert any("breaker(sharded): state=open" in l
                for l in db.health_report())
-    # q2: breaker open (cool-down consult 1 of 2) → fan-out pre-degraded
-    # without being attempted, even though the fault is gone
-    r2 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
-    assert r2.plan.route == "pushdown"
-    assert r2.plan.degraded == [
-        "breaker(sharded) open: pre-degraded sharded->pushdown"]
-    assert r2.stats.n_shards == 0             # the rung was never touched
-    # q3: consult 2 expires the cool-down → half-open, this query probes
+    # q3: rung breaker open (cool-down consult 1 of 2) → fan-out
+    # pre-degraded without being attempted, even though the fault is gone
     r3 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
-    assert r3.plan.route == "sharded"
+    assert r3.plan.route == "pushdown"
     assert r3.plan.degraded == [
-        "breaker(sharded) half-open: attempting sharded fan-out"]
-    # probe succeeded: breaker closed, q4 runs clean and silent
+        "breaker(sharded) open: pre-degraded sharded->pushdown"]
+    assert r3.stats.n_shards == 0             # the rung was never touched
+    # q4: consult 2 expires the cool-down → half-open, this query probes
+    # (the shard breaker reached half-open on the same consult ticks)
     r4 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
-    assert r4.plan.degraded == []
+    assert r4.plan.route == "sharded"
+    assert r4.plan.degraded == [
+        "breaker(sharded) half-open: attempting sharded fan-out",
+        "breaker(sharded[1]) half-open: probing shard"]
+    # probe succeeded: both breakers closed, q5 runs clean and silent
+    r5 = db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    assert r5.plan.degraded == []
     assert any("breaker(sharded): state=closed" in l
                for l in db.health_report())
-    assert all(norm(r.rows) == norm(r1.rows) for r in (r2, r3, r4))
+    assert any("breaker(sharded[1]): state=closed" in l
+               for l in db.health_report())
+    assert all(norm(r.rows) == norm(r1.rows) for r in (r2, r3, r4, r5))
 
 
 def test_failed_probe_reopens_breaker():
     rng = np.random.default_rng(99)
     db = Database(make_store(rng), max_workers=4)
-    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
-        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # opens
+    with inject(FaultPlan(fail_shard={1: 999})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # shard opens
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # rung escalates
         db.query(GROUPED_Q, engine="sharded", n_shards=4)   # open: skip
-        r3 = db.query(GROUPED_Q, engine="sharded", n_shards=4)  # probe fails
-    assert any(d.startswith("sharded->vectorized") for d in r3.plan.degraded)
+        r4 = db.query(GROUPED_Q, engine="sharded", n_shards=4)  # probe fails
+    assert any(d.startswith("sharded->vectorized") for d in r4.plan.degraded)
     rep = " ".join(db.health_report())
-    assert "state=open" in rep and "opened_total=2" in rep
-    r4 = db.query(GROUPED_Q, engine="sharded", n_shards=4)  # cooling again
-    assert r4.plan.degraded == [
+    assert "breaker(sharded): state=open" in rep and "opened_total=2" in rep
+    r5 = db.query(GROUPED_Q, engine="sharded", n_shards=4)  # cooling again
+    assert r5.plan.degraded == [
         "breaker(sharded) open: pre-degraded sharded->pushdown"]
 
 
 def test_inconclusive_probe_leaves_breaker_half_open():
     rng = np.random.default_rng(102)
     db = Database(make_store(rng), max_workers=4)
-    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
-        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # opens
+    with inject(FaultPlan(fail_shard={1: 999})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # shard opens
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # rung escalates
     db.query(GROUPED_Q, engine="sharded", n_shards=4)       # open: skip
     # the cool-down expires on a query that can't exercise the rung: the
     # probe is inconclusive and the breaker stays half-open
     rp = db.query(GROUPED_Q, engine="pushdown")
     assert rp.plan.degraded == []
-    assert any("state=half-open" in l for l in db.health_report())
+    assert any("breaker(sharded): state=half-open" in l
+               for l in db.health_report())
     # the next sharded query is still the probe; its success closes it
     rs = db.query(GROUPED_Q, engine="sharded", n_shards=4)
     assert rs.plan.degraded == [
-        "breaker(sharded) half-open: attempting sharded fan-out"]
-    assert any("state=closed" in l for l in db.health_report())
+        "breaker(sharded) half-open: attempting sharded fan-out",
+        "breaker(sharded[1]) half-open: probing shard"]
+    assert any("breaker(sharded): state=closed" in l
+               for l in db.health_report())
 
 
 def test_explain_reports_breaker_without_advancing():
     rng = np.random.default_rng(103)
     db = Database(make_store(rng), max_workers=4)
-    with inject(FaultPlan(fail_shard={i: 99 for i in range(4)})):
-        db.query(GROUPED_Q, engine="sharded", n_shards=4)
+    with inject(FaultPlan(fail_shard={1: 999})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # shard opens
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # rung escalates
     for _ in range(5):                        # explain never ticks cool-down
         p = db.explain(GROUPED_Q, engine="sharded", n_shards=4)
         assert p.route == "pushdown"

@@ -78,8 +78,9 @@ def test_compile_returns_immutable_hashable_artifact():
 
 def test_compile_consumes_no_breaker_cooldown_ticks():
     db = make_db(np.random.default_rng(2))
-    with inject(FaultPlan(fail_shard={0: 99, 1: 99, 2: 99, 3: 99})):
-        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # opens breaker
+    with inject(FaultPlan(fail_shard={1: 999})):
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # shard opens
+        db.query(GROUPED_Q, engine="sharded", n_shards=4)   # rung escalates
     br = db.health.breaker("main", "sharded")
     assert br.state == "open"
     ticks0 = br.open_consults
@@ -303,8 +304,11 @@ def test_breaker_opens_consistently_from_two_threads():
     errors = []
 
     def worker():
+        # both threads lose the same shard: the first failure opens its
+        # shard breaker, the second escalates to the rung breaker —
+        # whichever thread observes first (registry lock serializes them)
         start.wait(timeout=30)
-        with inject(FaultPlan(fail_shard={0: 99, 1: 99, 2: 99, 3: 99})):
+        with inject(FaultPlan(fail_shard={1: 999})):
             try:
                 db.query(GROUPED_Q, engine="sharded", n_shards=4)
             except Exception as exc:         # noqa: BLE001 - recorded
