@@ -35,6 +35,11 @@
 #                              # latency + DML invalidation, tenant-P99
 #                              # isolation, and the <2% serving_overhead_pct
 #                              # budget recorded in BENCH_serving.json
+#   scripts/check.sh --lint    # lint lane only: a byte-compile sweep plus
+#                              # the invariant lint suite (scripts/lint.py:
+#                              # lock-discipline, lock-order, compile-purity,
+#                              # error-taxonomy, provenance-grammar) and its
+#                              # allowlist ratchet against LINT_ALLOWLIST.json
 #
 # The smoke suites self-check their perf guards and rewrite BENCH_*.json in
 # the repo root, so a green run leaves the recorded trajectory up to date.
@@ -44,6 +49,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 FAULTS_ONLY=0
 SERVE_ONLY=0
+if [[ "${1:-}" == "--lint" ]]; then
+    python -m compileall -q src/repro scripts tests benchmarks
+    python scripts/lint.py
+    echo "check.sh: lint green"
+    exit 0
+fi
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
 elif [[ "${1:-}" == "--faults" ]]; then
@@ -63,6 +74,10 @@ elif [[ "${1:-}" == "--serve" ]]; then
 else
     python -m pytest -q -m "not device and not slow"
 fi
+
+# invariant lint suite: static invariants (lock discipline/order, compile
+# purity, error taxonomy, provenance grammar) + the allowlist ratchet
+python scripts/lint.py
 
 # snapshot the committed bench records before the smokes rewrite them —
 # from git HEAD, so a previously failed run's regressed on-disk file can't

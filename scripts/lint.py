@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Invariant lint suite CLI (src/repro/analysis).
+
+    python scripts/lint.py                 # all rules + allowlist ratchet
+    python scripts/lint.py --rule lock-discipline --rule lock-order
+    python scripts/lint.py --json          # machine-readable findings
+    python scripts/lint.py --update-allowlist   # re-record marker budget
+
+Exit codes: 0 clean, 1 findings, 2 allowlist budget exceeded.
+
+The allowlist ratchet (bench_guard.py's pattern applied to markers): the
+per-rule count of ``# lint: allow(...)`` markers across ``src/repro`` is
+committed in ``LINT_ALLOWLIST.json``.  A run fails when any rule's live
+count exceeds its committed budget — so silencing a new site always
+shows up in review as *two* diffs, the marker and the budget line.
+Shrinking is allowed silently (and ``--update-allowlist`` re-records the
+lower number).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.analysis import RULES, load_package, run          # noqa: E402
+from repro.analysis.common import marker_counts              # noqa: E402
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir))
+ALLOWLIST_PATH = os.path.join(REPO_ROOT, "LINT_ALLOWLIST.json")
+
+
+def check_allowlist_budget(modules, update: bool = False) -> int:
+    live = marker_counts(modules)
+    if update or not os.path.exists(ALLOWLIST_PATH):
+        with open(ALLOWLIST_PATH, "w", encoding="utf-8") as f:
+            json.dump({"total": sum(live.values()),
+                       "per_rule": dict(sorted(live.items()))},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"lint: allowlist budget recorded "
+              f"({sum(live.values())} markers) -> {ALLOWLIST_PATH}")
+        return 0
+    with open(ALLOWLIST_PATH, "r", encoding="utf-8") as f:
+        recorded = json.load(f)
+    budget = recorded.get("per_rule", {})
+    over = {r: (n, budget.get(r, 0)) for r, n in sorted(live.items())
+            if n > budget.get(r, 0)}
+    if over:
+        for rule, (n, b) in over.items():
+            print(f"lint: allowlist budget exceeded for {rule!r}: "
+                  f"{n} markers > committed {b}", file=sys.stderr)
+        print("lint: a new `# lint: allow(...)` marker must ship with an "
+              "updated LINT_ALLOWLIST.json (python scripts/lint.py "
+              "--update-allowlist)", file=sys.stderr)
+        return 2
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repo-specific invariant lint suite")
+    ap.add_argument("--rule", action="append", choices=RULES,
+                    help="run only this rule (repeatable; default: all)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--update-allowlist", action="store_true",
+                    help="re-record the marker budget in "
+                         "LINT_ALLOWLIST.json")
+    args = ap.parse_args(argv)
+
+    modules = load_package()
+    findings = run(rules=args.rule, modules=modules)
+
+    if args.as_json:
+        print(json.dumps([{"rule": f.rule, "code": f.code, "path": f.path,
+                           "line": f.line, "message": f.message}
+                          for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f)
+
+    rc = 0
+    if findings:
+        if not args.as_json:
+            print(f"lint: {len(findings)} finding(s)", file=sys.stderr)
+        rc = 1
+
+    # the ratchet runs only on full-suite runs (a --rule subset would
+    # undercount nothing, but keep the budget check tied to "the gate")
+    if args.rule is None:
+        rc = max(rc, check_allowlist_budget(modules,
+                                            update=args.update_allowlist))
+    if rc == 0 and not args.as_json:
+        n = sum(1 for _ in modules)
+        print(f"lint: clean ({n} modules, "
+              f"{len(args.rule or RULES)} rule(s))")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Invariant lint suite: repo-specific static analysis over ``src/repro``.
+
+PRs 6-9 established the serving layer's concurrency/failure contracts —
+lock-protected shared state, a deadlock-free lock order, a side-effect-free
+``Database.compile``, typed ``QueryError``-only failure paths, and a strict
+degradation-provenance grammar — but each was enforced only by runtime
+tests that must happen to hit the bad interleaving.  This package checks
+the same contracts *structurally*, as pure-Python AST passes over the
+package source, so a future PR that violates one fails ``scripts/lint.py``
+(and the default ``scripts/check.sh`` lane) deterministically:
+
+``lock-discipline``
+    Classes owning a ``_lock``/``_mu``/``_vlock`` field must mutate their
+    attributes only inside ``with self._lock`` (or a ``*_locked`` helper).
+``lock-order``
+    The nested-``with`` acquisition graph across the package must be
+    acyclic; :mod:`.runtime` cross-checks the static graph with an
+    instrumented-lock recorder under the serving hammer.
+``compile-purity``
+    Nothing reachable from ``Database.compile`` may call a mutating API
+    (calibration feedback, health EWMAs, breaker advancement, DML, WAL).
+``error-taxonomy``
+    No unmarked broad ``except`` in ``core/``; execute-path raises must
+    use a typed :class:`~repro.core.errors.QueryError` subclass.
+``provenance-grammar``
+    Every literal flowing into ``degraded``/``repaired`` must parse
+    against the documented ``"from->to: why"`` / ``"breaker(<rung>) ..."``
+    grammar, so ``health.rung_outcome`` can never misclassify a note.
+
+A true-but-intended violation is silenced *at the site* with an inline
+marker — ``# lint: allow(<rule>) — <why>`` — and every marker is counted
+against the committed budget in ``LINT_ALLOWLIST.json`` (the ratchet:
+adding a marker requires a visible diff of both the site and the budget).
+"""
+from .common import Finding, Module, load_package, module_from_source
+from .runner import RULES, run
+
+__all__ = ["Finding", "Module", "RULES", "load_package",
+           "module_from_source", "run"]

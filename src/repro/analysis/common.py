@@ -1,0 +1,388 @@
+"""Shared infrastructure for the invariant lint suite.
+
+Everything here is deliberately dependency-free (``ast`` + ``re`` only):
+the suite must run in the bare test environment and inside
+``scripts/check.sh`` without importing the package under analysis.
+
+The unit of work is a :class:`Module` — parsed source plus its allowlist
+markers — loadable either from disk (:func:`load_package`) or from an
+in-memory string (:func:`module_from_source`, what the fixture tests use
+to seed known-bad snippets).  Checkers report :class:`Finding` values; a
+finding at a line covered by a ``# lint: allow(<rule>) — <why>`` marker
+for its rule (or sub-code) is suppressed by :func:`allowed`.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: Marker syntax: ``# lint: allow(rule[, rule...]) — justification``.
+#: The justification is free-form but required by convention; the regex
+#: only binds the rule list so the why-text never needs escaping.
+ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([^)]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at an exact source location.
+
+    ``rule`` is the checker name (``lock-discipline`` ...), ``code`` a
+    finer-grained slug within it (``broad-except``, ``untyped-raise``,
+    ``unlocked-mutation`` ...) so a marker can allow either the whole
+    rule or just the sub-code.
+    """
+
+    rule: str
+    code: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}/{self.code}] " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file: AST + per-line allowlist markers."""
+
+    name: str                     # dotted module name, e.g. repro.core.lsm
+    path: str                     # repo-relative path (or fixture label)
+    source: str
+    tree: ast.Module
+    allow: Dict[int, Set[str]]    # line number -> rule/code names allowed
+
+    @property
+    def in_core(self) -> bool:
+        return ".core." in self.name or self.name.endswith(".core")
+
+
+def parse_allow_markers(source: str) -> Dict[int, Set[str]]:
+    """Map line numbers to the rule names a marker on that line allows.
+
+    A trailing marker covers its own line; a marker on a comment-only
+    line covers the rest of its comment block (the justification often
+    runs several ``#`` lines) plus the first code line after it — the
+    statement it annotates.
+    """
+    allow: Dict[int, Set[str]] = {}
+    lines = source.splitlines()
+    for lineno, text in enumerate(lines, start=1):
+        m = ALLOW_RE.search(text)
+        if m is None:
+            continue
+        names = {part.strip() for part in m.group(1).split(",")
+                 if part.strip()}
+        allow.setdefault(lineno, set()).update(names)
+        if text.lstrip().startswith("#"):
+            nxt = lineno + 1
+            while nxt <= len(lines) and \
+                    lines[nxt - 1].lstrip().startswith("#"):
+                allow.setdefault(nxt, set()).update(names)
+                nxt += 1
+            allow.setdefault(nxt, set()).update(names)
+    return allow
+
+
+def allowed(mod: Module, line: int, names: Iterable[str]) -> bool:
+    """True when any of ``names`` is allowlisted at ``line`` in ``mod``."""
+    at = mod.allow.get(line)
+    return bool(at) and any(n in at for n in names)
+
+
+def marker_counts(modules: Sequence[Module]) -> Dict[str, int]:
+    """Per-rule count of allow markers across ``modules`` (the ratchet
+    input: one marker naming two rules counts once for each)."""
+    counts: Dict[str, int] = {}
+    for mod in modules:
+        for text in mod.source.splitlines():
+            m = ALLOW_RE.search(text)
+            if m is None:
+                continue
+            for part in m.group(1).split(","):
+                part = part.strip()
+                if part:
+                    counts[part] = counts.get(part, 0) + 1
+    return counts
+
+
+def module_from_source(name: str, source: str,
+                       path: Optional[str] = None) -> Module:
+    """Build a :class:`Module` from an in-memory snippet (fixture tests)."""
+    return Module(name=name, path=path or f"<fixture:{name}>",
+                  source=source, tree=ast.parse(source),
+                  allow=parse_allow_markers(source))
+
+
+def find_src_root(start: Optional[str] = None) -> str:
+    """Locate the ``src`` directory holding the ``repro`` package, walking
+    up from ``start`` (default: this file's location)."""
+    here = os.path.abspath(start or os.path.dirname(__file__))
+    d = here
+    while True:
+        if os.path.isdir(os.path.join(d, "src", "repro")):
+            return os.path.join(d, "src")
+        if os.path.basename(d) == "src" \
+                and os.path.isdir(os.path.join(d, "repro")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise FileNotFoundError(
+                f"could not locate src/repro above {here}")
+        d = parent
+
+
+def load_package(src_root: Optional[str] = None,
+                 include_analysis: bool = False) -> List[Module]:
+    """Parse every ``repro`` source file under ``src_root``.
+
+    The analysis package itself is excluded by default — it is not part
+    of the runtime system whose invariants the rules encode (its own
+    hygiene is covered by the test suite and ``python -m compileall``).
+    """
+    root = src_root or find_src_root()
+    pkg = os.path.join(root, "repro")
+    modules: List[Module] = []
+    for dirpath, dirnames, filenames in os.walk(pkg):
+        dirnames.sort()
+        if not include_analysis and os.path.basename(dirpath) == "analysis":
+            dirnames.clear()
+            continue
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fn)
+            rel = os.path.relpath(full, os.path.dirname(root))
+            dotted = os.path.relpath(full, root)[:-3].replace(os.sep, ".")
+            if dotted.endswith(".__init__"):
+                dotted = dotted[: -len(".__init__")]
+            with open(full, "r", encoding="utf-8") as f:
+                source = f.read()
+            modules.append(Module(name=dotted, path=rel, source=source,
+                                  tree=ast.parse(source, filename=rel),
+                                  allow=parse_allow_markers(source)))
+    return modules
+
+
+# ---------------------------------------------------------------------------
+# receiver-name resolution: the repo's naming conventions are consistent
+# enough that the *variable name* of a receiver identifies its class.  The
+# checkers resolve only through this table (plus ``self``) — an unknown
+# receiver is simply not followed, which keeps every pass false-positive-
+# averse at the cost of documented blind spots.
+# ---------------------------------------------------------------------------
+
+RECEIVER_HINTS: Dict[str, str] = {
+    "store": "LSMStore", "base": "LSMStore", "st": "LSMStore",
+    "wal": "WriteAheadLog",
+    "health": "HealthRegistry",
+    "cal": "TableCalibration", "calibration": "TableCalibration",
+    "cst": "ColumnSSTable", "primary": "ColumnSSTable",
+    "cr": "ColumnReplicas", "replicas": "ColumnReplicas",
+    "sr": "StoreReplicas",
+    "mav": "MaterializedAggView",
+    "mjv": "MaterializedJoinView",
+    "mlog": "MLog", "_mlog": "MLog",
+    "br": "Breaker", "breaker": "Breaker", "sbr": "Breaker",
+    "db": "Database",
+    "srv": "QueryServer", "server": "QueryServer",
+    "fp": "FaultPlan",
+    "memtable": "MemTable",
+}
+
+#: Module aliases: ``from . import cost`` then ``cost.observe_scan(...)``.
+MODULE_HINTS: Set[str] = {
+    "cost", "replica", "health", "faultinject", "recovery", "pushdown",
+    "partition", "engine", "mview", "wal", "lsm", "relation", "encoding",
+    "errors", "serving", "session",
+}
+
+
+def attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``self.db.health`` -> ``["self", "db", "health"]``; None when the
+    expression is not a plain Name/Attribute chain (subscripts and calls
+    are looked through for the *root* but terminate the named chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return None
+
+
+def rooted_at(node: ast.AST, name: str) -> bool:
+    """True when ``node`` is an Attribute/Subscript chain whose root is
+    ``Name(name)`` — e.g. ``self._heap[0]`` is rooted at ``self``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == name
+
+
+# ---------------------------------------------------------------------------
+# cross-module call graph: (kind, owner, name) nodes, resolved through
+# ``self``, RECEIVER_HINTS and MODULE_HINTS only.
+# ---------------------------------------------------------------------------
+
+NodeKey = Tuple[str, str, str]          # ("cls", Class, method) |
+                                        # ("fun", module_basename, func)
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    key: NodeKey
+    mod: Module
+    node: ast.AST                       # FunctionDef / AsyncFunctionDef
+    cls: Optional[str]                  # enclosing class name or None
+
+
+class CallIndex:
+    """Package-wide index of functions/methods plus resolved call edges."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+        self.funcs: Dict[NodeKey, FuncInfo] = {}
+        self.class_methods: Dict[str, Dict[str, NodeKey]] = {}
+        self._edges: Dict[NodeKey, List[Tuple[NodeKey, int]]] = {}
+        for mod in self.modules:
+            self._index_module(mod)
+        for info in list(self.funcs.values()):
+            self._edges[info.key] = list(self._resolve_calls(info))
+
+    # ---------------------------------------------------------- indexing
+    def _index_module(self, mod: Module) -> None:
+        modbase = mod.name.rsplit(".", 1)[-1]
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                key: NodeKey = ("fun", modbase, node.name)
+                self.funcs[key] = FuncInfo(key, mod, node, None)
+            elif isinstance(node, ast.ClassDef):
+                methods = self.class_methods.setdefault(node.name, {})
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        key = ("cls", node.name, item.name)
+                        self.funcs[key] = FuncInfo(key, mod, item, node.name)
+                        methods[item.name] = key
+
+    # -------------------------------------------------------- resolution
+    def resolve_call(self, call: ast.Call,
+                     cls: Optional[str]) -> Optional[NodeKey]:
+        """Resolve one ``ast.Call`` to an indexed function, or None."""
+        fn = call.func
+        if isinstance(fn, ast.Name):
+            if fn.id in self.class_methods:          # constructor
+                return self.class_methods[fn.id].get("__init__")
+            for key in (("fun", m, fn.id) for m in MODULE_HINTS):
+                if key in self.funcs:
+                    return key
+            return None
+        if not isinstance(fn, ast.Attribute):
+            return None
+        chain = attr_chain(fn.value)
+        if chain is None:
+            # look through subscripts/calls to a still-usable tail name
+            tail = fn.value
+            while isinstance(tail, ast.Subscript):
+                tail = tail.value
+            chain = attr_chain(tail)
+            if chain is None:
+                return None
+        if chain == ["self"] and cls is not None:
+            return self.class_methods.get(cls, {}).get(fn.attr)
+        recv = chain[-1]
+        if len(chain) == 1 and recv in MODULE_HINTS:
+            key = ("fun", recv, fn.attr)
+            return key if key in self.funcs else None
+        hint = RECEIVER_HINTS.get(recv)
+        if hint is not None:
+            return self.class_methods.get(hint, {}).get(fn.attr)
+        return None
+
+    def _resolve_calls(self, info: FuncInfo
+                       ) -> Iterable[Tuple[NodeKey, int]]:
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Call):
+                target = self.resolve_call(node, info.cls)
+                if target is not None:
+                    yield target, node.lineno
+
+    # ------------------------------------------------------ reachability
+    def edges_from(self, key: NodeKey) -> List[Tuple[NodeKey, int]]:
+        return self._edges.get(key, [])
+
+    def reachable(self, *roots: NodeKey) -> Dict[NodeKey,
+                                                 Tuple[Optional[NodeKey],
+                                                       int]]:
+        """BFS closure: node -> (predecessor, call line) for path replay."""
+        seen: Dict[NodeKey, Tuple[Optional[NodeKey], int]] = {}
+        frontier: List[NodeKey] = []
+        for r in roots:
+            if r in self.funcs and r not in seen:
+                seen[r] = (None, 0)
+                frontier.append(r)
+        while frontier:
+            cur = frontier.pop()
+            for nxt, line in self.edges_from(cur):
+                if nxt not in seen:
+                    seen[nxt] = (cur, line)
+                    frontier.append(nxt)
+        return seen
+
+    @staticmethod
+    def path_to(seen: Dict[NodeKey, Tuple[Optional[NodeKey], int]],
+                key: NodeKey) -> List[NodeKey]:
+        path = [key]
+        while True:
+            pred, _ = seen[path[-1]]
+            if pred is None:
+                break
+            path.append(pred)
+        path.reverse()
+        return path
+
+
+def fmt_node(key: NodeKey) -> str:
+    kind, owner, name = key
+    return f"{owner}.{name}" if kind == "cls" else f"{owner}:{name}"
+
+
+def find_cycle(edges: Iterable[Tuple[object, object]]
+               ) -> Optional[List[object]]:
+    """Return one cycle (as a node list ``[a, b, ..., a]``) in the directed
+    edge set, or None when acyclic.  Shared by the static lock-order pass
+    and the runtime recorder's assertion."""
+    adj: Dict[object, List[object]] = {}
+    for a, b in edges:
+        adj.setdefault(a, []).append(b)
+        adj.setdefault(b, [])
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in adj}
+    stack: List[object] = []
+
+    def visit(n: object) -> Optional[List[object]]:
+        color[n] = GREY
+        stack.append(n)
+        for m in adj[n]:
+            if color[m] == GREY:
+                return stack[stack.index(m):] + [m]
+            if color[m] == WHITE:
+                cyc = visit(m)
+                if cyc is not None:
+                    return cyc
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(adj, key=repr):
+        if color[n] == WHITE:
+            cyc = visit(n)
+            if cyc is not None:
+                return cyc
+    return None

@@ -1,0 +1,474 @@
+"""Lock-discipline and lock-order checkers.
+
+**lock-discipline** — a class that owns a lock (``self._lock =
+threading.Lock()`` in ``__init__``, or a dataclass field built by
+``dataclasses.field(default_factory=threading.Lock)``) has declared that
+its mutable state is shared; every mutation of ``self.*`` in its methods
+must then sit lexically inside ``with self._lock`` (a
+``threading.Condition(self._mu)`` field guards the same state — entering
+the condition *is* holding the lock), or live in a helper whose name ends
+in ``_locked`` (the repo convention for "caller holds the lock"), or in
+``__init__``/``__post_init__`` (no aliases exist yet).  Everything else
+is a Finding.  Scope note: only ``self``-rooted mutations are checked —
+cross-object writes (``cst.blocks[b] = ...`` under the *replica* lock)
+follow the owning object's discipline and are covered by the runtime
+hammer tests, not this pass.
+
+**lock-order** — every ``with <obj>.<lockattr>`` acquisition is a node
+``(OwnerClass, lockattr)``; holding one lock while (lexically or through
+a resolvable call chain) acquiring another adds a directed edge.  A cycle
+in that graph is a deadlock candidate.  The same cycle detector runs over
+the edges the :mod:`.runtime` recorder observes under the 8-thread
+serving hammer, so the static graph and the dynamic one cross-check each
+other.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .common import (CallIndex, Finding, Module, NodeKey, RECEIVER_HINTS,
+                     allowed, attr_chain, find_cycle, rooted_at)
+
+RULE_DISCIPLINE = "lock-discipline"
+RULE_ORDER = "lock-order"
+
+#: Container-method names treated as mutations of their receiver.
+MUTATORS = {
+    "append", "appendleft", "add", "insert", "extend", "update", "pop",
+    "popleft", "popitem", "clear", "remove", "discard", "setdefault",
+    "move_to_end", "sort", "reverse", "truncate",
+}
+
+#: ``heapq.heappush(self._heap, ...)`` mutates its first argument.
+ARG0_MUTATORS = {"heappush", "heappop", "heapify", "heappushpop",
+                 "heapreplace"}
+
+#: Attribute names that look like lock acquisitions when used as a
+#: ``with`` context on a non-``self`` receiver (resolved via hints).
+LOCK_ATTR_NAMES = {"_lock", "_mu", "_vlock", "_read_lock", "_cv"}
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    """``threading.Lock()`` / ``threading.RLock()`` / ``Lock()`` ..."""
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else \
+        fn.id if isinstance(fn, ast.Name) else None
+    return name in ("Lock", "RLock")
+
+
+def _condition_guard(node: ast.AST) -> Optional[str]:
+    """For ``threading.Condition(self._mu)`` return ``"_mu"`` (the lock
+    the condition wraps); plain ``Condition()`` returns ``""`` (own
+    internal lock)."""
+    if not isinstance(node, ast.Call):
+        return None
+    fn = node.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else \
+        fn.id if isinstance(fn, ast.Name) else None
+    if name != "Condition":
+        return None
+    if node.args and isinstance(node.args[0], ast.Attribute):
+        chain = attr_chain(node.args[0])
+        if chain and chain[0] == "self" and len(chain) == 2:
+            return chain[1]
+    return ""
+
+
+def _dataclass_field_lock(stmt: ast.stmt) -> Optional[str]:
+    """Class-body ``_lock: threading.Lock = dataclasses.field(
+    default_factory=threading.Lock)`` -> ``"_lock"``."""
+    if not isinstance(stmt, ast.AnnAssign) or stmt.value is None:
+        return None
+    if not isinstance(stmt.target, ast.Name):
+        return None
+    v = stmt.value
+    if _is_lock_ctor(v):
+        return stmt.target.id
+    if isinstance(v, ast.Call):
+        fn = v.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else None
+        if name == "field":
+            for kw in v.keywords:
+                if kw.arg == "default_factory" and kw.value is not None:
+                    factory = kw.value
+                    fname = factory.attr if isinstance(factory,
+                                                       ast.Attribute) else \
+                        factory.id if isinstance(factory, ast.Name) else None
+                    if fname in ("Lock", "RLock"):
+                        return stmt.target.id
+    return None
+
+
+@dataclasses.dataclass
+class ClassLocks:
+    """The lock surface of one class: real lock attrs plus condition
+    attrs that guard the same state (entering either counts as locked)."""
+
+    cls: str
+    mod: Module
+    node: ast.ClassDef
+    locks: Set[str] = dataclasses.field(default_factory=set)
+    conditions: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def guards(self) -> Set[str]:
+        return self.locks | set(self.conditions)
+
+    def canonical(self, attr: str) -> str:
+        """Condition attrs normalize to the lock they wrap, so
+        ``with self._cv`` and ``with self._mu`` are the same node in the
+        acquisition graph."""
+        wrapped = self.conditions.get(attr, None)
+        return wrapped if wrapped else attr
+
+
+def collect_class_locks(mod: Module) -> List[ClassLocks]:
+    out: List[ClassLocks] = []
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        info = ClassLocks(node.name, mod, node)
+        for stmt in node.body:
+            attr = _dataclass_field_lock(stmt)
+            if attr is not None:
+                info.locks.add(attr)
+        for item in node.body:
+            if isinstance(item, ast.FunctionDef) \
+                    and item.name in ("__init__", "__post_init__"):
+                for stmt in ast.walk(item):
+                    if not isinstance(stmt, ast.Assign):
+                        continue
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Attribute) \
+                                and isinstance(tgt.value, ast.Name) \
+                                and tgt.value.id == "self":
+                            if _is_lock_ctor(stmt.value):
+                                info.locks.add(tgt.attr)
+                            else:
+                                g = _condition_guard(stmt.value)
+                                if g is not None:
+                                    info.conditions[tgt.attr] = g
+        if info.locks:
+            out.append(info)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+def _with_guard_attrs(item: ast.withitem, guards: Set[str]) -> Optional[str]:
+    """The guard attr a ``with self.<g>`` item enters, or None."""
+    ctx = item.context_expr
+    if isinstance(ctx, ast.Attribute) and isinstance(ctx.value, ast.Name) \
+            and ctx.value.id == "self" and ctx.attr in guards:
+        return ctx.attr
+    return None
+
+
+def _self_mutation(node: ast.AST) -> Optional[Tuple[int, str]]:
+    """(line, description) when ``node`` mutates ``self``-rooted state."""
+    if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for tgt in targets:
+            for el in (tgt.elts if isinstance(tgt, (ast.Tuple, ast.List))
+                       else [tgt]):
+                if isinstance(el, (ast.Attribute, ast.Subscript)) \
+                        and rooted_at(el, "self"):
+                    return node.lineno, f"assignment to " \
+                        f"`{ast.unparse(el)}`"
+    elif isinstance(node, ast.Delete):
+        for tgt in node.targets:
+            if isinstance(tgt, (ast.Attribute, ast.Subscript)) \
+                    and rooted_at(tgt, "self"):
+                return node.lineno, f"del of `{ast.unparse(tgt)}`"
+    elif isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr in MUTATORS \
+                and rooted_at(fn.value, "self"):
+            return node.lineno, f"mutating call " \
+                f"`{ast.unparse(fn)}(...)`"
+        name = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else None
+        if name in ARG0_MUTATORS and node.args \
+                and rooted_at(node.args[0], "self"):
+            return node.lineno, f"`{name}({ast.unparse(node.args[0])}, " \
+                f"...)`"
+    return None
+
+
+def _iter_nodes(root: ast.AST) -> Iterable[ast.AST]:
+    """DFS over an expression/statement without descending into nested
+    function scopes (a lambda's body runs later, under whatever lock the
+    *caller* of the lambda holds)."""
+    stack: List[ast.AST] = [root]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda, ast.ClassDef)):
+                stack.append(child)
+
+
+def _check_exprs(roots: Sequence[ast.AST], locked: bool, info: ClassLocks,
+                 findings: List[Finding]) -> None:
+    if locked:
+        return
+    for root in roots:
+        for node in _iter_nodes(root):
+            hit = _self_mutation(node)
+            if hit is None:
+                continue
+            line, what = hit
+            if allowed(info.mod, line, (RULE_DISCIPLINE,
+                                        "unlocked-mutation")):
+                continue
+            findings.append(Finding(
+                RULE_DISCIPLINE, "unlocked-mutation", info.mod.path, line,
+                f"{info.cls}: {what} outside `with self."
+                f"{sorted(info.locks)[0]}` (class owns "
+                f"{sorted(info.guards)}); move under the lock, or rename "
+                f"the helper with a `_locked` suffix if the caller holds "
+                f"it"))
+
+
+def _scan_body(body: Sequence[ast.stmt], locked: bool, info: ClassLocks,
+               findings: List[Finding]) -> None:
+    for stmt in body:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            # the context expressions evaluate before the lock is held
+            _check_exprs([it.context_expr for it in stmt.items],
+                         locked, info, findings)
+            entered = any(_with_guard_attrs(it, info.guards) is not None
+                          for it in stmt.items)
+            _scan_body(stmt.body, locked or entered, info, findings)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            continue                      # nested defs: fresh scope, skip
+        elif isinstance(stmt, (ast.If, ast.While, ast.For, ast.AsyncFor,
+                               ast.Try)):
+            heads = [v for v in (getattr(stmt, "test", None),
+                                 getattr(stmt, "iter", None),
+                                 getattr(stmt, "target", None))
+                     if v is not None]
+            _check_exprs(heads, locked, info, findings)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if sub:
+                    _scan_body(sub, locked, info, findings)
+            for h in getattr(stmt, "handlers", []) or []:
+                _scan_body(h.body, locked, info, findings)
+        else:
+            _check_exprs([stmt], locked, info, findings)
+
+
+def check_lock_discipline(modules: Sequence[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        for info in collect_class_locks(mod):
+            for item in info.node.body:
+                if not isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if item.name in ("__init__", "__post_init__") \
+                        or item.name.endswith("_locked"):
+                    continue
+                _scan_body(item.body, False, info, findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# lock-order (static half; runtime.py is the dynamic cross-check)
+# ---------------------------------------------------------------------------
+
+LockNode = Tuple[str, str]               # (OwnerClass, lock attr)
+
+
+def _acquired_node(ctx: ast.expr, info: Optional[ClassLocks],
+                   aliases: Dict[str, LockNode]) -> Optional[LockNode]:
+    """Resolve one with-item context expression to a lock node."""
+    if isinstance(ctx, ast.Name):
+        return aliases.get(ctx.id)
+    chain = attr_chain(ctx) if isinstance(ctx, ast.Attribute) else None
+    if chain is None:
+        return None
+    attr = chain[-1]
+    if attr not in LOCK_ATTR_NAMES:
+        return None
+    if chain[0] == "self" and len(chain) == 2:
+        if info is not None and attr in info.guards:
+            return (info.cls, info.canonical(attr))
+        return None
+    recv = chain[-2]
+    owner = RECEIVER_HINTS.get(recv)
+    if owner is None:
+        return None
+    return (owner, attr)
+
+
+def _read_lock_alias(stmt: ast.stmt) -> Optional[str]:
+    """``lock = mav.__dict__.setdefault("_read_lock", ...)`` -> "lock".
+
+    The executor materializes the per-MAV read lock lazily through
+    ``__dict__.setdefault``; any local bound from an expression that
+    mentions the ``"_read_lock"`` key is treated as that lock."""
+    if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+        return None
+    tgt = stmt.targets[0]
+    if not isinstance(tgt, ast.Name):
+        return None
+    for node in ast.walk(stmt.value):
+        if isinstance(node, ast.Constant) and node.value == "_read_lock":
+            return tgt.id
+    return None
+
+
+@dataclasses.dataclass
+class _MethodAcq:
+    """Per-function acquisition summary for the interprocedural pass."""
+
+    key: NodeKey
+    mod: Module
+    acquires: Set[LockNode] = dataclasses.field(default_factory=set)
+    # (held lock, acquired lock, line) from lexical nesting
+    nested: List[Tuple[LockNode, LockNode, int]] = \
+        dataclasses.field(default_factory=list)
+    # (held lock, callee, line): calls made while a lock is held
+    calls_held: List[Tuple[LockNode, NodeKey, int]] = \
+        dataclasses.field(default_factory=list)
+
+
+def _summarize(index: CallIndex,
+               class_locks: Dict[str, ClassLocks]) -> Dict[NodeKey,
+                                                           _MethodAcq]:
+    out: Dict[NodeKey, _MethodAcq] = {}
+    for key, finfo in index.funcs.items():
+        info = class_locks.get(finfo.cls) if finfo.cls else None
+        acq = _MethodAcq(key, finfo.mod)
+        aliases: Dict[str, LockNode] = {}
+
+        def walk(body: Sequence[ast.stmt],
+                 held: Tuple[LockNode, ...]) -> None:
+            for stmt in body:
+                alias = _read_lock_alias(stmt)
+                if alias is not None:
+                    aliases[alias] = ("MaterializedAggView", "_read_lock")
+                if isinstance(stmt, ast.With):
+                    entered = list(held)
+                    for it in stmt.items:
+                        node = _acquired_node(it.context_expr, info,
+                                              aliases)
+                        if node is None:
+                            continue
+                        acq.acquires.add(node)
+                        for h in entered:
+                            if h != node:
+                                acq.nested.append((h, node, stmt.lineno))
+                        entered.append(node)
+                    walk(stmt.body, tuple(entered))
+                    continue
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                # enter_context(lock) inside an ExitStack loop counts too
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Call):
+                        fn = node.func
+                        fname = fn.attr if isinstance(fn, ast.Attribute) \
+                            else fn.id if isinstance(fn, ast.Name) else None
+                        if fname == "enter_context" and node.args:
+                            ln = _acquired_node(node.args[0], info, aliases)
+                            if ln is None:
+                                for sub in ast.walk(node.args[0]):
+                                    if isinstance(sub, ast.Constant) \
+                                            and sub.value == "_read_lock":
+                                        ln = ("MaterializedAggView",
+                                              "_read_lock")
+                            if ln is not None:
+                                acq.acquires.add(ln)
+                                for h in held:
+                                    if h != ln:
+                                        acq.nested.append((h, ln,
+                                                           node.lineno))
+                        elif held:
+                            target = index.resolve_call(node, finfo.cls)
+                            if target is not None:
+                                for h in held:
+                                    acq.calls_held.append((h, target,
+                                                           node.lineno))
+                for attr in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, attr, None)
+                    if sub:
+                        walk(sub, held)
+                for h in getattr(stmt, "handlers", []) or []:
+                    walk(h.body, held)
+
+        walk(getattr(finfo.node, "body", []), ())
+        out[key] = acq
+    return out
+
+
+def lock_order_graph(modules: Sequence[Module],
+                     index: Optional[CallIndex] = None
+                     ) -> List[Tuple[LockNode, LockNode, str, int]]:
+    """The static acquisition graph: ``(held, acquired, path, line)``
+    edges from lexical nesting plus one-level-closed call chains."""
+    index = index or CallIndex(modules)
+    class_locks: Dict[str, ClassLocks] = {}
+    for mod in modules:
+        for info in collect_class_locks(mod):
+            class_locks[info.cls] = info
+    summaries = _summarize(index, class_locks)
+
+    # fixpoint: effective acquisitions of a method include those of every
+    # method it calls (``_locked`` helpers excepted: by convention they
+    # *require* the lock rather than take it, so they are transparent —
+    # their own nested acquisitions still count via their summary edges).
+    eff: Dict[NodeKey, Set[LockNode]] = {
+        k: set(s.acquires) for k, s in summaries.items()}
+    changed = True
+    while changed:
+        changed = False
+        for key in summaries:
+            for target, _ in index.edges_from(key):
+                extra = eff.get(target, set()) - eff[key]
+                if extra:
+                    eff[key].update(extra)
+                    changed = True
+
+    edges: List[Tuple[LockNode, LockNode, str, int]] = []
+    for key, acq in summaries.items():
+        for held, got, line in acq.nested:
+            edges.append((held, got, acq.mod.path, line))
+        for held, callee, line in acq.calls_held:
+            for got in sorted(eff.get(callee, ())):
+                if got != held:
+                    edges.append((held, got, acq.mod.path, line))
+    return edges
+
+
+def check_lock_order(modules: Sequence[Module],
+                     index: Optional[CallIndex] = None) -> List[Finding]:
+    edges = lock_order_graph(modules, index)
+    cyc = find_cycle({(a, b) for a, b, _, _ in edges})
+    if cyc is None:
+        return []
+    # anchor the finding at one edge participating in the cycle
+    pairs = {(cyc[i], cyc[i + 1]) for i in range(len(cyc) - 1)}
+    for held, got, path, line in edges:
+        if (held, got) in pairs:
+            mod = next(m for m in modules if m.path == path)
+            if allowed(mod, line, (RULE_ORDER, "acquisition-cycle")):
+                continue
+            pretty = " -> ".join(f"{c}.{a}" for c, a in cyc)
+            return [Finding(
+                RULE_ORDER, "acquisition-cycle", path, line,
+                f"lock acquisition cycle (deadlock candidate): {pretty}")]
+    return []

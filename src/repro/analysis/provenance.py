@@ -1,0 +1,264 @@
+"""provenance-grammar: degradation/repair notes must parse.
+
+``health.rung_outcome`` infers "rung X failed" from
+``stats.degraded`` entries via ``d.startswith(f"{rung}->")`` — a
+free-form string that *happens* to start with a rung name and an arrow
+would silently train a breaker on a non-failure.  This pass parses every
+string literal / f-string template that flows into a provenance sink
+(``.degraded.append/extend``, ``.repaired.append/extend``, and the
+replica repair-event log that ``replica.collect`` forwards into
+``stats.repaired``) against the documented grammar (ROADMAP "fault
+model"):
+
+degraded entries, one of::
+
+    <from>-><to>: <why>          # route transition (the failure signal)
+    breaker(<rung>) <state>: <why>   # state in {open, half-open}
+    <head>: <why>                # plain note; <head> is one token, so it
+                                 # can never match a rung-failure prefix
+
+repaired / replica events, one of::
+
+    repaired <detail>
+    unrepairable <detail>
+    scrub: <detail>
+
+Tokens are ``[a-z_][a-z0-9_-]*`` with an optional ``(...)`` / ``[...]``
+qualifier; f-string interpolations are wildcards, legal only inside the
+qualifier or the ``<why>`` tail — a wildcard in a ``from`` token would
+make the failure signal dynamic, which is exactly the bug class this
+rule exists to keep out.  Non-literal arguments are allowed only for the
+known propagation idioms (extending from another stats object's
+``degraded``/``repaired``/``events``) and for ``cost.breaker_note(...)``,
+whose template is itself checked at its definition site.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Sequence, Tuple
+
+from .common import Finding, Module, allowed, attr_chain
+
+RULE = "provenance-grammar"
+
+WILD = "\x00"                       # one f-string interpolation
+
+_Q = r"(?:\([^()]*\)|\[[^\][]*\])?"  # optional (...)/[...] qualifier
+TOKEN_RE = re.compile(rf"^[a-z_][a-z0-9_\-]*{_Q}$")
+BREAKER_RE = re.compile(
+    rf"^breaker\((?P<rung>[a-z_][a-z0-9_\-]*{_Q}|{WILD})\) "
+    rf"(?P<state>open|half-open|{WILD}): .+$", re.DOTALL)
+TRANSITION_RE = re.compile(
+    r"^(?P<frm>[^:]*?)->(?P<to>[^:]*?): .+$", re.DOTALL)
+HEAD_RE = re.compile(rf"^[a-z_][a-z0-9_\-]*{_Q}: .+$", re.DOTALL)
+
+SINK_ATTRS = ("degraded", "repaired")
+PROPAGATION_TAILS = {"degraded", "repaired", "events"}
+
+
+def template_of(node: ast.AST) -> Optional[str]:
+    """Literal string or f-string with interpolations replaced by WILD."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts: List[str] = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            elif isinstance(v, ast.FormattedValue):
+                parts.append(WILD)
+            else:
+                return None
+        return "".join(parts)
+    return None
+
+
+_TOKEN_PARTS = re.compile(
+    r"^(?P<base>[^()\][]*)(?:\((?P<par>[^()]*)\))?(?:\[(?P<brk>[^\][]*)\])?$")
+_BASE_RE = re.compile(r"^[a-z_][a-z0-9_\-]*$")
+
+
+def _token_ok(tok: str) -> bool:
+    """A single static token, with wildcards legal only inside the
+    optional ``(...)``/``[...]`` qualifier — never in the base name."""
+    m = _TOKEN_PARTS.match(tok)
+    if m is None:
+        return False
+    base = m.group("base") or ""
+    return WILD not in base and _BASE_RE.match(base) is not None
+
+
+def parse_degraded(template: str) -> Optional[str]:
+    """None when the template parses; else a reason string."""
+    if template == WILD or not template:
+        return "entirely dynamic degraded entry (unverifiable grammar)"
+    if template.startswith("breaker("):
+        if BREAKER_RE.match(template):
+            return None
+        return "breaker note must be 'breaker(<rung>) <open|half-open>: " \
+               "<why>'"
+    m = TRANSITION_RE.match(template)
+    if m:
+        frm, to = m.group("frm"), m.group("to")
+        if not _token_ok(frm):
+            return f"transition 'from' token {frm!r} is not a single " \
+                   f"static token (health.rung_outcome keys on it)"
+        if not _token_ok(to):
+            return f"transition 'to' token {to!r} is not a single token"
+        return None
+    if "->" in template.split(": ", 1)[0]:
+        return "has '->' before the first ': ' but does not parse as " \
+               "'<from>-><to>: <why>'"
+    if HEAD_RE.match(template):
+        return None
+    return "plain note must be '<token>: <why>' (a head token can never " \
+           "collide with a rung-failure '<rung>->' prefix)"
+
+
+def parse_repaired(template: str) -> Optional[str]:
+    if template.startswith(("repaired ", "unrepairable ", "scrub: ")):
+        return None
+    return "repair event must start with 'repaired ', 'unrepairable ' " \
+           "or 'scrub: '"
+
+
+def _sink_of(call: ast.Call, mod: Module) -> Optional[Tuple[str, str]]:
+    """(kind, verb) when ``call`` appends/extends a provenance sink."""
+    fn = call.func
+    if not isinstance(fn, ast.Attribute) or fn.attr not in ("append",
+                                                            "extend"):
+        return None
+    if not isinstance(fn.value, ast.Attribute):
+        # the replica repair-event log: ``self.events.append(...)`` inside
+        # core/replica.py feeds stats.repaired via replica.collect
+        return None
+    tail = fn.value.attr
+    if tail in SINK_ATTRS:
+        return tail, fn.attr
+    if tail == "events" and mod.name.endswith("core.replica"):
+        return "repaired", fn.attr
+    return None
+
+
+def _is_propagation(arg: ast.AST) -> bool:
+    """``x.degraded`` / ``sr.events[mark:]`` — forwarding an existing,
+    already-checked stream rather than minting a new entry."""
+    node = arg
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    chain = attr_chain(node)
+    return chain is not None and chain[-1] in PROPAGATION_TAILS
+
+
+def _is_breaker_note_call(arg: ast.AST) -> bool:
+    if not isinstance(arg, ast.Call):
+        return False
+    fn = arg.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else \
+        fn.id if isinstance(fn, ast.Name) else None
+    return name == "breaker_note"
+
+
+def _local_literal(name: str, func: ast.AST,
+                   before_line: int) -> Optional[ast.AST]:
+    """The last single-target literal assignment to ``name`` in ``func``
+    before ``before_line`` (resolves ``msg = f"..."; sink.append(msg)``)."""
+    best: Optional[ast.AST] = None
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name \
+                and node.lineno < before_line:
+            best = node.value
+    return best
+
+
+def check_provenance(modules: Sequence[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        # enclosing-function map so Name arguments resolve locally
+        func_of = {}
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(fn):
+                    func_of.setdefault(id(sub), fn)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            sink = _sink_of(node, mod)
+            if sink is None or not node.args:
+                continue
+            kind, verb = sink
+            arg = node.args[0]
+            if isinstance(arg, ast.Name):
+                fn = func_of.get(id(node))
+                resolved = _local_literal(arg.id, fn, node.lineno) \
+                    if fn is not None else None
+                if resolved is not None:
+                    arg = resolved
+            if verb == "extend":
+                if _is_propagation(arg):
+                    continue
+                # extend with a literal list: check each element
+                elems = arg.elts if isinstance(arg, (ast.List,
+                                                     ast.Tuple)) else None
+                if elems is None:
+                    if allowed(mod, node.lineno, (RULE, "opaque-source")):
+                        continue
+                    findings.append(Finding(
+                        RULE, "opaque-source", mod.path, node.lineno,
+                        f"extend of `{kind}` from a non-propagation, "
+                        f"non-literal source: the grammar cannot be "
+                        f"checked statically"))
+                    continue
+            else:
+                elems = [arg]
+            for el in elems:
+                if _is_breaker_note_call(el):
+                    continue            # template checked at breaker_note
+                template = template_of(el)
+                if template is None:
+                    if allowed(mod, el.lineno, (RULE, "opaque-source")):
+                        continue
+                    findings.append(Finding(
+                        RULE, "opaque-source", mod.path, el.lineno,
+                        f"value appended to `{kind}` is neither a string "
+                        f"literal/f-string nor a recognized propagation "
+                        f"(cost.breaker_note / *.{kind})"))
+                    continue
+                why = parse_degraded(template) if kind == "degraded" \
+                    else parse_repaired(template)
+                if why is None:
+                    continue
+                if allowed(mod, el.lineno, (RULE, "bad-grammar")):
+                    continue
+                shown = template.replace(WILD, "{…}")
+                findings.append(Finding(
+                    RULE, "bad-grammar", mod.path, el.lineno,
+                    f"{kind} entry {shown!r} violates the provenance "
+                    f"grammar: {why}"))
+        # the one sanctioned dynamic producer: cost.breaker_note's return
+        # template must itself parse as a breaker note
+        if mod.name.endswith("core.cost"):
+            findings.extend(_check_breaker_note_def(mod))
+    return findings
+
+
+def _check_breaker_note_def(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef) \
+                and node.name == "breaker_note":
+            for ret in ast.walk(node):
+                if not isinstance(ret, ast.Return) or ret.value is None:
+                    continue
+                template = template_of(ret.value)
+                if template is None:
+                    continue
+                if not template.startswith("breaker("):
+                    out.append(Finding(
+                        RULE, "bad-grammar", mod.path, ret.lineno,
+                        "breaker_note must return a 'breaker(<rung>) "
+                        "<state>: <why>' template"))
+    return out

@@ -1,0 +1,88 @@
+"""compile-purity: ``Database.compile`` must stay side-effect-free.
+
+PR 8's contract — the serving layer compiles on the scheduler thread and
+caches plans, so planning twice must consume no breaker cool-down ticks,
+write no calibration feedback, feed no health EWMAs, and obviously run no
+DML or WAL appends.  ``tests/test_serving.py`` pins this at runtime for
+the interleavings it happens to produce; this pass pins it for every
+path: a BFS over the resolved call graph from ``Database.compile`` must
+reach none of the declared mutating sinks.
+
+``HealthRegistry.consult`` / ``Breaker.consult`` are *not* sinks even
+though ``consult(advance=True)`` mutates: the compile path calls them
+with ``advance=False`` (reported, runtime-tested by
+``test_compile_consumes_no_breaker_cooldown_ticks``), and whether an
+argument is a literal ``False`` is exactly the kind of data-flow this
+syntactic pass cannot decide.  The split is deliberate: structure here,
+value-sensitivity in the runtime suite.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .common import (CallIndex, Finding, Module, NodeKey, allowed, fmt_node)
+
+RULE = "compile-purity"
+
+ROOT: NodeKey = ("cls", "Database", "compile")
+
+#: (node, why it is a mutation) — reachability from ROOT to any of these
+#: is a finding.
+SINKS: Dict[NodeKey, str] = {
+    ("fun", "cost", "observe_scan"): "calibration feedback write",
+    ("cls", "TableCalibration", "observe"): "calibration feedback write",
+    ("cls", "HealthRegistry", "observe"): "health EWMA / breaker feed",
+    ("cls", "HealthRegistry", "note"): "health note append",
+    ("cls", "Breaker", "record_failure"): "breaker transition",
+    ("cls", "Breaker", "record_success"): "breaker transition",
+    ("cls", "LSMStore", "insert"): "DML",
+    ("cls", "LSMStore", "update"): "DML",
+    ("cls", "LSMStore", "delete"): "DML",
+    ("cls", "LSMStore", "bulk_insert"): "DML",
+    ("cls", "LSMStore", "bulk_insert_rows"): "DML",
+    ("cls", "LSMStore", "major_compact"): "baseline swap",
+    ("cls", "LSMStore", "minor_compact"): "minor compaction",
+    ("cls", "LSMStore", "_log"): "WAL append",
+    ("cls", "WriteAheadLog", "append"): "WAL append",
+    ("cls", "WriteAheadLog", "flush"): "WAL flush",
+    ("cls", "WriteAheadLog", "compact"): "WAL rewrite",
+    ("cls", "MaterializedAggView", "full_refresh"): "MAV rebuild",
+    ("cls", "MaterializedAggView", "incremental_refresh"): "MAV refresh",
+    ("cls", "MaterializedAggView", "refresh"): "MAV refresh",
+    ("cls", "MaterializedJoinView", "full_refresh"): "MJV rebuild",
+    ("cls", "MaterializedJoinView", "incremental_refresh"): "MJV refresh",
+    ("cls", "MLog", "record"): "mutation-log append",
+    ("cls", "MLog", "purge_upto"): "mutation-log purge",
+    ("cls", "ColumnReplicas", "repair"): "in-place block repair",
+    ("cls", "StoreReplicas", "scrub"): "replica scrub",
+    ("fun", "replica", "enable_replication"): "replica attach",
+    ("cls", "Database", "commit"): "feedback commit",
+    ("cls", "Database", "snapshot"): "snapshot write",
+    ("fun", "recovery", "snapshot"): "snapshot write",
+}
+
+
+def check_compile_purity(modules: Sequence[Module],
+                         index: Optional[CallIndex] = None,
+                         root: NodeKey = ROOT,
+                         sinks: Optional[Dict[NodeKey, str]] = None
+                         ) -> List[Finding]:
+    index = index or CallIndex(modules)
+    sinks = SINKS if sinks is None else sinks
+    seen = index.reachable(root)
+    findings: List[Finding] = []
+    for key in sorted(seen, key=fmt_node):
+        if key not in sinks or key == root:
+            continue
+        pred, line = seen[key]
+        assert pred is not None
+        mod = index.funcs[pred].mod
+        if allowed(mod, line, (RULE, "impure-reach")):
+            continue
+        chain = " -> ".join(fmt_node(k)
+                            for k in CallIndex.path_to(seen, key))
+        findings.append(Finding(
+            RULE, "impure-reach", mod.path, line,
+            f"{fmt_node(root)} reaches mutating API {fmt_node(key)} "
+            f"({sinks[key]}) via {chain}"))
+    return findings

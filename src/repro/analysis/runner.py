@@ -1,0 +1,43 @@
+"""Rule registry + one-call entry point for the invariant lint suite."""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .common import CallIndex, Finding, Module, load_package
+from .locks import check_lock_discipline, check_lock_order
+from .provenance import check_provenance
+from .purity import check_compile_purity
+from .taxonomy import check_error_taxonomy
+
+RULES = ("lock-discipline", "lock-order", "compile-purity",
+         "error-taxonomy", "provenance-grammar")
+
+
+def run(rules: Optional[Sequence[str]] = None,
+        modules: Optional[Sequence[Module]] = None,
+        src_root: Optional[str] = None) -> List[Finding]:
+    """Run the selected rules (default: all) over ``modules`` (default:
+    the on-disk ``repro`` package) and return the surviving findings,
+    sorted by location."""
+    selected = list(rules) if rules else list(RULES)
+    unknown = [r for r in selected if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule(s) {unknown}; choose from {RULES}")
+    mods = list(modules) if modules is not None else load_package(src_root)
+    index: Optional[CallIndex] = None
+    if any(r in selected for r in ("lock-order", "compile-purity",
+                                   "error-taxonomy")):
+        index = CallIndex(mods)
+
+    dispatch: Dict[str, Callable[[], List[Finding]]] = {
+        "lock-discipline": lambda: check_lock_discipline(mods),
+        "lock-order": lambda: check_lock_order(mods, index),
+        "compile-purity": lambda: check_compile_purity(mods, index),
+        "error-taxonomy": lambda: check_error_taxonomy(mods, index),
+        "provenance-grammar": lambda: check_provenance(mods),
+    }
+    findings: List[Finding] = []
+    for rule in selected:
+        findings.extend(dispatch[rule]())
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.code))
+    return findings

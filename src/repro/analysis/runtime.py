@@ -1,0 +1,161 @@
+"""Runtime lock-order recorder: the dynamic half of the ``lock-order``
+rule.
+
+The static pass proves the *resolvable* acquisition graph acyclic; this
+module observes the *actual* one.  :class:`RecordingLock` is a proxy that
+delegates ``acquire``/``release`` to the real lock object it wraps (the
+same object — so a ``threading.Condition`` built on the original lock
+stays coherent after instrumentation) while logging, per thread, which
+labelled locks were already held at each acquisition.  The union of those
+(held, acquired) pairs is the observed graph;
+``tests/test_analysis.py`` runs the 8-thread serving hammer with every
+core lock instrumented and feeds the observed edges to the same
+``find_cycle`` the static checker uses.
+
+Reentrant re-acquisition of an RLock is *not* an edge (a lock cannot
+deadlock against itself by design), and edges are deduplicated so the
+recorder stays cheap enough to leave enabled for a whole hammer run.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from .common import find_cycle
+
+Edge = Tuple[str, str]
+
+
+class LockOrderRecorder:
+    """Collects (held, acquired) label pairs across all threads."""
+
+    def __init__(self) -> None:
+        self._tls = threading.local()
+        self._mu = threading.Lock()
+        self.edges: Set[Edge] = set()
+
+    def _held(self) -> List[str]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def on_acquired(self, label: str) -> None:
+        held = self._held()
+        new = [(h, label) for h in held
+               if h != label and (h, label) not in self.edges]
+        if new:
+            with self._mu:
+                self.edges.update(new)
+        held.append(label)
+
+    def on_released(self, label: str) -> None:
+        held = self._held()
+        # remove the most recent occurrence (reentrant locks release LIFO)
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == label:
+                del held[i]
+                break
+
+    def cycle(self) -> Optional[List[str]]:
+        with self._mu:
+            return find_cycle(set(self.edges))
+
+
+class RecordingLock:
+    """Transparent acquire/release-recording proxy around a real lock.
+
+    Everything except ``acquire``/``release``/context management is
+    delegated via ``__getattr__``, and the *inner* lock object is shared
+    with any pre-existing aliases — replacing ``obj._lock`` with
+    ``RecordingLock(obj._lock, ...)`` changes observation, not
+    synchronization.
+    """
+
+    def __init__(self, inner: Any, label: str,
+                 recorder: LockOrderRecorder) -> None:
+        self._inner = inner
+        self._label = label
+        self._recorder = recorder
+
+    def acquire(self, *args: Any, **kwargs: Any) -> bool:
+        got = self._inner.acquire(*args, **kwargs)
+        if got:
+            self._recorder.on_acquired(self._label)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._recorder.on_released(self._label)
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._inner, name)
+
+    def __repr__(self) -> str:
+        return f"RecordingLock({self._label!r}, {self._inner!r})"
+
+
+def instrument(obj: Any, attr: str, label: str,
+               recorder: LockOrderRecorder,
+               condition_attr: Optional[str] = None) -> None:
+    """Swap ``obj.<attr>`` for a recording proxy in place.
+
+    ``condition_attr`` names a ``threading.Condition`` built on the same
+    lock (the ``QueryServer._mu``/``_cv`` pattern): it is rebuilt on the
+    proxy so waits/notifications keep working *and* record.  Objects may
+    be dataclasses or plain classes — the attribute is replaced through
+    ``object.__setattr__`` so frozen-ish containers work too.
+    """
+    inner = getattr(obj, attr)
+    if isinstance(inner, RecordingLock):
+        return
+    proxy = RecordingLock(inner, label, recorder)
+    object.__setattr__(obj, attr, proxy)
+    if condition_attr is not None:
+        object.__setattr__(obj, condition_attr,
+                           threading.Condition(proxy))
+
+
+def instrument_database(db: Any, recorder: LockOrderRecorder,
+                        server: Any = None) -> None:
+    """Instrument every core lock reachable from a ``Database`` (and
+    optionally its ``QueryServer``): store locks, per-column SSTable
+    verify locks, replica locks, calibration, health registry, WAL, and
+    per-MAV read locks."""
+    from repro.core import cost, replica
+
+    for name in db.tables:
+        h = db.table(name)
+        store = h.store
+        instrument(store, "_lock", f"LSMStore._lock[{name}]", recorder)
+        if store.wal is not None:
+            instrument(store.wal, "_lock",
+                       f"WriteAheadLog._lock[{name}]", recorder)
+        for cname, cst in store.baseline.cols.items():
+            instrument(cst, "_vlock",
+                       f"ColumnSSTable._vlock[{name}.{cname}]", recorder)
+        sr = replica.replica_set(store)
+        if sr is not None:
+            for cname, cr in sr.columns.items():
+                instrument(cr, "_lock",
+                           f"ColumnReplicas._lock[{name}.{cname}]",
+                           recorder)
+        cal = cost.calibration(store)
+        instrument(cal, "_lock", f"TableCalibration._lock[{name}]",
+                   recorder)
+        for mname, mav in h.mavs.items():
+            lock = mav.__dict__.setdefault("_read_lock", threading.Lock())
+            if not isinstance(lock, RecordingLock):
+                mav.__dict__["_read_lock"] = RecordingLock(
+                    lock, f"MAV._read_lock[{mname}]", recorder)
+    if db.health is not None:
+        instrument(db.health, "_lock", "HealthRegistry._lock", recorder)
+    if server is not None:
+        instrument(server, "_mu", "QueryServer._mu", recorder,
+                   condition_attr="_cv")

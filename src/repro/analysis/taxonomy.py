@@ -1,0 +1,128 @@
+"""error-taxonomy: failure paths carry typed errors, not blanket catches.
+
+Two sub-codes:
+
+``broad-except``
+    ``except Exception`` / ``except BaseException`` / bare ``except`` in
+    ``repro.core`` without an allowlist marker.  Broad catches are
+    sometimes the design (the degradation ladder deliberately converts
+    *any* route failure into a provenance-stamped fallback; recovery
+    wraps *any* decode failure into a typed ``RecoveryError``) — those
+    sites carry ``# lint: allow(broad-except) — <why>`` so every blanket
+    catch in core is a reviewed decision, never an accident.
+
+``untyped-raise``
+    ``raise RuntimeError`` anywhere in core (a typed
+    :class:`~repro.core.errors.QueryError` subclass exists for every
+    runtime failure the system produces), and ``raise ValueError`` /
+    ``raise KeyError`` in functions reachable from ``Database.execute``
+    but *not* from ``Database.compile``: plan-time validation of caller
+    input may raise builtins (programmer error surfaces at compile), but
+    an execute-path raise crosses the serving layer's retry/breaker
+    machinery, which classifies only ``QueryError``.  Constructors are
+    exempt (argument validation).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set, Tuple
+
+from .common import (CallIndex, Finding, Module, NodeKey, allowed, fmt_node)
+
+RULE = "error-taxonomy"
+
+BROAD = {"Exception", "BaseException"}
+UNTYPED_EXECUTE = {"ValueError", "KeyError"}
+
+EXEC_ROOTS: Tuple[NodeKey, ...] = (("cls", "Database", "execute"),)
+COMPILE_ROOTS: Tuple[NodeKey, ...] = (("cls", "Database", "compile"),
+                                      ("cls", "Database", "query"))
+
+
+def _exc_names(handler: ast.ExceptHandler) -> List[str]:
+    t = handler.type
+    if t is None:
+        return ["<bare>"]
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    names = []
+    for e in elts:
+        if isinstance(e, ast.Name):
+            names.append(e.id)
+        elif isinstance(e, ast.Attribute):
+            names.append(e.attr)
+    return names
+
+
+def _raised_name(node: ast.Raise) -> Optional[str]:
+    exc = node.exc
+    if isinstance(exc, ast.Call):
+        exc = exc.func
+    if isinstance(exc, ast.Name):
+        return exc.id
+    if isinstance(exc, ast.Attribute):
+        return exc.attr
+    return None
+
+
+def check_error_taxonomy(modules: Sequence[Module],
+                         index: Optional[CallIndex] = None
+                         ) -> List[Finding]:
+    index = index or CallIndex(modules)
+    findings: List[Finding] = []
+
+    # ----- broad-except ----------------------------------------------------
+    for mod in modules:
+        if not mod.in_core:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            names = _exc_names(node)
+            if not (set(names) & BROAD) and names != ["<bare>"]:
+                continue
+            if allowed(mod, node.lineno, (RULE, "broad-except")):
+                continue
+            what = "bare except" if names == ["<bare>"] \
+                else f"except {'/'.join(n for n in names if n in BROAD)}"
+            findings.append(Finding(
+                RULE, "broad-except", mod.path, node.lineno,
+                f"{what} in core without an allowlist marker: narrow to "
+                f"the typed errors this site expects, or add "
+                f"`# lint: allow(broad-except) — <why>`"))
+
+    # ----- untyped-raise ---------------------------------------------------
+    exec_reach = index.reachable(*EXEC_ROOTS)
+    compile_reach: Set[NodeKey] = set(index.reachable(*COMPILE_ROOTS))
+    execute_only = set(exec_reach) - compile_reach
+
+    for key, finfo in index.funcs.items():
+        mod = finfo.mod
+        if not mod.in_core:
+            continue
+        fname = key[2]
+        if fname in ("__init__", "__post_init__"):
+            continue
+        on_execute_path = key in execute_only
+        for node in ast.walk(finfo.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not finfo.node:
+                continue
+            if not isinstance(node, ast.Raise):
+                continue
+            name = _raised_name(node)
+            if name is None:
+                continue
+            flag = name == "RuntimeError" \
+                or (on_execute_path and name in UNTYPED_EXECUTE)
+            if not flag:
+                continue
+            if allowed(mod, node.lineno, (RULE, "untyped-raise")):
+                continue
+            where = f"on the execute path ({fmt_node(key)})" \
+                if name != "RuntimeError" else "in core"
+            findings.append(Finding(
+                RULE, "untyped-raise", mod.path, node.lineno,
+                f"raise {name} {where}: use a typed QueryError subclass "
+                f"from core/errors.py (or mark with "
+                f"`# lint: allow(untyped-raise) — <why>`)"))
+    return findings

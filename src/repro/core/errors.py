@@ -15,6 +15,8 @@ wrong:
 * :class:`RouteExhausted`    — every degradation step failed in turn
 * :class:`MLogPurged`        — an MV delta window was purged (recoverable
   by full refresh; kept a ``RuntimeError`` subclass for back-compat)
+* :class:`ServerClosed`      — a submit (or a still-queued ticket) hit a
+  closed ``QueryServer`` (kept a ``RuntimeError`` subclass likewise)
 * :class:`RecoveryError`     — crash recovery cannot restore a provably
   consistent store (corrupt WAL record, restored-block CRC mismatch,
   replay divergence) — committed-prefix or typed failure, never silence
@@ -130,6 +132,14 @@ class MLogPurged(QueryError, RuntimeError):
             f"below ts={purged_below} were purged — full refresh required")
         self.ts_exclusive = ts_exclusive
         self.purged_below = purged_below
+
+
+class ServerClosed(QueryError, RuntimeError):
+    """The :class:`~repro.core.serving.QueryServer` is shut down: a submit
+    after ``close()`` is rejected with this, and tickets still queued at
+    close time resolve with it instead of an answer.  Kept a
+    ``RuntimeError`` subclass: callers (and tests) written against the
+    pre-taxonomy contract catch ``RuntimeError`` on this path."""
 
 
 class RecoveryError(QueryError):

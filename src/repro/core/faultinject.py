@@ -142,6 +142,9 @@ class FaultPlan:
             time.sleep(d)
         if attempt < self.fail_shard.get(shard_id, 0):
             self._record(f"fail shard {shard_id} attempt {attempt}")
+            # lint: allow(untyped-raise) — deliberately untyped: the fault
+            # model simulates infrastructure failures that arrive as raw
+            # exceptions, exercising the broad-catch retry boundaries
             raise RuntimeError(
                 f"injected fault: shard {shard_id} attempt {attempt}")
 
@@ -208,12 +211,17 @@ class FaultPlan:
 
     def on_mav_read(self, mav) -> None:
         """Mid-query purge: fires once, right before the MAV realtime read
-        merges the pending tail (i.e. after planning chose the mav route)."""
-        if self.purge_mlog_before_read and not self._purged \
-                and mav.mlog is not None:
+        merges the pending tail (i.e. after planning chose the mav route).
+        The fire-once latch is claimed under the plan lock so concurrent
+        MAV reads cannot both purge."""
+        if not self.purge_mlog_before_read or mav.mlog is None:
+            return
+        with self._lock:
+            if self._purged:
+                return
             self._purged = True
-            n = mav.mlog.purge_upto(mav.base.current_ts)
-            self._record(f"purged mlog mid-query ({n} entries)")
+        n = mav.mlog.purge_upto(mav.base.current_ts)
+        self._record(f"purged mlog mid-query ({n} entries)")
 
 
 def corrupt_block(store, column: str, block: int = 0) -> str:

@@ -197,10 +197,13 @@ class ColumnSSTable:
             self._verified[b] = True
 
     def mark_unverified(self, b: int) -> None:
-        """Drop block ``b``'s memoized verification (fault injection: a
-        just-corrupted block must be re-checked on its next read)."""
-        if self._verified is not None:
-            self._verified[b] = False
+        """Drop block ``b``'s memoized verification (fault injection and
+        the scrub pass: a just-corrupted block must be re-checked on its
+        next read).  Takes ``_vlock`` so the write cannot interleave with
+        ``verify_block``'s double-checked slow path."""
+        with self._vlock:
+            if self._verified is not None:
+                self._verified[b] = False
 
     def decode_block(self, b: int) -> np.ndarray:
         self.verify_block(b)
@@ -445,10 +448,13 @@ class LSMStore:
 
     def _log(self, kind: str, **data: Any) -> None:
         """Append one WAL record stamped with the post-mutation epoch.
-        Called at each mutation's commit point, under ``self._lock``
-        (recovery detaches ``wal`` while replaying, so replays never
-        re-log themselves)."""
+        Called at each mutation's commit point — usually under
+        ``self._lock``, but registration markers (create_table/mav/mjv,
+        mlog purge) log without it (recovery detaches ``wal`` while
+        replaying, so replays never re-log themselves)."""
         if self.wal is not None:
+            # lint: allow(lock-discipline) — WriteAheadLog.append takes
+            # its own lock; the epoch ints read here are GIL-atomic
             self.wal.append(kind, self._ts, self._baseline_gen, data)
 
     @property
@@ -471,7 +477,7 @@ class LSMStore:
 
     # --- write path ---------------------------------------------------------
 
-    def _next_ts(self) -> int:
+    def _next_ts_locked(self) -> int:
         self._ts += 1
         return self._ts
 
@@ -489,22 +495,22 @@ class LSMStore:
     def insert(self, row: Dict[str, Any]) -> int:
         with self._lock:
             pk = row[self.schema.pk]
-            ts = self._next_ts()
+            ts = self._next_ts_locked()
             if self._old_row(pk, ts) is not None:
                 raise KeyError(f"duplicate pk {pk}")
-            self._write(ts, DmlType.INSERT, pk, dict(row), old=None)
+            self._write_locked(ts, DmlType.INSERT, pk, dict(row), old=None)
             return ts
 
     def update(self, pk: Any, changes: Dict[str, Any]) -> int:
         with self._lock:
-            ts = self._next_ts()
+            ts = self._next_ts_locked()
             old = self._old_row(pk, ts)
             if old is None:
                 raise KeyError(f"update of missing pk {pk}")
             new = dict(old)
             new.update(changes)
             new[self.schema.pk] = changes.get(self.schema.pk, pk)
-            self._write(ts, DmlType.UPDATE, pk, new, old=old)
+            self._write_locked(ts, DmlType.UPDATE, pk, new, old=old)
             if new[self.schema.pk] != pk:  # pk change = delete+insert
                 self.memtable.apply(ts, DmlType.DELETE, None, pk)
                 self.memtable.apply(ts, DmlType.INSERT, new,
@@ -513,15 +519,16 @@ class LSMStore:
 
     def delete(self, pk: Any) -> int:
         with self._lock:
-            ts = self._next_ts()
+            ts = self._next_ts_locked()
             old = self._old_row(pk, ts)
             if old is None:
                 raise KeyError(f"delete of missing pk {pk}")
-            self._write(ts, DmlType.DELETE, pk, None, old=old)
+            self._write_locked(ts, DmlType.DELETE, pk, None, old=old)
             return ts
 
-    def _write(self, ts: int, op: DmlType, pk: Any, row: Optional[Dict[str, Any]],
-               old: Optional[Dict[str, Any]]):
+    def _write_locked(self, ts: int, op: DmlType, pk: Any,
+                      row: Optional[Dict[str, Any]],
+                      old: Optional[Dict[str, Any]]):
         if self.wal is not None:
             # write-ahead: the statement is durable before it is applied
             # (UPDATE logs the full post-image, so replaying
@@ -560,7 +567,7 @@ class LSMStore:
                     vals = vals.astype(np.bytes_)
                 cols[spec.name] = Column(spec, vals)
             tbl = Table(self.schema, cols)
-            ts = self._next_ts()
+            ts = self._next_ts_locked()
             self.baseline = VirtualSSTable.build(self.schema, tbl, ts,
                                                  self.block_rows)
             self._baseline_gen += 1
@@ -577,7 +584,7 @@ class LSMStore:
             names = list(columns.keys())
             arrays = [np.asarray(columns[n]) for n in names]
             n = len(arrays[0])
-            ts = self._next_ts()
+            ts = self._next_ts_locked()
             rows: Dict[Any, List[Version]] = {}
             pk_i = names.index(self.schema.pk)
             for r in range(n):

@@ -568,6 +568,8 @@ class ShardedScanExecutor:
                                             coalesce, deadline)
         except (QueryTimeout, BlockCorruption):
             raise                   # deterministic: retrying cannot help
+        # lint: allow(broad-except) — degradation-ladder rung: any
+        # remaining failure kind funnels into the single-shard fallback
         except Exception as e:
             # Last rung of the degradation ladder: a shard failed even
             # after retries (or the merge itself blew up), so fall back to
@@ -594,6 +596,8 @@ class ShardedScanExecutor:
             return self.engine.execute(tbl, q)
         except (QueryTimeout, BlockCorruption):
             raise
+        # lint: allow(broad-except) — ladder floor: whatever failed is
+        # wrapped into typed RouteExhausted with the provenance trail
         except Exception as e:
             raise RouteExhausted(stats.degraded, e) from cause
 
@@ -642,6 +646,9 @@ class ShardedScanExecutor:
                     return run(shard, attempt)
                 except (QueryTimeout, BlockCorruption):
                     raise           # deterministic: a retry cannot help
+                # lint: allow(broad-except) — per-shard retry boundary:
+                # transient faults arrive untyped; exhausted retries
+                # re-raise as typed ShardFailure
                 except Exception as e:
                     last = e
                     if attempt + 1 >= attempts:
@@ -919,6 +926,8 @@ class ShardedScanExecutor:
                     break
                 except (QueryTimeout, BlockCorruption):
                     raise
+                # lint: allow(broad-except) — device-launch rung: a
+                # failed collective retries in-route, then drops a rung
                 except Exception as e:
                     if rattempt == 0:
                         stats.kernel_retries += 1
@@ -958,6 +967,8 @@ class ShardedScanExecutor:
                 out = tree_reduce(partials, device_partial_combine) + (None,)
             except (QueryTimeout, BlockCorruption):
                 raise
+            # lint: allow(broad-except) — device-launch rung: any
+            # per-shard launch failure degrades to host pushdown
             except Exception as e:
                 # rung 2: per-shard kernel launches failed too — undo the
                 # device accounting (the host pushdown path re-counts with

@@ -631,6 +631,8 @@ class PushdownExecutor:
                 g_cnt, g_sums, g_mins, g_maxs = launch(block_mask)
         except (QueryTimeout, BlockCorruption):
             raise
+        # lint: allow(broad-except) — device→host degrade point: any
+        # launch failure falls back to the host scan, stamped in stats
         except Exception as e:
             # degrade to the host pushdown scan: undo the device accounting
             # (filter_blocks re-counts with += as it scans)

@@ -374,6 +374,8 @@ def _apply_record(db: Any, table: str, rec: WalRecord,
             _check_epoch(store, table, rec)
     except (RecoveryError, faultinject.SimulatedCrash):
         raise
+    # lint: allow(broad-except) — typed-wrap boundary: any replay
+    # failure becomes RecoveryError (committed-prefix or typed failure)
     except Exception as e:
         raise RecoveryError(
             f"replay of {rec.kind!r} failed: {type(e).__name__}: {e}",
@@ -398,6 +400,8 @@ def _replay_create_mjv(db: Any, data: Dict[str, Any]) -> None:
             ml.purged_below = purged
     except RecoveryError:
         raise
+    # lint: allow(broad-except) — typed-wrap boundary: mjv re-creation
+    # failure becomes RecoveryError, never a half-restored view
     except Exception as e:
         raise RecoveryError(
             f"replay of 'create_mjv' ({data.get('name')!r}) failed: "
@@ -430,6 +434,8 @@ def recover(root: str, group_commit: int = 1, **db_kwargs: Any) -> Any:
                     f"!= supported {SNAPSHOT_FORMAT}")
         except RecoveryError:
             raise
+        # lint: allow(broad-except) — typed-wrap boundary: any snapshot
+        # decode failure becomes RecoveryError
         except Exception as e:
             raise RecoveryError(
                 f"snapshot unreadable: {type(e).__name__}: {e}")
@@ -452,6 +458,8 @@ def recover(root: str, group_commit: int = 1, **db_kwargs: Any) -> Any:
         for name in sorted(snap["tables"]):
             try:
                 img = pickle.loads(snap["tables"][name])
+            # lint: allow(broad-except) — typed-wrap boundary: pickle
+            # raises many kinds; all become RecoveryError
             except Exception as e:
                 raise RecoveryError(
                     f"snapshot image undecodable: {type(e).__name__}: {e}",

@@ -46,6 +46,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from . import cost, replica
 from .engine import Query
+from .errors import ServerClosed
 from .session import CompiledPlan, Database, ResultSet
 
 __all__ = ["TenantQuota", "Ticket", "QueryServer"]
@@ -200,7 +201,7 @@ class QueryServer:
         """Enqueue ``q`` for ``tenant``; returns immediately."""
         with self._cv:
             if self._closed:
-                raise RuntimeError("QueryServer is closed")
+                raise ServerClosed("QueryServer is closed")
             t = Ticket(tenant, next(self._seq))
             t._query, t._table = q, table
             t._hints = dict(engine=engine, n_shards=n_shards,
@@ -218,7 +219,7 @@ class QueryServer:
         """Roll the budget window now: clear tenant spend and re-admit
         every quota-deferred ticket."""
         with self._cv:
-            self._roll_window(force=True)
+            self._roll_window_locked(force=True)
             self._cv.notify_all()
 
     def spend(self, tenant: str) -> float:
@@ -268,7 +269,7 @@ class QueryServer:
             self._batch_waiting.clear()
             self._deferred.clear()
         for t in pending:
-            t._resolve(None, RuntimeError("QueryServer closed"))
+            t._resolve(None, ServerClosed("QueryServer closed"))
         self.db.flush_wal()
 
     def __enter__(self) -> "QueryServer":
@@ -281,7 +282,7 @@ class QueryServer:
     def _rank(self, tenant: str) -> int:
         return _CLASS_RANK[self.quota(tenant).latency_class]
 
-    def _roll_window(self, force: bool = False) -> None:
+    def _roll_window_locked(self, force: bool = False) -> None:
         """Under ``self._mu``.  Reset spend when the window elapsed and
         push quota-deferred tickets back onto the admission heap."""
         now = time.monotonic()
@@ -293,7 +294,7 @@ class QueryServer:
             heapq.heappush(self._heap, (self._rank(t.tenant), t.seq, t))
         self._deferred.clear()
 
-    def _next_ticket(self) -> Optional[Ticket]:
+    def _next_ticket_locked(self) -> Optional[Ticket]:
         """Under ``self._mu``.  Highest-priority runnable ticket.  Batch
         tickets dispatch only into interactive-idle gaps (the paper's
         OLTP-priority rule: analytical work is admitted only when the
@@ -328,8 +329,8 @@ class QueryServer:
                     self._cv.wait(timeout=0.1)
                 if self._closed:
                     return          # queued tickets resolve in close()
-                self._roll_window()
-                ticket = self._next_ticket()
+                self._roll_window_locked()
+                ticket = self._next_ticket_locked()
                 if ticket is None:
                     if self._closed:
                         return
@@ -344,8 +345,12 @@ class QueryServer:
                 continue
             try:
                 self._admit(ticket)
+            # lint: allow(broad-except) — scheduler boundary: *any*
+            # compile-time failure must resolve the ticket (the submitter
+            # is blocked in result()), never kill the scheduler thread
             except BaseException as exc:     # compile-time failure
-                self.metrics["errors"] += 1
+                with self._mu:
+                    self.metrics["errors"] += 1
                 ticket._resolve(None, exc)
                 continue
             admitted_since_scrub += 1
@@ -428,6 +433,9 @@ class QueryServer:
         try:
             result = self.db.execute(cplan, deadline_s=t._deadline_s)
             self.db.commit(result)
+        # lint: allow(broad-except) — worker boundary: the leader and its
+        # coalesced followers must resolve no matter what escaped the
+        # typed layers below; the exception is re-delivered via result()
         except BaseException as e:
             exc = e
         with self._cv:
@@ -469,7 +477,13 @@ class QueryServer:
         """Background integrity pass over every table with a live replica
         set; repair events land in the health registry's notes so
         ``health_report`` surfaces them."""
-        self.metrics["scrubs"] += 1
+        # metrics share self._mu with the worker-side counters: an
+        # unlocked += here raced _work's locked increments (lost updates
+        # under the hammer).  The lock wraps only the counter, never the
+        # scrub/snapshot work below — those take store/replica locks and
+        # must not nest inside self._mu (lock-order).
+        with self._mu:
+            self.metrics["scrubs"] += 1
         for name in self.db.tables:
             h = self.db.table(name)
             sr = replica.replica_set(h.store)
@@ -481,19 +495,28 @@ class QueryServer:
                     self.db.health.note(name, f"scrub({why}): {ev}")
         if why == "idle" and self.snapshot_every_scrubs \
                 and self.db.durable is not None:
-            self._scrubs_since_snapshot += 1
-            if self._scrubs_since_snapshot >= self.snapshot_every_scrubs:
-                self._scrubs_since_snapshot = 0
+            with self._mu:
+                self._scrubs_since_snapshot += 1
+                due = self._scrubs_since_snapshot \
+                    >= self.snapshot_every_scrubs
+                if due:
+                    self._scrubs_since_snapshot = 0
+            if due:
                 try:
                     self.db.snapshot()
-                    self.metrics["snapshots"] += 1
+                    with self._mu:
+                        self.metrics["snapshots"] += 1
                     if self.db.health is not None:
                         for name in self.db.tables:
                             self.db.health.note(
                                 name, "snapshot(idle): checkpointed, "
                                       "wal compacted")
+                # lint: allow(broad-except) — idle-checkpoint boundary on
+                # the scheduler thread: a failed snapshot becomes a health
+                # note + error count, never a dead scheduler
                 except Exception as e:   # noqa: BLE001 — scheduler thread
-                    self.metrics["errors"] += 1
+                    with self._mu:
+                        self.metrics["errors"] += 1
                     if self.db.health is not None:
                         for name in self.db.tables:
                             self.db.health.note(

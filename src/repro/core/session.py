@@ -871,6 +871,9 @@ class Database:
             except QueryTimeout:
                 raise                  # deterministic: re-running can only
                                        # blow the deadline again
+            # lint: allow(broad-except) — compaction-race boundary: any
+            # failure kind can be a symptom of the baseline swapping
+            # mid-scan; re-raised verbatim unless the epoch moved
             except Exception:
                 if store._baseline_gen != gen0 and attempt < 2:
                     continue           # compaction raced the scan: retry
@@ -999,8 +1002,11 @@ class Database:
             # the tail was purged between planning and the realtime read:
             # the MAV answered from a full container rebuild instead
             stats.purge_fallback = True
+            # grammar note: the from-token is the mav itself, not a rung —
+            # "mav(<name>)->full-refresh" can never collide with a
+            # health.rung_outcome "<rung>->" failure prefix
             stats.degraded.append(
-                f"mav({mav.name}) incremental->full-refresh: purge_fallback "
+                f"mav({mav.name})->full-refresh: purge_fallback "
                 f"(mlog tail purged mid-query)")
         return rows, stats
 

@@ -119,6 +119,8 @@ def decode_frame(buf: bytes) -> List[WalRecord]:
                 for kind, seq, ts, gen, data in raw]
     except RecoveryError:
         raise
+    # lint: allow(broad-except) — typed-wrap boundary: decode failures
+    # of any kind are corruption, reported as RecoveryError
     except Exception as e:                 # checksum passed, pickle didn't:
         raise RecoveryError(               # still corruption, still typed
             f"WAL record payload undecodable: {type(e).__name__}: {e}")

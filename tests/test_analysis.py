@@ -1,0 +1,563 @@
+"""The invariant lint suite (``repro.analysis``): every rule must flag a
+seeded known-bad fixture at the exact line, the live repo must come back
+clean, and the runtime lock-order recorder must observe an acyclic
+acquisition graph under a concurrent serving run.
+
+The fixture tests are the suite's own regression net: each encodes one
+violation shape the rule exists to catch, so a refactor of a checker
+that silently stops detecting it fails here rather than in some future
+PR that reintroduces the bug class.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import RULES, load_package, module_from_source, run
+from repro.analysis.common import parse_allow_markers
+from repro.analysis.locks import (check_lock_discipline, check_lock_order,
+                                  lock_order_graph)
+from repro.analysis.provenance import check_provenance
+from repro.analysis.purity import check_compile_purity
+from repro.analysis.runtime import LockOrderRecorder, instrument_database
+from repro.analysis.taxonomy import check_error_taxonomy
+from repro.core.engine import QAgg, Query
+from repro.core.faultinject import corrupt_block
+from repro.core.lsm import LSMStore
+from repro.core.mview import AggSpec, MAVDefinition
+from repro.core.relation import Predicate, PredOp
+from repro.core.serving import QueryServer
+from repro.core.session import Database
+
+from tests.test_pushdown import SCH, make_store
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fixture(name, source):
+    return module_from_source(name, textwrap.dedent(source))
+
+
+def only(findings):
+    assert len(findings) == 1, [str(f) for f in findings]
+    return findings[0]
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_lock_discipline_flags_unlocked_mutation():
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+
+            def bump(self):
+                self.n += 1
+        """)
+    f = only(check_lock_discipline([m]))
+    assert (f.rule, f.code) == ("lock-discipline", "unlocked-mutation")
+    assert f.line == 9 and "self.n" in f.message
+
+
+def test_lock_discipline_accepts_with_lock_and_locked_helper():
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+                self.pending = []
+
+            def bump(self):
+                with self._lock:
+                    self.n += 1
+                    self.pending.append(self.n)
+
+            def _drain_locked(self):
+                self.pending.clear()
+        """)
+    assert check_lock_discipline([m]) == []
+
+
+def test_lock_discipline_flags_container_mutators():
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class Queue:
+            def __init__(self):
+                self._mu = threading.Lock()
+                self.items = []
+
+            def push(self, x):
+                self.items.append(x)
+        """)
+    f = only(check_lock_discipline([m]))
+    assert f.line == 9 and "append" in f.message
+
+
+def test_lock_discipline_marker_suppresses():
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+
+            def bump(self):
+                # lint: allow(lock-discipline) — single writer by design
+                self.n += 1
+        """)
+    assert check_lock_discipline([m]) == []
+
+
+def test_lock_discipline_condition_counts_as_guard():
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._mu = threading.Lock()
+                self._cv = threading.Condition(self._mu)
+                self.v = None
+
+            def put(self, x):
+                with self._cv:
+                    self.v = x
+                    self._cv.notify_all()
+        """)
+    assert check_lock_discipline([m]) == []
+
+
+# ---------------------------------------------------------------------------
+# lock-order
+# ---------------------------------------------------------------------------
+
+CYCLIC = """\
+    import threading
+
+    class LSMStore:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def forward(self, wal):
+            with self._lock:
+                with wal._lock:
+                    pass
+
+    class WriteAheadLog:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def backward(self, store):
+            with self._lock:
+                with store._lock:
+                    pass
+    """
+
+
+def test_lock_order_flags_acquisition_cycle():
+    m = fixture("repro.core.fx", CYCLIC)
+    f = only(check_lock_order([m]))
+    assert (f.rule, f.code) == ("lock-order", "acquisition-cycle")
+    assert "LSMStore._lock" in f.message \
+        and "WriteAheadLog._lock" in f.message
+
+
+def test_lock_order_consistent_nesting_is_clean():
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class LSMStore:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def forward(self, wal):
+                with self._lock:
+                    with wal._lock:
+                        pass
+
+        class WriteAheadLog:
+            def __init__(self):
+                self._lock = threading.Lock()
+        """)
+    assert check_lock_order([m]) == []
+
+
+def test_lock_order_sees_interprocedural_edges():
+    # the outer method never lexically nests: it calls a helper that
+    # takes the second lock, so only the call-closure finds the cycle
+    m = fixture("repro.core.fx", """\
+        import threading
+
+        class LSMStore:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.wal = None
+
+            def forward(self):
+                with self._lock:
+                    self.wal.append(b"x")
+
+        class WriteAheadLog:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def append(self, rec):
+                with self._lock:
+                    pass
+
+            def backward(self, store):
+                with self._lock:
+                    with store._lock:
+                        pass
+        """)
+    f = only(check_lock_order([m]))
+    assert f.code == "acquisition-cycle"
+
+
+# ---------------------------------------------------------------------------
+# compile-purity
+# ---------------------------------------------------------------------------
+
+
+def test_compile_purity_flags_reachable_dml():
+    m = fixture("repro.core.fx", """\
+        class LSMStore:
+            def insert(self, row):
+                pass
+
+        class Database:
+            def compile(self, q, store):
+                return self._plan(q, store)
+
+            def _plan(self, q, store):
+                store.insert({"warm": True})
+                return q
+        """)
+    f = only(check_compile_purity([m]))
+    assert (f.rule, f.code) == ("compile-purity", "impure-reach")
+    assert f.line == 10
+    assert "Database.compile" in f.message and "LSMStore.insert" in f.message
+
+
+def test_compile_purity_pure_fixture_is_clean():
+    m = fixture("repro.core.fx", """\
+        class LSMStore:
+            def insert(self, row):
+                pass
+
+            def stats(self):
+                return 0
+
+        class Database:
+            def compile(self, q, store):
+                return (q, store.stats())
+
+            def execute(self, plan, store):
+                store.insert(plan)
+        """)
+    assert check_compile_purity([m]) == []
+
+
+# ---------------------------------------------------------------------------
+# error-taxonomy
+# ---------------------------------------------------------------------------
+
+
+def test_taxonomy_flags_unmarked_broad_except_in_core():
+    m = fixture("repro.core.fx", """\
+        def load(path):
+            try:
+                return open(path)
+            except Exception:
+                return None
+        """)
+    f = only(check_error_taxonomy([m]))
+    assert (f.rule, f.code) == ("error-taxonomy", "broad-except")
+    assert f.line == 4
+
+
+def test_taxonomy_broad_except_marker_suppresses():
+    m = fixture("repro.core.fx", """\
+        def load(path):
+            try:
+                return open(path)
+            # lint: allow(broad-except) — best-effort preload
+            except Exception:
+                return None
+        """)
+    assert check_error_taxonomy([m]) == []
+
+
+def test_taxonomy_broad_except_outside_core_is_fine():
+    m = fixture("repro.bench.fx", """\
+        def load(path):
+            try:
+                return open(path)
+            except Exception:
+                return None
+        """)
+    assert check_error_taxonomy([m]) == []
+
+
+def test_taxonomy_flags_runtime_error_in_core():
+    m = fixture("repro.core.fx", """\
+        def helper():
+            raise RuntimeError("boom")
+        """)
+    f = only(check_error_taxonomy([m]))
+    assert (f.rule, f.code) == ("error-taxonomy", "untyped-raise")
+    assert f.line == 2 and "RuntimeError" in f.message
+
+
+def test_taxonomy_flags_valueerror_on_execute_only_path():
+    # run_shard is reachable from Database.execute but not from
+    # compile/query, so its ValueError crosses the serving layer untyped
+    m = fixture("repro.core.partition", """\
+        class Database:
+            def compile(self, q):
+                return q
+
+            def execute(self, plan):
+                return run_shard(plan)
+
+        def run_shard(plan):
+            raise ValueError("bad shard")
+        """)
+    f = only(check_error_taxonomy([m]))
+    assert f.code == "untyped-raise" and f.line == 9
+
+
+def test_taxonomy_valueerror_on_compile_path_is_fine():
+    # plan-time validation of caller input may raise builtins
+    m = fixture("repro.core.partition", """\
+        class Database:
+            def compile(self, q):
+                return validate(q)
+
+            def execute(self, plan):
+                return validate(plan)
+
+        def validate(q):
+            if q is None:
+                raise ValueError("bad query")
+            return q
+        """)
+    assert check_error_taxonomy([m]) == []
+
+
+# ---------------------------------------------------------------------------
+# provenance-grammar
+# ---------------------------------------------------------------------------
+
+
+def test_provenance_flags_transition_without_why():
+    m = fixture("repro.core.fx", """\
+        def scan(stats):
+            stats.degraded.append("device->host fallback")
+        """)
+    f = only(check_provenance([m]))
+    assert (f.rule, f.code) == ("provenance-grammar", "bad-grammar")
+    assert f.line == 2
+
+
+def test_provenance_flags_dynamic_from_token():
+    # a wildcard in the from-token would make health.rung_outcome's
+    # failure inference ("<rung>->") data-dependent
+    m = fixture("repro.core.fx", """\
+        def scan(stats, rung):
+            stats.degraded.append(f"{rung}->host: kernel died")
+        """)
+    f = only(check_provenance([m]))
+    assert f.code == "bad-grammar" and "'from' token" in f.message
+
+
+def test_provenance_accepts_documented_grammar():
+    m = fixture("repro.core.fx", """\
+        def scan(stats, why, blk):
+            stats.degraded.append("device->host: kernel launch failed")
+            stats.degraded.append(f"sharded[{blk}]->vectorized: {why}")
+            stats.degraded.append("breaker(device) open: cooling down")
+            stats.degraded.append(f"quarantine: block {blk} excluded")
+            stats.repaired.append(f"repaired v/{blk} from replica 1")
+            stats.repaired.append("scrub: 2 blocks re-verified")
+
+        def merge(stats, sub, mark):
+            stats.degraded.extend(sub.degraded)
+            stats.repaired.extend(sub.events[mark:])
+        """)
+    assert check_provenance([m]) == []
+
+
+def test_provenance_flags_bad_repair_event():
+    m = fixture("repro.core.fx", """\
+        def fix(stats, blk):
+            stats.repaired.append(f"fixed block {blk}")
+        """)
+    f = only(check_provenance([m]))
+    assert f.code == "bad-grammar" and "repaired" in f.message
+
+
+def test_provenance_flags_opaque_source():
+    m = fixture("repro.core.fx", """\
+        def scan(stats, note):
+            stats.degraded.append(note)
+        """)
+    f = only(check_provenance([m]))
+    assert f.code == "opaque-source"
+
+
+def test_provenance_resolves_local_literal():
+    m = fixture("repro.core.fx", """\
+        def scan(stats):
+            msg = "device->host fallback"
+            stats.degraded.append(msg)
+        """)
+    f = only(check_provenance([m]))
+    assert f.code == "bad-grammar"
+
+
+# ---------------------------------------------------------------------------
+# allowlist markers
+# ---------------------------------------------------------------------------
+
+
+def test_marker_block_covers_following_statement():
+    src = textwrap.dedent("""\
+        x = 1
+        # lint: allow(broad-except) — a justification that
+        # runs over several comment lines before
+        # the statement it annotates
+        y = 2
+        z = 3  # lint: allow(lock-order) — trailing form
+        """)
+    allow = parse_allow_markers(src)
+    assert "broad-except" in allow[2]       # the marker line itself
+    assert "broad-except" in allow[5]       # first code line after block
+    assert "lock-order" in allow[6]         # trailing marker: own line
+    assert 7 not in allow
+
+
+# ---------------------------------------------------------------------------
+# the live repo
+# ---------------------------------------------------------------------------
+
+
+def test_live_repo_is_clean():
+    assert run() == []
+
+
+def test_live_lock_order_graph_sees_known_nesting():
+    mods = load_package()
+    edges = {(a, b) for a, b, _, _ in lock_order_graph(mods)}
+    # DML under the store lock appends to the WAL (which self-locks)
+    assert (("LSMStore", "_lock"), ("WriteAheadLog", "_lock")) in edges
+    # the executor's mav-then-store read order (recovery matches it)
+    assert (("MaterializedAggView", "_read_lock"),
+            ("LSMStore", "_lock")) in edges
+
+
+def test_lint_cli_exits_zero_on_repo():
+    out = subprocess.run(
+        [sys.executable, os.path.join("scripts", "lint.py"), "--json"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert out.stdout.strip().startswith("[")
+
+
+# ---------------------------------------------------------------------------
+# runtime lock-order recorder (the dynamic cross-check)
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_observes_acyclic_order_under_concurrent_serving():
+    rng = np.random.default_rng(33)
+    store = LSMStore(SCH, block_rows=32, memtable_limit=64, replication=2)
+    for i in range(256):
+        store.insert({"k": i, "g": int(rng.integers(0, 6)),
+                      "d": int(rng.integers(0, 365)),
+                      "v": float(rng.normal()), "s": "beta"})
+    store.major_compact()
+    db = Database(store, max_workers=2)
+    db.create_mav("mv_g", MAVDefinition(
+        group_by=("g",), aggs=(AggSpec("sum", "v", "sv"),)))
+    rec = LockOrderRecorder()
+    qs = [Query(group_by=("g",), aggs=(QAgg("sum", "v", "sv"),)),
+          Query(preds=(Predicate("d", PredOp.BETWEEN, 20, 300),),
+                group_by=("g",),
+                aggs=(QAgg("count", None, "n"), QAgg("sum", "v", "sv"))),
+          Query(aggs=(QAgg("count", None, "n"),))]
+    with QueryServer(db, workers=3) as srv:
+        instrument_database(db, rec, server=srv)
+        corrupt_block(store, "v", block=1)   # exercises verify → repair
+        tickets = []
+        for i in range(18):
+            tickets.append(srv.submit(qs[i % len(qs)]))
+            if i % 5 == 4:
+                store.insert({"k": 90_000 + i, "g": i % 6, "d": i % 365,
+                              "v": 1.0, "s": "beta"})
+        for t in tickets:
+            try:
+                t.result(timeout=60)
+            except Exception:           # noqa: BLE001 - order is the test
+                pass
+    assert rec.edges                     # the run actually observed locks
+    assert rec.cycle() is None, rec.cycle()
+
+
+# ---------------------------------------------------------------------------
+# serving metrics stay exact under concurrent submit/fail (the
+# lock-discipline holes this PR closed were these counters)
+# ---------------------------------------------------------------------------
+
+
+def test_server_metrics_exact_under_concurrent_mixed_errors():
+    db = Database(make_store(np.random.default_rng(34)), max_workers=4)
+    bad = Query(preds=(Predicate("nope", PredOp.EQ, 1),))
+    good = [Query(group_by=("g",), aggs=(QAgg("count", None, "n"),)),
+            Query(preds=(Predicate("d", PredOp.LT, 120),),
+                  group_by=("g",), aggs=(QAgg("sum", "v", "sv"),))]
+    n_threads, per_thread = 8, 6
+    with QueryServer(db, workers=3) as srv:
+        tickets, mu = [], threading.Lock()
+
+        def submit(tid):
+            for j in range(per_thread):
+                q = bad if (tid + j) % 3 == 0 else good[j % len(good)]
+                t = srv.submit(q)
+                with mu:
+                    tickets.append(t)
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=30)
+        failures = 0
+        for t in tickets:
+            try:
+                t.result(timeout=60)
+            except KeyError:
+                failures += 1
+        m = dict(srv.metrics)
+    total = n_threads * per_thread
+    assert m["submitted"] == total
+    # every ticket resolves exactly once: compile failures count in
+    # errors, every answered ticket (executed, cached, coalesced) in
+    # completed — a dropped increment under the old unlocked counters
+    # breaks the exact accounting
+    assert m["errors"] == failures > 0
+    assert m["completed"] == total - failures
